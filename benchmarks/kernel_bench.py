@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks: Pallas (interpret) correctness-scale timings vs
+the jnp reference path.  On CPU interpret mode the ABSOLUTE numbers are
+meaningless for TPU; the benchmark exists to (a) exercise every kernel at
+benchmark shapes, (b) report the jnp reference cost that the dry-run
+roofline uses as its memory-bound baseline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, reps=5):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_segment_min():
+    from repro.kernels.segment_min_edges.ref import segment_min_edges_ref
+    key = jax.random.key(0)
+    v, e = 100_000, 600_000
+    keys = jax.random.permutation(key, e).astype(jnp.int32)
+    cu = jax.random.randint(key, (e,), 0, v, jnp.int32)
+    cv = jax.random.randint(jax.random.key(1), (e,), 0, v, jnp.int32)
+    ref = jax.jit(lambda a, b, c: segment_min_edges_ref(a, b, c, v))
+    t = _time(lambda: ref(keys, cu, cv).block_until_ready())
+    return [("kernel_segment_min_ref_100kx600k", t,
+             f"bytes={(3 * e + v) * 4}")]
+
+
+def bench_fm_interaction():
+    from repro.kernels.fm_interaction.ref import fm_interaction_ref
+    v = jax.random.normal(jax.random.key(0), (65_536, 39, 10))
+    ref = jax.jit(fm_interaction_ref)
+    t = _time(lambda: ref(v).block_until_ready())
+    return [("kernel_fm_interaction_ref_64k", t, f"bytes={v.size * 4}")]
+
+
+def bench_gnn_spmm():
+    from repro.kernels.gnn_spmm.ref import gather_segment_sum_ref
+    key = jax.random.key(0)
+    v, e, d = 100_000, 1_000_000, 64
+    src = jax.random.randint(key, (e,), 0, v, jnp.int32)
+    dst = jax.random.randint(jax.random.key(1), (e,), 0, v, jnp.int32)
+    w = jax.random.normal(jax.random.key(2), (e,))
+    feat = jax.random.normal(jax.random.key(3), (v, d))
+    ref = jax.jit(lambda a, b, c, d: gather_segment_sum_ref(a, b, c, d, v))
+    t = _time(lambda: ref(src, dst, w, feat).block_until_ready())
+    return [("kernel_gnn_spmm_ref_100kx1m", t, f"d={d}")]
+
+
+def all_rows():
+    rows = []
+    rows += bench_segment_min()
+    rows += bench_fm_interaction()
+    rows += bench_gnn_spmm()
+    return rows

@@ -1,0 +1,19 @@
+"""Roofline summary benchmark: reads the dry-run artifacts and emits one
+row per (arch x shape) with the bound term in microseconds - the
+table behind EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import os
+
+
+def all_rows(art_dir: str = "artifacts/dryrun", mesh: str = "pod1"):
+    from repro.roofline.analysis import analyze, load_artifacts
+
+    rows = []
+    for key, rec in load_artifacts(art_dir).items():
+        if rec.get("mesh") != mesh or not rec.get("ok") or rec.get("tag"):
+            continue
+        r = analyze(rec)
+        rows.append((f"roofline_{r.arch}_{r.shape}", r.bound_s * 1e6,
+                     f"bottleneck={r.dominant}"))
+    return rows

@@ -1,0 +1,61 @@
+"""Benchmark runner: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Default scope is the reduced
+graph sweep (10K/100K); pass --full for the paper's 1M-vertex classes and
+--scaling for the multi-device scaling figures (subprocess per worker
+count).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="include the 1M-vertex Table 1 classes")
+    ap.add_argument("--scaling", action="store_true",
+                    help="run fig2/3/4 multi-device scaling (subprocesses)")
+    ap.add_argument("--graph", default="Graph100K_6")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, mst_figures, roofline_bench
+
+    rows = []
+    graphs = list(mst_figures.DEFAULT_GRAPHS)
+    if args.full:
+        graphs += mst_figures.FULL_EXTRA
+    rows += mst_figures.fig1_sequential_optimization(graphs)
+    if args.scaling:
+        rows += mst_figures.fig23_parallel_scaling("lock", args.graph)
+        rows += mst_figures.fig23_parallel_scaling("cas", args.graph)
+        rows += mst_figures.fig4_cas_vs_lock(args.graph)
+    else:
+        # single-process variant comparison (structural metrics + wall time)
+        import time
+        from repro.core.mst import minimum_spanning_forest
+        from repro.graphs.generator import paper_graph
+        g, v = paper_graph(args.graph, seed=0)
+        for variant in ("cas", "lock"):
+            fn = lambda: minimum_spanning_forest(
+                g, num_nodes=v, variant=variant
+            ).total_weight.block_until_ready()
+            fn()
+            t0 = time.perf_counter()
+            fn()
+            us = (time.perf_counter() - t0) * 1e6
+            r = minimum_spanning_forest(g, num_nodes=v, variant=variant)
+            rows.append((f"fig23_{args.graph}_{variant}_1proc", us,
+                         f"rounds={int(r.num_rounds)};"
+                         f"waves={int(r.num_waves)}"))
+    rows += kernel_bench.all_rows()
+    rows += roofline_bench.all_rows()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

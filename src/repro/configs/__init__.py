@@ -1,0 +1,5 @@
+from repro.configs.base import GNNConfig, LMConfig, MoEConfig, RecSysConfig
+from repro.configs.registry import ARCHS, get_arch
+
+__all__ = ["GNNConfig", "LMConfig", "MoEConfig", "RecSysConfig", "ARCHS",
+           "get_arch"]

@@ -1,0 +1,99 @@
+"""Config dataclasses for every architecture family in the zoo."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0       # DeepSeek-style always-on experts
+    d_ff_shared: int = 0              # width of the shared-expert MLP
+    dense_residual: bool = False      # Arctic: dense MLP in parallel with MoE
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+    dispatch: str = "gather"          # "gather" (default: gather-only
+                                      # dataflow, 7-8x less collective
+                                      # traffic - EXPERIMENTS.md §Perf) |
+                                      # "scatter" (paper-faithful baseline;
+                                      # the §Roofline baseline rows used it)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    """Decoder-only LM. All shapes exact per the assignment table."""
+
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # attention flavor
+    attn_kind: str = "gqa"            # "gqa" | "mla"
+    sliding_window: Optional[int] = None
+    local_global: bool = False        # Gemma-2 alternating local/global
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    query_scale: Optional[float] = None  # override 1/sqrt(head_dim)
+    post_norms: bool = False          # Gemma-2 sandwich norms
+    embed_scale: bool = False         # Gemma-2 sqrt(d_model) embed scaling
+    rope_theta: float = 10_000.0
+    # MLA (attn_kind == "mla")
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # MoE (None = dense)
+    moe: Optional[MoEConfig] = None
+    first_k_dense: int = 0            # DeepSeek: first k layers use dense FFN
+    d_ff_dense_first: int = 0
+    # distribution knobs (hillclimb-tunable; see EXPERIMENTS.md §Perf)
+    sp_residual: bool = True          # sequence-shard the residual stream
+                                      # between layers (16x smaller carry)
+    # numerics
+    dtype: str = "bfloat16"
+    # sub-quadratic flag for the long_500k cell (DESIGN.md §5)
+    supports_long_context: bool = False
+
+    @property
+    def q_dim(self) -> int:
+        if self.attn_kind == "mla":
+            return self.num_heads * (self.qk_nope_dim + self.qk_rope_dim)
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str                         # "pna" | "gin" | "egnn" | "gat"
+    num_layers: int
+    d_hidden: int
+    d_in: int = 0                     # set per-shape at build time
+    num_heads: int = 1                # GAT
+    num_classes: int = 16
+    aggregators: Tuple[str, ...] = ("sum",)
+    scalers: Tuple[str, ...] = ("identity",)
+    learn_eps: bool = True            # GIN
+    coord_dim: int = 3                # EGNN E(n) coordinates
+    dropout: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RecSysConfig:
+    name: str
+    n_sparse: int                     # number of categorical fields
+    embed_dim: int
+    vocab_per_field: int = 100_000    # rows per embedding table
+    n_dense: int = 13                 # dense (numeric) features
+    multi_hot: int = 4                # ids per field (EmbeddingBag regime)
+    mlp_dims: Tuple[int, ...] = (256, 128)

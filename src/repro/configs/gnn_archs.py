@@ -1,0 +1,29 @@
+"""The four assigned GNN architectures + shape-dependent smoke configs."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import GNNConfig
+
+# PNA [arXiv:2004.05718]: 4 aggregators x 3 degree scalers.
+PNA = GNNConfig(name="pna", kind="pna", num_layers=4, d_hidden=75,
+                aggregators=("mean", "max", "min", "std"),
+                scalers=("identity", "amplification", "attenuation"))
+
+# GIN [arXiv:1810.00826]: sum aggregator, learnable eps.
+GIN_TU = GNNConfig(name="gin-tu", kind="gin", num_layers=5, d_hidden=64,
+                   aggregators=("sum",), learn_eps=True)
+
+# EGNN [arXiv:2102.09844]: E(n)-equivariant, scalar-distance messages.
+EGNN = GNNConfig(name="egnn", kind="egnn", num_layers=4, d_hidden=64,
+                 coord_dim=3)
+
+# GAT [arXiv:1710.10903]: 2 layers, 8 hidden x 8 heads on Cora.
+GAT_CORA = GNNConfig(name="gat-cora", kind="gat", num_layers=2, d_hidden=8,
+                     num_heads=8)
+
+
+def smoke_of(cfg: GNNConfig) -> GNNConfig:
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke",
+                               num_layers=2, d_hidden=16,
+                               num_heads=min(cfg.num_heads, 2))

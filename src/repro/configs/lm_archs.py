@@ -1,0 +1,71 @@
+"""The five assigned LM architectures — exact shapes from the assignment.
+
+Full configs are exercised only via the dry-run (ShapeDtypeStruct);
+``*_SMOKE`` configs are reduced same-family models for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import LMConfig, MoEConfig
+
+# gemma2-27b [arXiv:2408.00118]: local+global alternating, logit softcaps,
+# sandwich norms, GQA kv=16.  query scale = (d_model/num_heads)^-1/2 = 144^-.5.
+GEMMA2_27B = LMConfig(
+    name="gemma2-27b", num_layers=46, d_model=4608, num_heads=32,
+    num_kv_heads=16, head_dim=128, d_ff=36864, vocab_size=256_000,
+    sliding_window=4096, local_global=True, attn_softcap=50.0,
+    final_softcap=30.0, query_scale=144.0 ** -0.5, post_norms=True,
+    embed_scale=True, supports_long_context=True)
+
+# deepseek-coder-33b [arXiv:2401.14196]: llama arch, GQA kv=8.
+DEEPSEEK_CODER_33B = LMConfig(
+    name="deepseek-coder-33b", num_layers=62, d_model=7168, num_heads=56,
+    num_kv_heads=8, head_dim=128, d_ff=19200, vocab_size=32_256,
+    rope_theta=100_000.0)
+
+# tinyllama-1.1b [arXiv:2401.02385]: llama2 arch small, GQA kv=4.
+TINYLLAMA_1_1B = LMConfig(
+    name="tinyllama-1.1b", num_layers=22, d_model=2048, num_heads=32,
+    num_kv_heads=4, head_dim=64, d_ff=5632, vocab_size=32_000)
+
+# deepseek-v2-lite-16b [arXiv:2405.04434]: MLA kv_lora=512, MoE 64 routed
+# top-6 + 2 shared experts (d_ff_expert=1408), first layer dense.
+DEEPSEEK_V2_LITE = LMConfig(
+    name="deepseek-v2-lite-16b", num_layers=27, d_model=2048, num_heads=16,
+    num_kv_heads=16, head_dim=128, d_ff=10944, vocab_size=102_400,
+    attn_kind="mla", kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
+    v_head_dim=128,
+    moe=MoEConfig(num_experts=64, top_k=6, d_ff_expert=1408,
+                  num_shared_experts=2, d_ff_shared=2816),
+    first_k_dense=1, d_ff_dense_first=10944,
+    supports_long_context=True)
+
+# arctic-480b [hf:Snowflake/snowflake-arctic-base]: 128 experts top-2 with a
+# dense-MLP residual in parallel (d_ff=4864 for both).
+ARCTIC_480B = LMConfig(
+    name="arctic-480b", num_layers=35, d_model=7168, num_heads=56,
+    num_kv_heads=8, head_dim=128, d_ff=4864, vocab_size=32_000,
+    moe=MoEConfig(num_experts=128, top_k=2, d_ff_expert=4864,
+                  dense_residual=True))
+
+
+def smoke_of(cfg: LMConfig) -> LMConfig:
+    """Reduced same-family config: 2-3 layers, narrow, tiny vocab."""
+    moe = cfg.moe
+    if moe is not None:
+        moe = dataclasses.replace(moe, num_experts=8,
+                                  top_k=min(moe.top_k, 2), d_ff_expert=64,
+                                  d_ff_shared=64 if moe.d_ff_shared else 0)
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        num_layers=3 if cfg.first_k_dense else 2,
+        d_model=128,
+        num_heads=4, num_kv_heads=max(1, 4 * cfg.num_kv_heads
+                                      // cfg.num_heads),
+        head_dim=32, d_ff=256, vocab_size=512,
+        sliding_window=16 if cfg.sliding_window else None,
+        kv_lora_rank=64 if cfg.attn_kind == "mla" else 0,
+        qk_nope_dim=32, qk_rope_dim=16, v_head_dim=32,
+        moe=moe, d_ff_dense_first=256 if cfg.first_k_dense else 0)

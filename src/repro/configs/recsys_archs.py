@@ -1,0 +1,16 @@
+"""The assigned recsys architecture: Factorization Machine [Rendle ICDM'10]."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import RecSysConfig
+
+# FM: 39 sparse fields, embed_dim 10, pairwise interactions via the O(nk)
+# sum-square trick.  Table sizes follow the Criteo-like regime.
+FM = RecSysConfig(name="fm", n_sparse=39, embed_dim=10,
+                  vocab_per_field=1_000_000, n_dense=13, multi_hot=4)
+
+
+def smoke_of(cfg: RecSysConfig) -> RecSysConfig:
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke",
+                               vocab_per_field=1000)

@@ -1,0 +1,47 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each entry: family ("lm" | "gnn" | "recsys"), full config, smoke config,
+and the shape-set name the arch is paired with.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.configs import gnn_archs, lm_archs, recsys_archs
+
+
+class ArchEntry(NamedTuple):
+    family: str
+    config: object
+    smoke: object
+
+
+ARCHS = {
+    "gemma2-27b": ArchEntry("lm", lm_archs.GEMMA2_27B,
+                            lm_archs.smoke_of(lm_archs.GEMMA2_27B)),
+    "deepseek-coder-33b": ArchEntry(
+        "lm", lm_archs.DEEPSEEK_CODER_33B,
+        lm_archs.smoke_of(lm_archs.DEEPSEEK_CODER_33B)),
+    "tinyllama-1.1b": ArchEntry("lm", lm_archs.TINYLLAMA_1_1B,
+                                lm_archs.smoke_of(lm_archs.TINYLLAMA_1_1B)),
+    "deepseek-v2-lite-16b": ArchEntry(
+        "lm", lm_archs.DEEPSEEK_V2_LITE,
+        lm_archs.smoke_of(lm_archs.DEEPSEEK_V2_LITE)),
+    "arctic-480b": ArchEntry("lm", lm_archs.ARCTIC_480B,
+                             lm_archs.smoke_of(lm_archs.ARCTIC_480B)),
+    "pna": ArchEntry("gnn", gnn_archs.PNA, gnn_archs.smoke_of(gnn_archs.PNA)),
+    "gin-tu": ArchEntry("gnn", gnn_archs.GIN_TU,
+                        gnn_archs.smoke_of(gnn_archs.GIN_TU)),
+    "egnn": ArchEntry("gnn", gnn_archs.EGNN,
+                      gnn_archs.smoke_of(gnn_archs.EGNN)),
+    "gat-cora": ArchEntry("gnn", gnn_archs.GAT_CORA,
+                          gnn_archs.smoke_of(gnn_archs.GAT_CORA)),
+    "fm": ArchEntry("recsys", recsys_archs.FM,
+                    recsys_archs.smoke_of(recsys_archs.FM)),
+}
+
+
+def get_arch(name: str) -> ArchEntry:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]

@@ -1,0 +1,21 @@
+"""Core library: the paper's parallel Borůvka MST, TPU-native."""
+from repro.core.types import Graph, MSTResult, INT_SENTINEL
+from repro.core.mst import (
+    minimum_spanning_forest,
+    mst_optimized,
+    mst_unoptimized,
+    rank_edges,
+)
+from repro.core.union_find import pointer_jump, count_components
+
+__all__ = [
+    "Graph",
+    "MSTResult",
+    "INT_SENTINEL",
+    "minimum_spanning_forest",
+    "mst_optimized",
+    "mst_unoptimized",
+    "rank_edges",
+    "pointer_jump",
+    "count_components",
+]

@@ -1,0 +1,127 @@
+"""Distributed Borůvka MST — the paper's thread parallelism as SPMD.
+
+Paper §2.2: every thread scans *all* edges (staggered starts) and maintains
+minimum[] for the vertices it owns; the union phase is synchronized.  SPMD
+mapping (DESIGN.md §2):
+
+  * thread        -> mesh device
+  * edge scan     -> each device scans only its contiguous **edge shard**
+                     (stronger than the paper: work is partitioned, not just
+                     staggered, so there are no collisions at all)
+  * minimum[]     -> per-device (V,) candidate ranks from ``segment_min``
+  * owner merge   -> ``lax.pmin`` over the mesh axis: a single min-all-reduce
+                     replaces all owner_tid[] bookkeeping
+  * union phase   -> executed *replicated*: every device applies the same
+                     deterministic hooking to its copy of parent[]
+
+Graph topology (src/dst/order) is replicated, like the paper's shared edge
+array; only scan work is partitioned.  For graphs too large to replicate,
+the scaling path is an all-gather of the (V,)-sized candidate arrays - the
+topology never moves - which is exactly what the dry-run meshes exercise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.types import Graph, MSTResult, INT_SENTINEL
+from repro.core.mst import (
+    BoruvkaState,
+    _init_state,
+    candidate_min_edges,
+    commit_edges,
+    hook_cas,
+    hook_lock_waves,
+    rank_edges,
+    resolve_candidates,
+)
+from repro.core.union_find import pointer_jump, count_components
+
+
+def _pad_to(x, n, fill):
+    pad = n - x.shape[0]
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+
+
+def distributed_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
+                    axis: str = "data", variant: str = "cas",
+                    max_lock_waves: int = 16) -> MSTResult:
+    """Minimum spanning forest with edge scanning sharded over ``mesh[axis]``.
+
+    Returns replicated outputs identical to the single-device engine.
+    """
+    n_shards = mesh.shape[axis]
+    e = graph.num_edges
+    e_pad = -(-e // n_shards) * n_shards
+    rank, order = rank_edges(graph.weight)
+    scan_src = _pad_to(graph.src, e_pad, 0)
+    scan_dst = _pad_to(graph.dst, e_pad, 0)
+    scan_rank = _pad_to(rank, e_pad, INT_SENTINEL)
+
+    # All other mesh axes are unused: broadcast over them (replicated).
+    shard = P(axis)
+    repl = P()
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(shard, shard, shard, repl, repl, repl, repl),
+        out_specs=repl, check_vma=False)
+    def run(s_src, s_dst, s_rank, f_src, f_dst, f_order, weight):
+        init = _init_state(num_nodes, e, s_rank.shape[0])
+
+        def cond(s):
+            return ~s.done
+
+        def body(state):
+            cu_e = state.parent[s_src]
+            cv_e = state.parent[s_dst]
+            self_edge = cu_e == cv_e
+            new_covered = state.covered | self_edge
+            key = jnp.where(new_covered, INT_SENTINEL, s_rank)
+            local_best = candidate_min_edges(key, cu_e, cv_e, num_nodes)
+            # The paper's cross-thread merge of minimum[]: one collective.
+            best = jax.lax.pmin(local_best, axis)
+            has, cand_edge, other, iota = resolve_candidates(
+                best, f_order, f_src, f_dst, state.parent)
+            if variant == "cas":
+                new_parent, commit = hook_cas(state.parent, has, cand_edge,
+                                              other, iota)
+                mst_mask = commit_edges(state.mst_mask, cand_edge, commit)
+                new_parent = pointer_jump(new_parent)
+                waves = jnp.ones((), jnp.int32)
+            else:
+                new_parent, mst_mask, waves = hook_lock_waves(
+                    state.parent, state.mst_mask, has, cand_edge,
+                    f_src, f_dst, max_waves=max_lock_waves)
+            done = ~jnp.any(has)
+            return BoruvkaState(
+                new_parent, mst_mask, new_covered,
+                state.num_rounds + jnp.where(done, 0, 1),
+                state.num_waves + jnp.where(done, 0, waves), done)
+
+        final = jax.lax.while_loop(cond, body, init)
+        total = jnp.sum(jnp.where(final.mst_mask, weight, 0.0))
+        ncomp = count_components(final.parent)
+        return (final.parent, final.mst_mask, final.num_rounds,
+                final.num_waves, total, ncomp)
+
+    parent, mst_mask, rounds, waves, total, ncomp = run(
+        scan_src, scan_dst, scan_rank, graph.src, graph.dst, order,
+        graph.weight)
+    return MSTResult(parent=parent, mst_mask=mst_mask, num_rounds=rounds,
+                     num_waves=waves, total_weight=total,
+                     num_components=ncomp)
+
+
+def make_flat_mesh(num_devices: Optional[int] = None,
+                   axis: str = "data") -> Mesh:
+    """1-D mesh over the first ``num_devices`` local devices."""
+    devs = np.array(jax.devices()[:num_devices])
+    return Mesh(devs, (axis,))

@@ -1,0 +1,45 @@
+"""Numpy Kruskal oracle — independent reference for every MST variant.
+
+Ties are broken by edge index (same (weight, edge_id) lexicographic order the
+Borůvka engines use), so for any weight multiset the oracle's MST is the
+*unique* minimum forest under that order and edge sets must match exactly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def kruskal_numpy(src, dst, weight, num_nodes):
+    """Returns (mst_mask, total_weight, num_components)."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    weight = np.asarray(weight)
+    order = np.argsort(weight, kind="stable")
+    parent = np.arange(num_nodes)
+    rank = np.zeros(num_nodes, np.int32)
+
+    def find(x):
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:  # path compression
+            parent[x], x = root, parent[x]
+        return root
+
+    mask = np.zeros(src.shape[0], bool)
+    n_comp = num_nodes
+    for e in order:
+        a, b = find(src[e]), find(dst[e])
+        if a == b:
+            continue
+        if rank[a] < rank[b]:
+            a, b = b, a
+        parent[b] = a
+        if rank[a] == rank[b]:
+            rank[a] += 1
+        mask[e] = True
+        n_comp -= 1
+        if n_comp == 1:
+            break
+    total = float(weight[mask].sum())
+    return mask, total, n_comp

@@ -1,0 +1,57 @@
+"""Spanning-forest graph partitioner — MST as a data-pipeline feature.
+
+Classic MST clustering: compute the MST, delete the (k-1) heaviest tree
+edges, and the remaining forest's components are k clusters that minimize the
+maximum inter-cluster linkage.  We use it to assign locality-friendly edge
+shards to devices for the GNN full-graph shapes (DESIGN.md §5).
+
+Host-side (numpy) by design: partitioning is a one-off pipeline step.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.types import Graph
+from repro.core.oracle import kruskal_numpy
+
+
+def mst_partition(src, dst, weight, num_nodes: int, num_parts: int
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (part_of_node (V,), part_sizes (num_parts,))."""
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    weight = np.asarray(weight)
+    mask, _, _ = kruskal_numpy(src, dst, weight, num_nodes)
+    tree = np.nonzero(mask)[0]
+    if num_parts > 1 and tree.size >= num_parts - 1:
+        # Drop the k-1 heaviest tree edges.
+        heavy = tree[np.argsort(weight[tree])[-(num_parts - 1):]]
+        keep = np.setdiff1d(tree, heavy, assume_unique=True)
+    else:
+        keep = tree
+    parent = np.arange(num_nodes)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for e in keep:
+        a, b = find(src[e]), find(dst[e])
+        if a != b:
+            parent[b] = a
+    roots = np.array([find(v) for v in range(num_nodes)])
+    uniq, part = np.unique(roots, return_inverse=True)
+    # More components than parts (disconnected input): fold round-robin.
+    part = part % num_parts
+    sizes = np.bincount(part, minlength=num_parts)
+    return part.astype(np.int32), sizes
+
+
+def partition_edges(src, dst, part_of_node: np.ndarray, num_parts: int
+                    ) -> np.ndarray:
+    """Edge -> owning part (part of its src endpoint; ties are fine)."""
+    return part_of_node[np.asarray(src)]

@@ -1,0 +1,54 @@
+"""Shared graph types for the MST core.
+
+Edge-list representation mirrors the paper's ``graph_edge`` array: each edge
+has ``src``, ``dest`` and ``weight`` attributes; the graph is undirected and
+``src``/``dst`` are interchangeable (paper §2.1, data structure iii).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+INT_SENTINEL = np.iinfo(np.int32).max  # "minimum[v] == -1" analogue
+
+
+class Graph(NamedTuple):
+    """Static-shape edge-list graph.
+
+    Attributes:
+      src:    (E,) int32 source vertex of each edge.
+      dst:    (E,) int32 destination vertex of each edge.
+      weight: (E,) float32 edge weight.  The paper assumes distinct weights;
+              we enforce distinctness *structurally* via a (weight, edge-id)
+              lexicographic rank, so duplicate weights are also handled.
+    """
+
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    weight: jnp.ndarray
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.src.shape[0])
+
+
+class MSTResult(NamedTuple):
+    """Result of a minimum-spanning-forest computation.
+
+    Attributes:
+      parent:       (V,) int32 fully path-compressed component array; vertices
+                    in the same tree share a root ("components[]" of the paper).
+      mst_mask:     (E,) bool True for edges in the forest (the set "M").
+      num_rounds:   scalar int32, Borůvka rounds executed.
+      total_weight: scalar float32, sum of selected edge weights.
+      num_components: scalar int32, trees in the forest (1 for connected input).
+    """
+
+    parent: jnp.ndarray
+    mst_mask: jnp.ndarray
+    num_rounds: jnp.ndarray
+    num_waves: jnp.ndarray  # lock-variant retry waves (== rounds for CAS)
+    total_weight: jnp.ndarray
+    num_components: jnp.ndarray

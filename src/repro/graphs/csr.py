@@ -1,0 +1,53 @@
+"""CSR utilities for the graph substrate.
+
+JAX sparse is BCOO-only, so all message passing in this framework is built on
+edge-index + ``segment_sum``-family ops; CSR exists for the *host-side* data
+pipeline (neighbor sampling, partitioning) where random access by vertex is
+needed.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import numpy as np
+
+
+class CSR(NamedTuple):
+    """Symmetrized CSR adjacency (host-side, numpy).
+
+    row_ptr: (V+1,) int64, col_idx: (E2,) int32, edge_id: (E2,) int32 mapping
+    each directed slot back to the undirected edge id.
+    """
+
+    row_ptr: np.ndarray
+    col_idx: np.ndarray
+    edge_id: np.ndarray
+
+    @property
+    def num_nodes(self) -> int:
+        return self.row_ptr.shape[0] - 1
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.row_ptr)
+
+
+def edges_to_csr(src, dst, num_nodes: int, symmetrize: bool = True) -> CSR:
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    eid = np.arange(src.shape[0], dtype=np.int32)
+    if symmetrize:
+        s = np.concatenate([src, dst])
+        d = np.concatenate([dst, src])
+        e = np.concatenate([eid, eid])
+    else:
+        s, d, e = src, dst, eid
+    order = np.argsort(s, kind="stable")
+    s, d, e = s[order], d[order], e[order]
+    counts = np.bincount(s, minlength=num_nodes)
+    row_ptr = np.zeros(num_nodes + 1, np.int64)
+    np.cumsum(counts, out=row_ptr[1:])
+    return CSR(row_ptr, d.astype(np.int32), e.astype(np.int32))
+
+
+def degree_histogram(csr: CSR, bins: int = 10) -> Tuple[np.ndarray, np.ndarray]:
+    return np.histogram(csr.degrees(), bins=bins)

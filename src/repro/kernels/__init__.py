@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package has:
+  kernel.py - pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  ops.py    - jit'd public wrapper (block-size selection, interpret switch)
+  ref.py    - pure-jnp oracle used by the allclose test sweeps
+
+This container is CPU-only: kernels are validated with interpret=True, which
+executes the kernel body in Python; the BlockSpecs encode the real VMEM
+tiling the TPU target would use.
+"""
+from repro.kernels.segment_min_edges.ops import segment_min_edges
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.fm_interaction.ops import fm_interaction_kernel
+from repro.kernels.gnn_spmm.ops import gather_segment_sum
+
+__all__ = ["segment_min_edges", "flash_attention", "fm_interaction_kernel",
+           "gather_segment_sum"]

@@ -1,0 +1,24 @@
+"""Public wrapper for the Pallas flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "causal", "window", "cap", "block_q", "block_kv", "q_offset",
+    "interpret"))
+def flash_attention(q, k, v, *, scale: float, causal: bool = True,
+                    window: Optional[int] = None,
+                    cap: Optional[float] = None, block_q: int = 128,
+                    block_kv: int = 128, q_offset: int = 0,
+                    interpret: bool = True):
+    bq = min(block_q, q.shape[2])
+    bkv = min(block_kv, k.shape[2])
+    return flash_attention_pallas(
+        q, k, v, scale=scale, causal=causal, window=window, cap=cap,
+        block_q=bq, block_kv=bkv, q_offset=q_offset, interpret=interpret)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for flash attention (naive softmax attention)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, scale: float, causal: bool = True,
+                        window: Optional[int] = None,
+                        cap: Optional[float] = None, q_offset: int = 0):
+    """q: (B,H,Sq,hd); k/v: (B,Hkv,Skv,hd)."""
+    b, h, sq, hd = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = h // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if cap is not None:
+        s = cap * jnp.tanh(s / cap)
+    q_pos = q_offset + jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(ok[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

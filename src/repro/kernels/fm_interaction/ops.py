@@ -1,0 +1,22 @@
+"""Public wrapper for the FM interaction kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fm_interaction.kernel import fm_interaction_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def fm_interaction_kernel(v, *, block_b: int = 1024,
+                          interpret: bool = True):
+    b = v.shape[0]
+    block = min(block_b, b)
+    pad = (-b) % block
+    if pad:
+        v = jnp.concatenate(
+            [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)])
+    out = fm_interaction_pallas(v, block_b=block, interpret=interpret)
+    return out[:b]

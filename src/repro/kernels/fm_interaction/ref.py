@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the FM pairwise interaction."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fm_interaction_ref(v):
+    """v: (B, F, k) -> (B,) = sum_{i<j} <v_i, v_j> in fp32."""
+    v = v.astype(jnp.float32)
+    s = v.sum(1)
+    sq = jnp.square(v).sum(1)
+    return 0.5 * (jnp.square(s) - sq).sum(-1)

@@ -1,0 +1,24 @@
+"""Public wrapper for the fused gather-scale-segment-sum kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gnn_spmm.kernel import gather_segment_sum_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_nodes", "block_edges", "interpret"))
+def gather_segment_sum(src, dst, w, feat, *, num_nodes: int,
+                       block_edges: int = 2048, interpret: bool = True):
+    e = src.shape[0]
+    block = min(block_edges, max(256, e))
+    pad = (-e) % block
+    if pad:
+        src = jnp.concatenate([src, jnp.zeros((pad,), src.dtype)])
+        dst = jnp.concatenate([dst, jnp.zeros((pad,), dst.dtype)])
+        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])  # w=0: no-op
+    return gather_segment_sum_pallas(src, dst, w, feat, num_nodes,
+                                     block_edges=block, interpret=interpret)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle: take + segment_sum (materializes the message tensor)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_segment_sum_ref(src, dst, w, feat, num_nodes: int):
+    msg = feat[src] * w[:, None]
+    return jax.ops.segment_sum(msg, dst, num_segments=num_nodes)

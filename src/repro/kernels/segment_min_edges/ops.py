@@ -1,0 +1,26 @@
+"""Public wrapper: padding, block selection, interpret switch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import INT_SENTINEL
+from repro.kernels.segment_min_edges.kernel import segment_min_edges_pallas
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_nodes", "block_edges", "interpret"))
+def segment_min_edges(keys, cu, cv, *, num_nodes: int,
+                      block_edges: int = 4096, interpret: bool = True):
+    e = keys.shape[0]
+    block = min(block_edges, max(256, e))
+    pad = (-e) % block
+    if pad:
+        keys = jnp.concatenate([keys, jnp.full((pad,), INT_SENTINEL,
+                                               keys.dtype)])
+        cu = jnp.concatenate([cu, jnp.zeros((pad,), cu.dtype)])
+        cv = jnp.concatenate([cv, jnp.zeros((pad,), cv.dtype)])
+    return segment_min_edges_pallas(keys, cu, cv, num_nodes,
+                                    block_edges=block, interpret=interpret)

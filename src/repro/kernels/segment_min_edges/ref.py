@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for segment_min_edges."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_min_edges_ref(keys, cu, cv, num_nodes: int):
+    best_u = jax.ops.segment_min(keys, cu, num_segments=num_nodes)
+    best_v = jax.ops.segment_min(keys, cv, num_segments=num_nodes)
+    return jnp.minimum(best_u, best_v)

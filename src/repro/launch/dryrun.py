@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^^ MUST run before any jax import: jax locks the device count on first init.
+
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+#
+# For each cell:
+#   * jit(step).lower(*abstract_args).compile() on the production mesh
+#     (16x16 single pod, 2x16x16 multi-pod - 512 forced host devices);
+#   * record memory_analysis() (fits-on-chip proof), cost_analysis()
+#     (FLOPs / bytes for the roofline), and the collective traffic parsed
+#     from the optimized HLO;
+#   * write one JSON artifact per cell to artifacts/dryrun/.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k \
+#       --mesh pod1
+#   python -m repro.launch.dryrun --all [--mesh pod1|pod2]   # sequential
+#   python -m repro.launch.dryrun --list
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+
+# LHS result type (scalar or tuple) followed by the collective op name.
+# `-done` halves of async pairs are excluded (the `-start` carries the type).
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# Communication-volume multiplier per op kind (ring algorithms; bytes that
+# actually cross links as a fraction of the RESULT size).
+_VOLUME_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0,
+                  "reduce-scatter": 1.0, "all-to-all": 1.0,
+                  "collective-permute": 1.0}
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective in optimized HLO."""
+    per_op = {}
+    count = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        types, op = m.group(1), m.group(2)
+        total = 0
+        for dtype, dims in _SHAPE_RE.findall(types):
+            if dtype not in _DTYPE_BYTES:
+                continue
+            size = _DTYPE_BYTES[dtype]
+            for d in dims.split(","):
+                if d:
+                    size *= int(d)
+            total += size
+        if not total:
+            continue
+        per_op[op] = per_op.get(op, 0) + total
+        count[op] = count.get(op, 0) + 1
+    total = sum(_VOLUME_FACTOR[k] * v for k, v in per_op.items())
+    return {"bytes_by_op": per_op, "count_by_op": count,
+            "link_bytes_weighted": total}
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: str = "artifacts/dryrun",
+             overrides: dict = None, tag: str = "") -> dict:
+    import jax
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+    from repro.models.shard_hints import use_mesh_hints
+
+    multi_pod = mesh_name == "pod2"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh, overrides=overrides)
+    # In/out shardings are explicit NamedShardings; activation hints are
+    # bound to the mesh during tracing (see models/shard_hints.py).
+    with use_mesh_hints(mesh):
+        lowered = cell.jit_fn.lower(*cell.args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "mesh_shape": dict(zip(mesh.axis_names,
+                               [int(s) for s in mesh.devices.shape])),
+        "meta": cell.meta,
+        "overrides": overrides or {}, "tag": tag,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "ok": True,
+    }
+    try:
+        ma = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            k: int(getattr(ma, k)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as exc:  # CPU backend may not implement it
+        record["memory_analysis"] = {"unavailable": str(exc)[:200]}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        record["cost_analysis"] = {
+            k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "bytes accessed", "optimal_seconds")
+                or k.startswith("bytes accessed"))}
+    except Exception as exc:
+        record["cost_analysis"] = {"unavailable": str(exc)[:200]}
+    try:
+        record["collectives"] = parse_collectives(compiled.as_text())
+    except Exception as exc:
+        record["collectives"] = {"unavailable": str(exc)[:200]}
+
+    # Scan-body cost calibration: XLA cost analysis counts a while-loop body
+    # ONCE, so scanned-layer cells under-report flops/bytes/collectives.
+    # Compile the same cell with unroll=2; the delta vs unroll=1 is exactly
+    # one layer body; extrapolate x (scanned_layers - 1).
+    n_scan = cell.meta.get("scanned_layers", 0)
+    if n_scan > 1 and cell.meta["kind"] in ("train", "prefill"):
+        cell2 = build_cell(arch, shape_name, mesh, scan_unroll=2,
+                           overrides=overrides)
+        with use_mesh_hints(mesh):
+            lowered2 = cell2.jit_fn.lower(*cell2.args)
+        comp2 = lowered2.compile()
+        ca1, ca2 = record["cost_analysis"], {}
+        try:
+            c = comp2.cost_analysis()
+            c = c[0] if isinstance(c, (list, tuple)) else c
+            ca2 = {k: float(v) for k, v in c.items()
+                   if isinstance(v, (int, float))}
+        except Exception:
+            pass
+        corrected = {}
+        for k in ("flops", "bytes accessed"):
+            if k in ca1 and k in ca2:
+                body = max(ca2[k] - ca1[k], 0.0)
+                corrected[k] = ca1[k] + body * (n_scan - 1)
+        col1 = record["collectives"]
+        col2 = parse_collectives(comp2.as_text())
+        cor_bytes = {}
+        for op, v1 in col1.get("bytes_by_op", {}).items():
+            v2 = col2.get("bytes_by_op", {}).get(op, v1)
+            body = max(v2 - v1, 0)
+            cor_bytes[op] = v1 + body * (n_scan - 1)
+        for op, v2 in col2.get("bytes_by_op", {}).items():
+            cor_bytes.setdefault(op, v2 * (n_scan - 1))
+        corrected["collective_bytes_by_op"] = cor_bytes
+        corrected["collective_link_bytes_weighted"] = sum(
+            _VOLUME_FACTOR[k] * v for k, v in cor_bytes.items())
+        record["scan_corrected"] = corrected
+
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="key=value cell override (repeatable)")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    args = ap.parse_args()
+    overrides = dict(kv.split("=", 1) for kv in args.override)
+
+    from repro.launch.shapes import cells
+
+    if args.list:
+        for arch, shape, skip in cells():
+            print(f"{arch:24s} {shape:16s}{'  SKIP(long-ctx)' if skip else ''}")
+        return 0
+
+    todo = []
+    if args.all:
+        todo = [(a, s) for a, s, skip in cells() if not skip]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape or --all required")
+        todo = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in todo:
+        path = os.path.join(args.out, f"{arch}__{shape}__{args.mesh}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip] {arch} {shape} {args.mesh} (exists)")
+            continue
+        print(f"[dryrun] {arch} {shape} {args.mesh} "
+              f"{overrides or ''} ...", flush=True)
+        try:
+            rec = run_cell(arch, shape, args.mesh, args.out,
+                           overrides=overrides, tag=args.tag)
+            ca = rec.get("cost_analysis", {})
+            co = rec.get("collectives", {})
+            print(f"  ok: compile={rec['compile_s']}s "
+                  f"flops={ca.get('flops', 0):.3g} "
+                  f"coll_bytes={co.get('link_bytes_weighted', 0):.3g}",
+                  flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            os.makedirs(args.out, exist_ok=True)
+            with open(os.path.join(args.out,
+                                   f"{arch}__{shape}__{args.mesh}.FAILED"),
+                      "w") as f:
+                f.write(traceback.format_exc())
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

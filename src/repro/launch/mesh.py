@@ -1,0 +1,20 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; multi_pod adds a leading 2-pod axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(multi_pod: bool):
+    """Axes that carry the batch / FSDP dimension."""
+    return ("pod", "data") if multi_pod else ("data",)

@@ -1,0 +1,53 @@
+"""Assigned input-shape sets, one per architecture family (the 40 cells).
+
+``long_500k`` / ``decode_32k`` lower ``serve_step`` (one token against a KV
+cache of seq_len), not ``train_step``.  ``long_500k`` runs only for archs
+with a sub-quadratic mechanism (gemma2: local/global ring caches; dsv2-lite:
+MLA latent cache) and is recorded as SKIP for the pure full-attention archs
+(DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+LM_SHAPES: Dict[str, dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32_768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32_768, batch=128),
+    "long_500k": dict(kind="decode", seq=524_288, batch=1),
+}
+
+GNN_SHAPES: Dict[str, dict] = {
+    "full_graph_sm": dict(kind="full", n=2708, e=10_556, d_feat=1433,
+                          classes=7),
+    "minibatch_lg": dict(kind="sampled", n=232_965, e=114_615_892,
+                         batch_nodes=1024, fanout=(15, 10), d_feat=602,
+                         classes=41),
+    "ogb_products": dict(kind="full", n=2_449_029, e=61_859_140, d_feat=100,
+                         classes=47),
+    "molecule": dict(kind="batched", n=30, e=64, batch=128, d_feat=16,
+                     classes=2),
+}
+
+RECSYS_SHAPES: Dict[str, dict] = {
+    "train_batch": dict(kind="train", batch=65_536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262_144),
+    "retrieval_cand": dict(kind="retrieval", batch=1, candidates=1_000_000),
+}
+
+FAMILY_SHAPES = {"lm": LM_SHAPES, "gnn": GNN_SHAPES, "recsys": RECSYS_SHAPES}
+
+# Pure full-attention archs skip long_500k (no sub-quadratic mechanism).
+LONG_CONTEXT_SKIP = {"deepseek-coder-33b", "tinyllama-1.1b", "arctic-480b"}
+
+
+def cells():
+    """All 40 (arch, shape) cells, with skip annotations."""
+    from repro.configs.registry import ARCHS
+    out = []
+    for arch, entry in ARCHS.items():
+        for shape in FAMILY_SHAPES[entry.family]:
+            skip = (shape == "long_500k" and arch in LONG_CONTEXT_SKIP)
+            out.append((arch, shape, skip))
+    return out

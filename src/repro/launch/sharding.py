@@ -1,0 +1,184 @@
+"""PartitionSpec rules for every family (the distribution config).
+
+Scheme (DESIGN.md §4):
+  * ``model`` axis = tensor parallel (attention heads / ffn width / vocab /
+    expert-ffn width) - ``data`` (x ``pod``) axis = batch + FSDP weight
+    sharding + expert parallelism over the expert dim.
+  * Stacked layer weights (L, A, B) shard as P(None, fsdp, "model"): GSPMD
+    all-gathers the FSDP dim per scan step (FSDP semantics), contracts the
+    TP dim, and reduce-scatters gradients - ZeRO-1 falls out for the fp32
+    moments, which inherit these specs.
+  * MoE experts (L, E, D, F) shard E over the FSDP axes (expert parallelism
+    -> all-to-all dispatch) and F over ``model``.
+  * Small graphs replicate (full_graph_sm); big graphs shard nodes/edges on
+    the data axes with mask-padded inputs (pipeline pads to device multiples).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import GNNConfig, LMConfig, RecSysConfig
+
+
+def fsdp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _name_of(path) -> str:
+    last = path[-1]
+    return getattr(last, "key", getattr(last, "name", str(last)))
+
+
+def _in(path, *names) -> bool:
+    keys = {getattr(p, "key", None) for p in path}
+    return any(n in keys for n in names)
+
+
+# ---------------------------------------------------------------------------
+# LM parameters.
+# ---------------------------------------------------------------------------
+
+def lm_param_spec_tree(abstract_params, cfg: LMConfig, mesh: Mesh,
+                       mode: str = "fsdp2d"):
+    """mode: "fsdp2d" (dense weights sharded (fsdp, tp)) or "tp" (dense
+    weights tp-only, replicated across data - no per-layer weight
+    all-gathers at the cost of data-group replication).  MoE expert weights
+    always shard E over the fsdp axes (they cannot replicate at 480B)."""
+    fs_w = fsdp_axes(mesh) if mode == "fsdp2d" else None
+    fs = fsdp_axes(mesh)
+    tp = "model"
+
+    def rule(path, leaf):
+        name = _name_of(path)
+        stacked = _in(path, "layers") and not _in(path, "prefix_layers")
+        lead = (None,) if stacked else ()
+        nd = leaf.ndim
+
+        def spec(*axes):
+            return P(*lead, *axes)
+
+        if name == "embed":
+            return P(tp, None)
+        if name.endswith("norm") or name in ("eps", "bias", "step"):
+            return P(*([None] * nd))
+        if _in(path, "moe"):
+            if name == "router":
+                return spec(fs_w, None)
+            if name in ("w_gate", "w_up"):      # (E, D, F)
+                return spec(fs, None, tp)
+            if name == "w_down":                # (E, F, D)
+                return spec(fs, tp, None)
+        if name in ("wq", "wk", "wv", "w_gate", "w_up", "shared_gate",
+                    "shared_up"):
+            return spec(fs_w, tp)
+        if name in ("wo", "w_down", "shared_down"):
+            return spec(tp, fs_w)
+        if name == "wkv_a":                     # (D, R+rope): R small
+            return spec(fs_w, None)
+        if name in ("wk_b", "wv_b"):            # (R, H, nope/v)
+            return spec(None, tp, None)
+        # Fallback: replicate.
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def lm_batch_spec_tree(mesh: Mesh):
+    fs = fsdp_axes(mesh)
+    return {"tokens": P(fs, None), "labels": P(fs, None)}
+
+
+def lm_cache_spec_tree(abstract_caches, cfg: LMConfig, mesh: Mesh,
+                       batch: int):
+    """Decode caches: batch over fsdp axes when shardable, else sequence."""
+    fs = fsdp_axes(mesh)
+    tp = "model"
+    n_fs = (mesh.shape["data"] * (mesh.shape.get("pod", 1)
+                                  if "pod" in mesh.axis_names else 1))
+
+    n_tp = mesh.shape["model"]
+
+    def rule(leaf):
+        if leaf.ndim == 4:      # (B, S, Hkv, hd)
+            htp = tp if leaf.shape[2] % n_tp == 0 else None
+            if batch % n_fs == 0:
+                return P(fs, None, htp, None)
+            return P(None, fs, htp, None)      # long_500k: shard sequence
+        if leaf.ndim == 3:      # MLA latent/rope (B, S, R)
+            if batch % n_fs == 0:
+                return P(fs, None, None)
+            return P(None, fs, None)
+        return P()
+
+    return jax.tree.map(rule, abstract_caches)
+
+
+def lm_serve_token_spec(mesh: Mesh, batch: int):
+    fs = fsdp_axes(mesh)
+    n_fs = (mesh.shape["data"] * (mesh.shape.get("pod", 1)
+                                  if "pod" in mesh.axis_names else 1))
+    return P(fs) if batch % n_fs == 0 else P(None)
+
+
+# ---------------------------------------------------------------------------
+# GNN / RecSys.
+# ---------------------------------------------------------------------------
+
+def gnn_param_spec_tree(abstract_params):
+    return jax.tree.map(lambda leaf: P(*([None] * leaf.ndim)),
+                        abstract_params)
+
+
+def gnn_batch_spec_tree(abstract_batch, mesh: Mesh, *, replicate: bool):
+    fs = fsdp_axes(mesh)
+
+    def rule(leaf):
+        if replicate or not hasattr(leaf, "ndim"):
+            return P(*([None] * getattr(leaf, "ndim", 0)))
+        return P(fs, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(rule, abstract_batch)
+
+
+def fm_param_spec_tree(abstract_params, mesh: Mesh):
+    tp = "model"
+
+    def rule(path, leaf):
+        name = _name_of(path)
+        if name == "emb":                       # (F, V, k): vocab rows on TP
+            return P(None, tp, None)
+        if name == "lin":                       # (F, V)
+            return P(None, tp)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def fm_batch_spec_tree(abstract_batch, mesh: Mesh):
+    fs = fsdp_axes(mesh)
+
+    def rule(leaf):
+        if leaf.shape[0] == 1:                  # retrieval: single query
+            return P(*([None] * leaf.ndim))
+        return P(fs, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(rule, abstract_batch)
+
+
+# ---------------------------------------------------------------------------
+# Helpers.
+# ---------------------------------------------------------------------------
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def pad_to_multiple(n: int, mult: int) -> int:
+    return -(-n // mult) * mult

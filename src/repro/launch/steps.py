@@ -1,0 +1,323 @@
+"""Build (jit_fn, abstract_args, shardings) for every (arch x shape x mesh)
+cell — shared by the dry-run, tests, and benchmarks.
+
+Training cells lower a FULL train step (fwd + bwd + AdamW update, donated
+buffers) - decode cells lower ``serve_step`` - recsys serve cells lower the
+scoring graph.  All inputs are ShapeDtypeStructs: nothing allocates.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.registry import get_arch
+from repro.launch import shapes as shp
+from repro.launch import sharding as shard_lib
+from repro.models import transformer as tf
+from repro.models.gnn import gnn_loss, init_gnn_params
+from repro.models.recsys import (fm_loss, fm_forward, fm_user_vector,
+                                 init_fm_params, retrieval_scores)
+from repro.models.transformer import lm_loss
+from repro.train import data as data_lib
+from repro.train.optimizer import adamw_init, adamw_update
+
+
+class Cell(NamedTuple):
+    jit_fn: Any
+    args: Tuple[Any, ...]       # abstract (ShapeDtypeStruct) arguments
+    meta: Dict[str, Any]
+
+
+def _train_step_fn(loss_fn, cfg, grad_accum: int = 1, **loss_kw):
+    """Full train step; ``grad_accum`` > 1 scans microbatches sequentially
+    (activation memory / batch-size tradeoff, EXPERIMENTS.md §Perf)."""
+    loss_kw = {k: v for k, v in loss_kw.items() if v is not None}
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, **loss_kw), has_aux=True)(
+                params)
+
+    def step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                (l, _), g = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + l), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (zero, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+            metrics = {}
+        params, opt_state, gm = adamw_update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **gm}
+    return step
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+# ---------------------------------------------------------------------------
+# LM cells.
+# ---------------------------------------------------------------------------
+
+def _lm_cell(arch: str, shape_name: str, mesh: Mesh,
+             query_chunk_train: int = 1024,
+             query_chunk_prefill: int = 512,
+             scan_unroll: int = 1,
+             overrides: Dict[str, Any] = None) -> Cell:
+    import dataclasses
+    overrides = overrides or {}
+    cfg = get_arch(arch).config
+    if "moe_dispatch" in overrides and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         dispatch=overrides["moe_dispatch"]))
+    if "sp" in overrides:
+        cfg = dataclasses.replace(cfg,
+                                  sp_residual=overrides["sp"] != "off")
+    ce_chunk = (int(overrides["ce_chunk"])
+                if "ce_chunk" in overrides else None)
+    query_chunk_train = int(overrides.get("query_chunk_train",
+                                          query_chunk_train))
+    query_chunk_prefill = int(overrides.get("query_chunk_prefill",
+                                            query_chunk_prefill))
+    shard_mode = overrides.get("shard_mode", "fsdp2d")
+    spec = shp.LM_SHAPES[shape_name]
+    params_a = tf.abstract_lm_params(cfg)
+    p_specs = shard_lib.lm_param_spec_tree(params_a, cfg, mesh,
+                                           mode=shard_mode)
+    p_shard = shard_lib.to_shardings(p_specs, mesh)
+
+    n_scanned = cfg.num_layers - (cfg.first_k_dense
+                                  if cfg.moe is not None else 0)
+    if spec["kind"] == "train":
+        batch_a = data_lib.lm_batch_spec(cfg, spec["batch"], spec["seq"])
+        b_specs = shard_lib.lm_batch_spec_tree(mesh)
+        b_shard = shard_lib.to_shardings(b_specs, mesh)
+        opt_a = _abstract(adamw_init, params_a)
+        o_specs = type(opt_a)(step=P(),
+                              mu=p_specs, nu=p_specs)
+        o_shard = shard_lib.to_shardings(o_specs, mesh)
+        step = _train_step_fn(lm_loss, cfg, query_chunk=query_chunk_train,
+                              scan_unroll=scan_unroll, ce_chunk=ce_chunk,
+                              grad_accum=int(overrides.get("grad_accum",
+                                                           1)))
+        jit_fn = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         donate_argnums=(0, 1))
+        return Cell(jit_fn, (params_a, opt_a, batch_a),
+                    {"kind": "train",
+                     "tokens": spec["batch"] * spec["seq"],
+                     "scanned_layers": n_scanned})
+
+    if spec["kind"] == "prefill":
+        # Inference prefill: forward only (scoring), no grad/optimizer.
+        batch_a = data_lib.lm_batch_spec(cfg, spec["batch"], spec["seq"])
+        b_specs = shard_lib.lm_batch_spec_tree(mesh)
+        b_shard = shard_lib.to_shardings(b_specs, mesh)
+        qc = query_chunk_prefill
+
+        def prefill(params, batch):
+            loss, metrics = lm_loss(params, batch, cfg, query_chunk=qc,
+                                    scan_unroll=scan_unroll)
+            return metrics["ce"]
+
+        jit_fn = jax.jit(prefill, in_shardings=(p_shard, b_shard))
+        return Cell(jit_fn, (params_a, batch_a),
+                    {"kind": "prefill",
+                     "tokens": spec["batch"] * spec["seq"],
+                     "scanned_layers": n_scanned})
+
+    # Decode: one token against a seq_len cache.
+    batch, seq = spec["batch"], spec["seq"]
+    caches_a = tf.abstract_cache(cfg, batch, seq)
+    c_specs = shard_lib.lm_cache_spec_tree(caches_a, cfg, mesh, batch)
+    c_shard = shard_lib.to_shardings(c_specs, mesh)
+    tok_spec = shard_lib.lm_serve_token_spec(mesh, batch)
+    tok_a = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos_a = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def step(params, caches, tokens, pos):
+        return tf.serve_step(params, caches, tokens, pos, cfg)
+
+    jit_fn = jax.jit(
+        step,
+        in_shardings=(p_shard, c_shard,
+                      shard_lib.to_shardings(tok_spec, mesh),
+                      shard_lib.to_shardings(P(), mesh)),
+        donate_argnums=(1,))
+    return Cell(jit_fn, (params_a, caches_a, tok_a, pos_a),
+                {"kind": "decode", "tokens": batch})
+
+
+# ---------------------------------------------------------------------------
+# GNN cells.
+# ---------------------------------------------------------------------------
+
+def _gnn_cell(arch: str, shape_name: str, mesh: Mesh) -> Cell:
+    cfg = get_arch(arch).config
+    spec = shp.GNN_SHAPES[shape_name]
+    n_dev = int(np_prod(mesh.devices.shape))
+    replicate = shape_name == "full_graph_sm"
+
+    if spec["kind"] == "full":
+        n = spec["n"] if replicate else shard_lib.pad_to_multiple(
+            spec["n"], n_dev_fs(mesh))
+        e = spec["e"] if replicate else shard_lib.pad_to_multiple(
+            spec["e"], n_dev_fs(mesh))
+        batch_a = data_lib.gnn_full_batch_spec(cfg, n, e, spec["d_feat"],
+                                               spec["classes"])
+    elif spec["kind"] == "sampled":
+        batch_a = data_lib.gnn_sampled_batch_spec(
+            cfg, spec["batch_nodes"], spec["fanout"], spec["d_feat"],
+            spec["classes"])
+    else:  # batched molecules
+        batch_a = data_lib.gnn_molecule_batch_spec(
+            cfg, spec["n"], spec["e"], spec["batch"], spec["d_feat"],
+            spec["classes"])
+
+    d_in = spec["d_feat"]
+    params_a = _abstract(
+        functools.partial(init_gnn_params, cfg=cfg, d_in=d_in,
+                          num_classes=spec["classes"]), jax.random.key(0))
+    p_specs = shard_lib.gnn_param_spec_tree(params_a)
+    p_shard = shard_lib.to_shardings(p_specs, mesh)
+    b_specs = shard_lib.gnn_batch_spec_tree(batch_a, mesh,
+                                            replicate=replicate)
+    b_shard = shard_lib.to_shardings(b_specs, mesh)
+    opt_a = _abstract(adamw_init, params_a)
+    o_specs = type(opt_a)(step=P(), mu=p_specs, nu=p_specs)
+    o_shard = shard_lib.to_shardings(o_specs, mesh)
+    step = _train_step_fn(gnn_loss, cfg)
+    jit_fn = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                     donate_argnums=(0, 1))
+    return Cell(jit_fn, (params_a, opt_a, batch_a),
+                {"kind": "train", "edges": spec.get("e", 0)})
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells.
+# ---------------------------------------------------------------------------
+
+def _fm_cell(arch: str, shape_name: str, mesh: Mesh) -> Cell:
+    cfg = get_arch(arch).config
+    spec = shp.RECSYS_SHAPES[shape_name]
+    params_a = _abstract(functools.partial(init_fm_params, cfg=cfg),
+                         jax.random.key(0))
+    p_specs = shard_lib.fm_param_spec_tree(params_a, mesh)
+    p_shard = shard_lib.to_shardings(p_specs, mesh)
+
+    if spec["kind"] == "train":
+        batch_a = data_lib.fm_batch_spec(cfg, spec["batch"])
+        b_shard = shard_lib.to_shardings(
+            shard_lib.fm_batch_spec_tree(batch_a, mesh), mesh)
+        opt_a = _abstract(adamw_init, params_a)
+        o_specs = type(opt_a)(step=P(), mu=p_specs, nu=p_specs)
+        o_shard = shard_lib.to_shardings(o_specs, mesh)
+        step = _train_step_fn(fm_loss, cfg)
+        jit_fn = jax.jit(step, in_shardings=(p_shard, o_shard, b_shard),
+                         donate_argnums=(0, 1))
+        return Cell(jit_fn, (params_a, opt_a, batch_a), {"kind": "train"})
+
+    if spec["kind"] == "serve":
+        batch_a = data_lib.fm_batch_spec(cfg, spec["batch"])
+        batch_a.pop("labels")
+        b_shard = shard_lib.to_shardings(
+            shard_lib.fm_batch_spec_tree(batch_a, mesh), mesh)
+
+        def serve(params, batch):
+            return fm_forward(params, batch, cfg)
+
+        jit_fn = jax.jit(serve, in_shardings=(p_shard, b_shard))
+        return Cell(jit_fn, (params_a, batch_a), {"kind": "serve"})
+
+    # retrieval: one query scored against C candidates.
+    c = spec["candidates"]
+    fs = shard_lib.fsdp_axes(mesh)
+    batch_a = data_lib.fm_batch_spec(cfg, spec["batch"])
+    batch_a.pop("labels")
+    b_shard = shard_lib.to_shardings(
+        shard_lib.fm_batch_spec_tree(batch_a, mesh), mesh)
+    cand_a = jax.ShapeDtypeStruct((c, cfg.embed_dim + 0), jnp.float32)
+    cand_shard = shard_lib.to_shardings(P(fs, None), mesh)
+
+    def retrieve(params, batch, cand):
+        u = fm_user_vector(params, batch, cfg)
+        return retrieval_scores(u, cand)
+
+    jit_fn = jax.jit(retrieve, in_shardings=(p_shard, b_shard, cand_shard))
+    return Cell(jit_fn, (params_a, batch_a, cand_a), {"kind": "retrieval"})
+
+
+# ---------------------------------------------------------------------------
+# Dispatch.
+# ---------------------------------------------------------------------------
+
+def np_prod(t):
+    out = 1
+    for x in t:
+        out *= int(x)
+    return out
+
+
+def n_dev_fs(mesh: Mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def _mst_cell(shape_name: str, mesh: Mesh) -> Cell:
+    """The paper's own workload on the production mesh: edge-sharded
+    distributed Borůvka (extra roofline row, beyond the 40 assigned cells)."""
+    from repro.core.distributed_mst import distributed_msf
+    from repro.core.types import Graph
+
+    name_to_cfg = {
+        "graph_1m_3": (1_000_000, 1_500_000),
+        "graph_1m_9": (1_000_000, 4_500_000),
+        "graph_100k_9": (100_000, 450_000),
+    }
+    v, e = name_to_cfg[shape_name]
+
+    def run(src, dst, weight):
+        r = distributed_msf(Graph(src, dst, weight), num_nodes=v,
+                            mesh=mesh, axis="data", variant="cas")
+        return r.total_weight, r.num_rounds, r.mst_mask
+
+    args = (jax.ShapeDtypeStruct((e,), jnp.int32),
+            jax.ShapeDtypeStruct((e,), jnp.int32),
+            jax.ShapeDtypeStruct((e,), jnp.float32))
+    repl = shard_lib.to_shardings(P(), mesh)
+    jit_fn = jax.jit(run, in_shardings=(repl, repl, repl))
+    return Cell(jit_fn, args, {"kind": "mst", "edges": e, "nodes": v})
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               scan_unroll: int = 1,
+               overrides: Dict[str, Any] = None) -> Cell:
+    if arch == "mst-boruvka":
+        return _mst_cell(shape_name, mesh)
+    family = get_arch(arch).family
+    if family == "lm":
+        return _lm_cell(arch, shape_name, mesh, scan_unroll=scan_unroll,
+                        overrides=overrides)
+    if family == "gnn":
+        return _gnn_cell(arch, shape_name, mesh)
+    return _fm_cell(arch, shape_name, mesh)

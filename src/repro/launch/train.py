@@ -1,0 +1,64 @@
+"""Production training launcher: ``--arch <id>`` + family-appropriate data.
+
+Single-host entry point; on a real TPU slice the same step functions lower
+through launch/steps.py with the production mesh shardings (see dryrun.py).
+Checkpoint/restart is on by default - kill and relaunch to resume.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --smoke --steps 50 --ckpt-dir artifacts/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.registry import ARCHS, get_arch
+from repro.train import data as data_lib
+from repro.train.train_loop import run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    entry = get_arch(args.arch)
+    cfg = entry.smoke if args.smoke else entry.config
+
+    if entry.family == "lm":
+        from repro.models.transformer import init_lm_params, lm_loss
+        init_fn = lambda k: init_lm_params(k, cfg)
+        loss_fn = lm_loss
+        batch_fn = lambda k: data_lib.lm_batch(cfg, args.batch, args.seq, k)
+    elif entry.family == "gnn":
+        from repro.models.gnn import gnn_loss, init_gnn_params
+        d_feat, classes = 32, 8
+        init_fn = lambda k: init_gnn_params(k, cfg, d_in=d_feat,
+                                            num_classes=classes)
+        loss_fn = gnn_loss
+        batch_fn = lambda k: data_lib.gnn_full_batch(
+            cfg, n=512, e=2048, d_feat=d_feat, classes=classes, key=k)
+    else:
+        from repro.models.recsys import fm_loss, init_fm_params
+        init_fn = lambda k: init_fm_params(k, cfg)
+        loss_fn = fm_loss
+        batch_fn = lambda k: data_lib.fm_batch(cfg, args.batch, k)
+
+    params, metrics = run_training(
+        cfg=cfg, init_params_fn=init_fn, loss_fn=loss_fn,
+        batch_fn=batch_fn, num_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, lr=args.lr)
+    print(f"[launch.train] {args.arch} final metrics: {metrics}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+"""Attention: GQA (+ sliding window, logit softcap) and MLA (DeepSeek-V2).
+
+One fp32-accumulating core handles full/causal/windowed masks, grouped KV
+heads without materializing repeated K/V, optional Gemma-2 soft-capping, and
+optional query chunking (lazy-flash: blocked queries against full KV) so 32k
+prefill never materializes an (S, S) score tensor.  The Pallas flash kernel
+in ``repro.kernels.flash_attention`` is the TPU-optimal drop-in for this
+core; this is the reference/trainable path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models.layers import apply_rope, rms_norm, rope_tables, softcap
+from repro.models.shard_hints import hint
+
+NEG_INF = -2.0e38
+
+
+class KVCache(NamedTuple):
+    """Per-layer decode cache.
+
+    GQA: k/v are (B, S_max, Hkv, hd).  MLA: k holds the latent
+    (B, S_max, kv_lora_rank) and v holds the shared rope key
+    (B, S_max, qk_rope_dim) - the compressed cache that is MLA's point.
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product with grouped KV heads.
+# ---------------------------------------------------------------------------
+
+def _mask(q_pos, k_pos, *, causal, window, use_window, kv_len):
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        win = k_pos[None, :] > (q_pos[:, None] - window)
+        if use_window is None:
+            ok &= win
+        else:
+            ok &= jnp.where(use_window, win, True)
+    return ok, kv_len  # kv_len applied with batch dim by caller
+
+
+def attention_core(q, k, v, *, scale: float, q_offset=0,
+                   causal: bool = True, window: Optional[int] = None,
+                   use_window=None, cap: Optional[float] = None,
+                   kv_len=None, kv_mask=None,
+                   query_chunk: Optional[int] = None):
+    """q: (B,Sq,H,hd) - k/v: (B,Skv,Hkv,hd[v]). Returns (B,Sq,H,hd_v).
+
+    KV heads are expanded to the full H before the contraction: with heads
+    tensor-parallel this costs nothing per device (each holds only its local
+    heads) and keeps GSPMD sharding intact - a grouped (hkv, g) reshape
+    breaks head-axis propagation and triggers involuntary replication.
+
+    ``kv_len``: (B,) valid cache length; ``kv_mask``: (Skv,) or (B,Skv)
+    explicit validity (ring buffers)."""
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = hint(k, "dp", None, "tp", None)
+        v = hint(v, "dp", None, "tp", None)
+    q = q * scale
+    k_pos = jnp.arange(skv, dtype=jnp.int32)
+
+    def block(q_blk, q_pos):
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k,
+                            preferred_element_type=jnp.float32)
+        if cap is not None:
+            scores = softcap(scores, cap)
+        ok, _ = _mask(q_pos, k_pos, causal=causal, window=window,
+                      use_window=use_window, kv_len=None)
+        ok = ok[None, None]
+        if kv_len is not None:
+            valid = k_pos[None, :] < jnp.reshape(kv_len, (-1, 1))  # (B,Skv)
+            ok = ok & valid[:, None, None, :]
+        if kv_mask is not None:
+            m = kv_mask if kv_mask.ndim == 2 else kv_mask[None, :]
+            ok = ok & m[:, None, None, :]
+        scores = jnp.where(ok, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    if query_chunk is None or sq <= query_chunk:
+        q_pos = q_offset + jnp.arange(sq, dtype=jnp.int32)
+        return block(q, q_pos)
+
+    assert sq % query_chunk == 0, (sq, query_chunk)
+    nc = sq // query_chunk
+    q_c = q.reshape(b, nc, query_chunk, h, hd).swapaxes(0, 1)
+    pos_c = (q_offset
+             + jnp.arange(sq, dtype=jnp.int32).reshape(nc, query_chunk))
+
+    def scan_fn(_, inp):
+        qb, qp = inp
+        return None, hint(block(qb, qp), "dp", None, "tp", None,
+                          fallback=("dp", "tp", None, None))
+
+    _, out = jax.lax.scan(scan_fn, None, (q_c, pos_c))
+    return out.swapaxes(0, 1).reshape(b, sq, h, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA layer (LLaMA / Gemma-2 family).
+# ---------------------------------------------------------------------------
+
+def gqa_forward(p, x, cfg: LMConfig, *, positions, is_local=None,
+                cache: Optional[KVCache] = None, cache_pos=None,
+                query_chunk: Optional[int] = None
+                ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """One attention sublayer. ``cache`` set => single-token decode."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    # Heads shard over model; archs whose head count doesn't divide the
+    # model axis (56 over 16) fall back to query-SEQUENCE sharding, which
+    # keeps the score tensor partitioned (EXPERIMENTS.md §Perf arctic it.3).
+    q = hint((x @ p["wq"]).reshape(b, s, h, hd), "dp", None, "tp", None,
+             fallback=("dp", "tp", None, None))
+    k = hint((x @ p["wk"]).reshape(b, s, hkv, hd), "dp", None, "tp", None)
+    v = hint((x @ p["wv"]).reshape(b, s, hkv, hd), "dp", None, "tp", None)
+    cos, sin = rope_tables(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    scale = (cfg.query_scale if cfg.query_scale is not None
+             else hd ** -0.5)
+
+    if cache is None:
+        out = attention_core(
+            q, k, v, scale=scale, causal=True,
+            window=cfg.sliding_window, use_window=is_local,
+            cap=cfg.attn_softcap, query_chunk=query_chunk)
+        out = hint(out, "dp", None, "tp", None)
+        new_cache = None
+    else:
+        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, cache_pos, 0, 0))
+        new_cache = KVCache(ck, cv)
+        kv_len = cache_pos + s
+        # Window masking composes with the cache-length mask.
+        out = attention_core(
+            q, ck, cv, scale=scale, q_offset=cache_pos, causal=False,
+            window=cfg.sliding_window, use_window=is_local,
+            cap=cfg.attn_softcap, kv_len=jnp.full((b,), kv_len))
+    return out.reshape(b, s, h * hd) @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA layer (DeepSeek-V2 multi-head latent attention).
+# ---------------------------------------------------------------------------
+
+def mla_forward(p, x, cfg: LMConfig, *, positions,
+                cache: Optional[KVCache] = None, cache_pos=None,
+                query_chunk: Optional[int] = None
+                ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    nope, rope_d, vd, r = (cfg.qk_nope_dim, cfg.qk_rope_dim,
+                           cfg.v_head_dim, cfg.kv_lora_rank)
+    q = hint((x @ p["wq"]).reshape(b, s, h, nope + rope_d),
+             "dp", None, "tp", None)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = rope_tables(positions, rope_d, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    kv_a = x @ p["wkv_a"]                      # (B,S,R+rope)
+    latent = rms_norm(kv_a[..., :r], p["kv_norm"])
+    k_rope = kv_a[..., r:][:, :, None, :]      # single shared rope head
+    k_rope = apply_rope(k_rope, cos, sin)[:, :, 0]
+
+    scale = (nope + rope_d) ** -0.5
+
+    if cache is None:
+        # Prefill: materialize per-head K/V from the latent.
+        k_nope = hint(jnp.einsum("bsr,rhn->bshn", latent, p["wk_b"]),
+                      "dp", None, "tp", None)
+        v = hint(jnp.einsum("bsr,rhv->bshv", latent, p["wv_b"]),
+                 "dp", None, "tp", None)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (b, s, h, rope_d))], axis=-1)
+        qc = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = attention_core(qc, k, v, scale=scale, causal=True,
+                             query_chunk=query_chunk)
+        out = hint(out, "dp", None, "tp", None)
+        new_cache = None
+    else:
+        # Absorbed decode: score and read directly in latent space - the
+        # point of MLA: the cache is (R + rope_d) per token, not 2*H*hd.
+        c_lat = jax.lax.dynamic_update_slice(cache.k, latent,
+                                             (0, cache_pos, 0))
+        c_rope = jax.lax.dynamic_update_slice(cache.v, k_rope,
+                                              (0, cache_pos, 0))
+        new_cache = KVCache(c_lat, c_rope)
+        q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope, p["wk_b"])
+        scores = (jnp.einsum("bqhr,bkr->bhqk", q_eff * scale, c_lat,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bqhp,bkp->bhqk", q_rope * scale, c_rope,
+                               preferred_element_type=jnp.float32))
+        k_pos = jnp.arange(c_lat.shape[1], dtype=jnp.int32)
+        ok = k_pos[None, None, None, :] < (cache_pos + s)
+        scores = jnp.where(ok, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(c_lat.dtype)
+        ctx = jnp.einsum("bhqk,bkr->bqhr", probs, c_lat)
+        out = jnp.einsum("bqhr,rhv->bqhv", ctx, p["wv_b"])
+    return out.reshape(b, s, h * vd) @ p["wo"], new_cache

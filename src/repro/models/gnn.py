@@ -1,0 +1,347 @@
+"""GNN zoo: PNA, GIN, EGNN, GAT — message passing via segment ops.
+
+JAX sparse is BCOO-only, so message passing is built directly on
+``jax.ops.segment_sum`` / ``segment_max`` over an edge-index (DESIGN.md §6):
+gather source features -> transform -> scatter-reduce at destinations.
+This IS the system's SpMM/SDDMM layer; the Pallas ``gnn_spmm`` kernel is the
+TPU-tiled version of the same contract.
+
+Batch format (dict):
+  node_feat (N, d_in) - edge_src/edge_dst (E,) int32 - edge_mask (E,) bool
+  labels (N,) or (G,) - optional: coords (N,3) [EGNN], graph_ids (N,) +
+  num_graphs [batched small graphs], node_mask (N,) [loss masking].
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.layers import dense_init, split_keys
+
+
+# ---------------------------------------------------------------------------
+# Segment primitives.
+# ---------------------------------------------------------------------------
+
+def seg_sum(msg, dst, n):
+    return jax.ops.segment_sum(msg, dst, num_segments=n)
+
+
+def seg_max(msg, dst, n):
+    return jax.ops.segment_max(msg, dst, num_segments=n)
+
+
+def seg_min(msg, dst, n):
+    return jax.ops.segment_min(msg, dst, num_segments=n)
+
+
+def seg_mean(msg, dst, n, deg=None):
+    s = seg_sum(msg, dst, n)
+    if deg is None:
+        deg = seg_sum(jnp.ones((msg.shape[0], 1), msg.dtype), dst, n)
+    return s / jnp.maximum(deg, 1.0)
+
+
+def seg_softmax(scores, dst, n):
+    """Numerically-stable softmax over incoming edges per destination."""
+    m = seg_max(scores, dst, n)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    ex = jnp.exp(scores - m[dst])
+    z = seg_sum(ex, dst, n)
+    return ex / jnp.maximum(z[dst], 1e-9)
+
+
+def degrees(dst, n, e_mask=None):
+    ones = jnp.ones((dst.shape[0], 1), jnp.float32)
+    if e_mask is not None:
+        ones = ones * e_mask[:, None]
+    return seg_sum(ones, dst, n)
+
+
+def _mlp(key, dims, dtype=jnp.float32):
+    ks = split_keys(key, len(dims) - 1)
+    return [{"w": dense_init(k, (a, b), dtype=dtype),
+             "b": jnp.zeros((b,), dtype)}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def _apply_mlp(layers, x, act=jax.nn.relu, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Layers.
+# ---------------------------------------------------------------------------
+
+def gin_layer(p, h, src, dst, e_mask, n):
+    msg = h[src]
+    if e_mask is not None:
+        msg = msg * e_mask[:, None]
+    agg = seg_sum(msg, dst, n)
+    return _apply_mlp(p["mlp"], (1.0 + p["eps"]) * h + agg)
+
+
+def gat_layer(p, h, src, dst, e_mask, n, *, heads, out_per_head,
+              concat=True):
+    wh = (h @ p["w"]).reshape(-1, heads, out_per_head)
+    a_src = jnp.einsum("nhd,hd->nh", wh, p["a_src"])
+    a_dst = jnp.einsum("nhd,hd->nh", wh, p["a_dst"])
+    e = jax.nn.leaky_relu(a_src[src] + a_dst[dst], 0.2)     # (E, H)
+    if e_mask is not None:
+        e = jnp.where(e_mask[:, None], e, -1e30)
+    alpha = seg_softmax(e, dst, n)                          # (E, H)
+    msg = wh[src] * alpha[..., None]
+    out = seg_sum(msg.reshape(-1, heads * out_per_head), dst, n)
+    if not concat:
+        out = out.reshape(-1, heads, out_per_head).mean(1)
+    return out
+
+
+def pna_layer(p, h, src, dst, e_mask, n, *, aggregators, scalers, avg_deg):
+    msg = _apply_mlp(p["pre"], jnp.concatenate([h[src], h[dst]], -1))
+    if e_mask is not None:
+        msg = msg * e_mask[:, None]
+    deg = degrees(dst, n, e_mask)
+    outs = []
+    mean = seg_mean(msg, dst, n, deg)
+    for a in aggregators:
+        if a == "mean":
+            agg = mean
+        elif a == "max":
+            agg = jnp.where(deg > 0, seg_max(msg, dst, n), 0.0)
+        elif a == "min":
+            agg = jnp.where(deg > 0, seg_min(msg, dst, n), 0.0)
+        elif a == "std":
+            sq = seg_mean(jnp.square(msg), dst, n, deg)
+            agg = jnp.sqrt(jnp.maximum(sq - jnp.square(mean), 0.0) + 1e-5)
+        elif a == "sum":
+            agg = seg_sum(msg, dst, n)
+        else:
+            raise ValueError(a)
+        outs.append(agg)
+    agg = jnp.concatenate(outs, -1)                          # (N, A*d)
+    logd = jnp.log(deg + 1.0)
+    scaled = []
+    for s in scalers:
+        if s == "identity":
+            scaled.append(agg)
+        elif s == "amplification":
+            scaled.append(agg * (logd / avg_deg))
+        elif s == "attenuation":
+            scaled.append(agg * (avg_deg / jnp.maximum(logd, 1e-5)))
+        else:
+            raise ValueError(s)
+    out = jnp.concatenate(scaled, -1)                        # (N, S*A*d)
+    return _apply_mlp(p["post"], jnp.concatenate([h, out], -1))
+
+
+def egnn_layer(p, h, x, src, dst, e_mask, n):
+    """E(n)-equivariant layer: invariant messages, equivariant coord update."""
+    rel = x[src] - x[dst]                                    # (E, 3)
+    d2 = jnp.sum(jnp.square(rel), -1, keepdims=True)
+    m = _apply_mlp(p["phi_e"], jnp.concatenate([h[src], h[dst], d2], -1),
+                   final_act=True)
+    if e_mask is not None:
+        m = m * e_mask[:, None]
+    w_x = _apply_mlp(p["phi_x"], m)                          # (E, 1)
+    deg = degrees(dst, n, e_mask)
+    x_new = x + seg_sum(rel * w_x, dst, n) / jnp.maximum(deg, 1.0)
+    agg = seg_sum(m, dst, n)
+    h_new = h + _apply_mlp(p["phi_h"], jnp.concatenate([h, agg], -1))
+    return h_new, x_new
+
+
+# ---------------------------------------------------------------------------
+# Full models.
+# ---------------------------------------------------------------------------
+
+def init_gnn_params(key, cfg: GNNConfig, d_in: int,
+                    num_classes: int) -> Dict[str, Any]:
+    ks = iter(split_keys(key, 4 + 4 * cfg.num_layers))
+    d = cfg.d_hidden
+    p: Dict[str, Any] = {"layers": []}
+    if cfg.kind == "gat":
+        # layer widths: d_in -> heads*d (concat) -> ... -> classes (avg)
+        for i in range(cfg.num_layers):
+            last = i == cfg.num_layers - 1
+            ind = d_in if i == 0 else cfg.num_heads * d
+            outd = num_classes if last else d
+            p["layers"].append({
+                "w": dense_init(next(ks), (ind, cfg.num_heads * outd),
+                                dtype=jnp.float32),
+                "a_src": dense_init(next(ks), (cfg.num_heads, outd),
+                                    dtype=jnp.float32),
+                "a_dst": dense_init(next(ks), (cfg.num_heads, outd),
+                                    dtype=jnp.float32),
+            })
+        return p
+    if cfg.kind == "gin":
+        for i in range(cfg.num_layers):
+            ind = d_in if i == 0 else d
+            p["layers"].append({
+                "eps": jnp.zeros(()) if cfg.learn_eps else 0.0,
+                "mlp": _mlp(next(ks), (ind, d, d)),
+            })
+        p["readout"] = _mlp(next(ks), (d, num_classes))
+        return p
+    if cfg.kind == "pna":
+        a, s = len(cfg.aggregators), len(cfg.scalers)
+        for i in range(cfg.num_layers):
+            ind = d_in if i == 0 else d
+            p["layers"].append({
+                "pre": _mlp(next(ks), (2 * ind, d)),
+                "post": _mlp(next(ks), (ind + a * s * d, d)),
+            })
+        p["readout"] = _mlp(next(ks), (d, num_classes))
+        return p
+    if cfg.kind == "egnn":
+        p["embed"] = _mlp(next(ks), (d_in, d))
+        for i in range(cfg.num_layers):
+            p["layers"].append({
+                "phi_e": _mlp(next(ks), (2 * d + 1, d, d)),
+                "phi_x": _mlp(next(ks), (d, 1)),
+                "phi_h": _mlp(next(ks), (2 * d, d, d)),
+            })
+        p["readout"] = _mlp(next(ks), (d, num_classes))
+        return p
+    raise ValueError(cfg.kind)
+
+
+def gnn_forward(params, batch: Dict[str, Any], cfg: GNNConfig,
+                avg_deg: float = 2.0) -> jnp.ndarray:
+    """Returns node logits (N, C) - or graph logits (G, C) with graph_ids."""
+    h = batch["node_feat"].astype(jnp.float32)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    e_mask = batch.get("edge_mask")
+    n = h.shape[0]
+    if cfg.kind == "gat":
+        for i, p in enumerate(params["layers"]):
+            last = i == len(params["layers"]) - 1
+            outd = p["a_src"].shape[1]
+            h = gat_layer(p, h, src, dst, e_mask, n, heads=cfg.num_heads,
+                          out_per_head=outd, concat=not last)
+            if not last:
+                h = jax.nn.elu(h)
+        logits = h
+    elif cfg.kind == "gin":
+        for p in params["layers"]:
+            h = gin_layer(p, h, src, dst, e_mask, n)
+        logits = _apply_mlp(params["readout"], h)
+    elif cfg.kind == "pna":
+        for p in params["layers"]:
+            h = pna_layer(p, h, src, dst, e_mask, n,
+                          aggregators=cfg.aggregators, scalers=cfg.scalers,
+                          avg_deg=avg_deg)
+        logits = _apply_mlp(params["readout"], h)
+    elif cfg.kind == "egnn":
+        x = batch["coords"].astype(jnp.float32)
+        h = _apply_mlp(params["embed"], h)
+        for p in params["layers"]:
+            h, x = egnn_layer(p, h, x, src, dst, e_mask, n)
+        logits = _apply_mlp(params["readout"], h)
+    else:
+        raise ValueError(cfg.kind)
+
+    if "graph_ids" in batch:  # batched small graphs: mean-pool per graph
+        g = batch["labels"].shape[0]  # static: one label per graph
+        pooled = seg_mean(logits, batch["graph_ids"], g)
+        return pooled
+    return logits
+
+
+def gnn_loss(params, batch, cfg: GNNConfig) -> Tuple[jnp.ndarray, Dict]:
+    logits = gnn_forward(params, batch, cfg)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    ce = logz - gold
+    mask = batch.get("node_mask")
+    if mask is not None and logits.shape[0] == mask.shape[0]:
+        ce = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        ce = jnp.mean(ce)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return ce, {"acc": acc}
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical GNN with Borůvka pooling - the paper's technique as a layer.
+# ---------------------------------------------------------------------------
+
+def init_hierarchical_params(key, cfg: GNNConfig, d_in: int,
+                             num_classes: int) -> Dict[str, Any]:
+    """Fine-level GNN -> Borůvka coarsen -> coarse-level GNN -> readout."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    fine = init_gnn_params(k1, cfg, d_in, num_classes=cfg.d_hidden)
+    coarse = init_gnn_params(k2, cfg, cfg.d_hidden,
+                             num_classes=cfg.d_hidden)
+    return {"fine": fine, "coarse": coarse,
+            "readout": _mlp(k3, (2 * cfg.d_hidden, num_classes))}
+
+
+def hierarchical_forward(params, batch: Dict[str, Any], cfg: GNNConfig,
+                         num_rounds: int = 1) -> jnp.ndarray:
+    """Node logits via a fine pass + a Borůvka-pooled coarse pass.
+
+    Edge weights for the coarsening are feature distances from the fine
+    embedding, so the pooling is learned-locality-aware; the coarse result
+    is broadcast back through the cluster assignment (classic
+    Graclus/DiffPool-style hierarchy, built on core/coarsen.py).
+    """
+    from repro.core.coarsen import boruvka_coarsen, coarsen_features
+    from repro.core.types import Graph
+
+    n = batch["node_feat"].shape[0]
+    h_fine = gnn_forward(params["fine"], batch, cfg)         # (N, H)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    dist = jnp.linalg.norm(h_fine[src] - h_fine[dst], axis=-1)
+    e_mask = batch.get("edge_mask")
+    if e_mask is not None:
+        # masked edges must not be merged along: give them +inf-ish weight
+        dist = jnp.where(e_mask, dist, 1e30)
+    # Cluster assignment is discrete (straight-through by construction):
+    # gradients flow through the pooled FEATURES, not the MST itself.
+    coarsening = boruvka_coarsen(
+        Graph(src, dst, jax.lax.stop_gradient(dist)), num_nodes=n,
+        num_rounds=num_rounds)
+    pooled = coarsen_features(h_fine, coarsening, num_clusters=n)  # (N, H)
+    cu = coarsening.cluster[src]
+    cv = coarsening.cluster[dst]
+    coarse_batch = {
+        "node_feat": pooled,
+        "edge_src": cu,
+        "edge_dst": cv,
+        "edge_mask": (cu != cv) if e_mask is None else (cu != cv) & e_mask,
+    }
+    if cfg.kind == "egnn":
+        coarse_batch["coords"] = coarsen_features(
+            batch["coords"], coarsening, num_clusters=n)
+    h_coarse = gnn_forward(params["coarse"], coarse_batch, cfg)  # (N, H)
+    h = jnp.concatenate([h_fine, h_coarse[coarsening.cluster]], -1)
+    logits = _apply_mlp(params["readout"], h)
+    if "graph_ids" in batch:
+        g = batch["labels"].shape[0]
+        return seg_mean(logits, batch["graph_ids"], g)
+    return logits
+
+
+def hierarchical_loss(params, batch, cfg: GNNConfig):
+    logits = hierarchical_forward(params, batch, cfg)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    ce = logz - gold
+    mask = batch.get("node_mask")
+    if mask is not None and logits.shape[0] == mask.shape[0]:
+        ce = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        ce = jnp.mean(ce)
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return ce, {"acc": acc}

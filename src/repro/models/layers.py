@@ -1,0 +1,63 @@
+"""Shared neural-net layers (pure functional JAX, no flax)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray,
+             eps: float = 1e-6, plus_one: bool = False) -> jnp.ndarray:
+    """RMSNorm in fp32 accumulation. ``plus_one``: Gemma-style (1+scale)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    g = scale.astype(jnp.float32)
+    if plus_one:
+        g = 1.0 + g
+    return (y * g).astype(dtype)
+
+
+def rope_tables(positions: jnp.ndarray, dim: int,
+                theta: float = 10_000.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(..., dim/2) cos/sin tables for the given positions."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray,
+               sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, D) rotated pairwise; cos/sin: (S, D/2) or (..., S, D/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    # Broadcast tables over head axis.
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gated_mlp(x, w_gate, w_up, w_down, act=jax.nn.silu):
+    """SwiGLU/GeGLU feed-forward (LLaMA / Gemma style)."""
+    from repro.models.shard_hints import hint
+    g = act(hint(x @ w_gate, "dp", None, "tp"))
+    return (g * hint(x @ w_up, "dp", None, "tp")) @ w_down
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    return cap * jnp.tanh(x / cap)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[in_axis]
+    std = (1.0 / fan_in) ** 0.5
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

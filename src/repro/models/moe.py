@@ -1,0 +1,145 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch.
+
+Dispatch is the TPU-native sort-based scheme (MegaBlocks/GShard style,
+shape-stable for jit):
+
+  1. router logits -> top-k experts + renormalized gates per token;
+  2. flatten (token, k) assignments, sort by expert id;
+  3. position-within-expert via a cumulative count; tokens beyond the expert
+     capacity C = ceil(T * top_k / E * capacity_factor) are dropped (standard)
+  4. scatter tokens into an (E, C, D) buffer, apply the expert MLPs with one
+     batched einsum over stacked expert weights (E, D, F) - this is the op
+     expert-parallelism shards on the `model` axis, producing the expected
+     all-to-all in the dry-run HLO;
+  5. scatter-add results back weighted by gates.
+
+Aux losses: load-balancing (Switch) + router z-loss, returned for logging.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import gated_mlp
+from repro.models.shard_hints import hint
+
+
+def moe_capacity(cfg: MoEConfig, num_tokens: int) -> int:
+    c = int(num_tokens * cfg.top_k * cfg.capacity_factor
+            / cfg.num_experts + 0.999)
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8 lanes
+
+
+def moe_ffn(p, x: jnp.ndarray, cfg: MoEConfig
+            ) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, D) -> (B, S, D), aux metrics dict."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    cap = moe_capacity(cfg, t)
+    xt = x.reshape(t, d)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)        # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_expert = expert_ids.reshape(-1)                   # (T*k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+
+    # Sort assignments by expert; position-within-expert via segment start.
+    sort_idx = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[sort_idx]
+    pos_in_sorted = jnp.arange(t * k, dtype=jnp.int32)
+    seg_start = jnp.full((e,), t * k, jnp.int32).at[sorted_expert].min(
+        pos_in_sorted, mode="drop")
+    # seg_start[e] = first sorted slot of expert e; empty experts unused.
+    pos_in_expert = pos_in_sorted - seg_start[sorted_expert]
+    keep = pos_in_expert < cap
+    tok_of_slot = flat_token[sort_idx]
+
+    if cfg.dispatch == "scatter":
+        # Baseline: scatter tokens into the (E, C, D) buffer.  GSPMD lowers
+        # the scatter into full-buffer all-reduces - the collective-bound
+        # baseline of EXPERIMENTS.md §Perf.
+        buf = jnp.zeros((e, cap, d), x.dtype)
+        scat_e = jnp.where(keep, sorted_expert, e)  # OOB -> dropped
+        scat_c = jnp.where(keep, pos_in_expert, 0)
+        buf = buf.at[scat_e, scat_c].set(xt[tok_of_slot], mode="drop")
+    else:
+        # Gather-only dispatch: slot (e, c) holds sorted assignment
+        # seg_start[e] + c - a pure gather GSPMD turns into all-to-all
+        # style resharding instead of scatter all-reduces.
+        count = jax.ops.segment_sum(jnp.ones_like(sorted_expert),
+                                    sorted_expert, num_segments=e)
+        pos = seg_start[:, None] + jnp.arange(cap, dtype=jnp.int32)[None]
+        valid = jnp.arange(cap, dtype=jnp.int32)[None] < count[:, None]
+        tok = tok_of_slot[jnp.clip(pos, 0, t * k - 1)]     # (E, C)
+        buf = jnp.where(valid[..., None], xt[tok], 0)
+    # Dispatch buffer lives expert-parallel (all-to-all happens here).
+    buf = hint(buf, "dp", None, None)
+
+    # Batched expert MLPs: (E,C,D)x(E,D,F) -> (E,C,F) -> (E,C,D).
+    hidden = jax.nn.silu(hint(
+        jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]), "dp", None, "tp"))
+    hidden = hidden * hint(
+        jnp.einsum("ecd,edf->ecf", buf, p["w_up"]), "dp", None, "tp")
+    expert_out = hint(jnp.einsum("ecf,efd->ecd", hidden, p["w_down"]),
+                      "dp", None, None)
+
+    if cfg.dispatch == "scatter":
+        # Combine: gather slot outputs, weight, scatter-add back to tokens.
+        slot_out = expert_out[jnp.where(keep, sorted_expert, 0),
+                              jnp.where(keep, pos_in_expert, 0)]
+        weighted = (slot_out * (flat_gate[sort_idx] * keep)[:, None]
+                    ).astype(x.dtype)
+        out = jnp.zeros((t, d), x.dtype).at[tok_of_slot].add(weighted)
+    else:
+        # Gather-only combine: assignment a sits at sorted position
+        # inv_order[a]; read its slot output and sum the k contributions
+        # per token - no scatter anywhere in the MoE layer.
+        inv_order = jnp.argsort(sort_idx, stable=True)     # (T*k,)
+        a_expert = flat_expert
+        a_pos = inv_order - seg_start[a_expert]
+        a_keep = a_pos < cap
+        slot_out = expert_out[a_expert, jnp.clip(a_pos, 0, cap - 1)]
+        contrib = (slot_out * (flat_gate * a_keep)[:, None]).astype(x.dtype)
+        out = contrib.reshape(t, k, d).sum(axis=1)
+        keep = a_keep  # for the dropped-fraction metric
+
+    # Aux losses (Switch LB + z-loss).
+    me = jnp.mean(probs, axis=0)                            # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = {
+        "lb_loss": e * jnp.sum(me * ce),
+        "z_loss": jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+        "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+    }
+    return out.reshape(b, s, d), aux
+
+
+def init_moe_params(key, d_model: int, cfg: MoEConfig, dtype, stack: int = 0):
+    """Expert weights stacked (E, D, F); optional leading layer-stack dim."""
+    from repro.models.layers import dense_init, split_keys
+
+    def shp(*dims):
+        return (stack, *dims) if stack else dims
+
+    ks = split_keys(key, 4)
+    fe = cfg.d_ff_expert
+    return {
+        "router": dense_init(ks[0], shp(d_model, cfg.num_experts),
+                             dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], shp(cfg.num_experts, d_model, fe),
+                             in_axis=-2, dtype=dtype),
+        "w_up": dense_init(ks[2], shp(cfg.num_experts, d_model, fe),
+                           in_axis=-2, dtype=dtype),
+        "w_down": dense_init(ks[3], shp(cfg.num_experts, fe, d_model),
+                             in_axis=-2, dtype=dtype),
+    }

@@ -1,0 +1,391 @@
+"""Decoder-only LM stack: scan-over-layers training graph, unrolled decode.
+
+Training/prefill lower through ``lax.scan`` over a stacked-layer pytree (one
+layer's HLO instance regardless of depth - essential for 80 dry-run compiles
+and the right structure at scale) with ``jax.checkpoint`` on the body.
+
+Decode (``serve_step``) unrolls layers in python so per-layer KV caches can
+have heterogeneous shapes: Gemma-2 local layers keep an O(window) ring
+buffer, global layers a full-length cache, and MLA layers the compressed
+latent cache - this is what makes ``long_500k`` feasible (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import attention as attn_mod
+from repro.models.attention import KVCache, attention_core, gqa_forward, \
+    mla_forward
+from repro.models.layers import (dense_init, gated_mlp, rms_norm, softcap,
+                                 split_keys)
+from repro.models.moe import init_moe_params, moe_ffn
+from repro.models.shard_hints import hint
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction.
+# ---------------------------------------------------------------------------
+
+def _attn_param_shapes(cfg: LMConfig) -> Dict[str, Tuple[int, ...]]:
+    d = cfg.d_model
+    if cfg.attn_kind == "mla":
+        nope, rp, vd, r = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                           cfg.kv_lora_rank)
+        return {
+            "wq": (d, cfg.num_heads * (nope + rp)),
+            "wkv_a": (d, r + rp),
+            "kv_norm": (r,),
+            "wk_b": (r, cfg.num_heads, nope),
+            "wv_b": (r, cfg.num_heads, vd),
+            "wo": (cfg.num_heads * vd, d),
+        }
+    return {
+        "wq": (d, cfg.num_heads * cfg.head_dim),
+        "wk": (d, cfg.num_kv_heads * cfg.head_dim),
+        "wv": (d, cfg.num_kv_heads * cfg.head_dim),
+        "wo": (cfg.num_heads * cfg.head_dim, d),
+    }
+
+
+def _layer_is_moe(cfg: LMConfig, layer_idx: int) -> bool:
+    return cfg.moe is not None and layer_idx >= cfg.first_k_dense
+
+
+def init_layer_params(key, cfg: LMConfig, *, moe_layer: bool,
+                      d_ff: Optional[int] = None, stack: int = 0):
+    """One transformer layer's params; ``stack`` adds a leading layer dim."""
+    dtype = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    d_ff = d_ff or cfg.d_ff
+
+    def shp(*dims):
+        return (stack, *dims) if stack else dims
+
+    keys = iter(split_keys(key, 16))
+    p: Dict[str, Any] = {}
+    for name, shape in _attn_param_shapes(cfg).items():
+        if name.endswith("norm"):
+            p[name] = jnp.ones(shp(*shape), jnp.float32)
+        else:
+            # fan-in = first non-stack axis of the weight
+            p[name] = dense_init(next(keys), shp(*shape),
+                                 in_axis=1 if stack else 0, dtype=dtype)
+    p["attn_norm"] = jnp.ones(shp(d), jnp.float32)
+    p["mlp_norm"] = jnp.ones(shp(d), jnp.float32)
+    if cfg.post_norms:
+        p["post_attn_norm"] = jnp.ones(shp(d), jnp.float32)
+        p["post_mlp_norm"] = jnp.ones(shp(d), jnp.float32)
+    if moe_layer:
+        p["moe"] = init_moe_params(next(keys), d, cfg.moe, dtype,
+                                   stack=stack)
+        if cfg.moe.num_shared_experts:
+            fs = cfg.moe.d_ff_shared or cfg.moe.d_ff_expert * \
+                cfg.moe.num_shared_experts
+            p["shared_gate"] = dense_init(next(keys), shp(d, fs), dtype=dtype)
+            p["shared_up"] = dense_init(next(keys), shp(d, fs), dtype=dtype)
+            p["shared_down"] = dense_init(next(keys), shp(fs, d), dtype=dtype)
+        if cfg.moe.dense_residual:
+            p["w_gate"] = dense_init(next(keys), shp(d, d_ff), dtype=dtype)
+            p["w_up"] = dense_init(next(keys), shp(d, d_ff), dtype=dtype)
+            p["w_down"] = dense_init(next(keys), shp(d_ff, d), dtype=dtype)
+    else:
+        p["w_gate"] = dense_init(next(keys), shp(d, d_ff), dtype=dtype)
+        p["w_up"] = dense_init(next(keys), shp(d, d_ff), dtype=dtype)
+        p["w_down"] = dense_init(next(keys), shp(d_ff, d), dtype=dtype)
+    return p
+
+
+def init_lm_params(key, cfg: LMConfig):
+    """Full model params: dense-prefix layers unrolled, rest stacked."""
+    dtype = jnp.dtype(cfg.dtype)
+    k_embed, k_prefix, k_stack = jax.random.split(key, 3)
+    n_prefix = cfg.first_k_dense if cfg.moe is not None else 0
+    n_stack = cfg.num_layers - n_prefix
+    params: Dict[str, Any] = {
+        "embed": dense_init(k_embed, (cfg.vocab_size, cfg.d_model),
+                            dtype=dtype),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": init_layer_params(
+            k_stack, cfg, moe_layer=cfg.moe is not None, stack=n_stack),
+    }
+    if n_prefix:
+        params["prefix_layers"] = [
+            init_layer_params(k, cfg, moe_layer=False,
+                              d_ff=cfg.d_ff_dense_first or cfg.d_ff)
+            for k in split_keys(k_prefix, n_prefix)
+        ]
+    return params
+
+
+def abstract_lm_params(cfg: LMConfig):
+    """ShapeDtypeStruct tree - no allocation; dry-run entry point."""
+    return jax.eval_shape(
+        lambda: init_lm_params(jax.random.key(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Layer application.
+# ---------------------------------------------------------------------------
+
+def _ffn(p, x, cfg: LMConfig):
+    """Dense / MoE / MoE+shared / MoE+dense-residual feed-forward."""
+    if "moe" in p:
+        out, aux = moe_ffn(p["moe"], x, cfg.moe)
+        if "shared_gate" in p:
+            out = out + gated_mlp(x, p["shared_gate"], p["shared_up"],
+                                  p["shared_down"])
+        if cfg.moe.dense_residual and "w_gate" in p:
+            out = out + gated_mlp(x, p["w_gate"], p["w_up"], p["w_down"])
+        return out, aux
+    return gated_mlp(x, p["w_gate"], p["w_up"], p["w_down"]), {}
+
+
+def apply_layer(p, x, cfg: LMConfig, *, positions, is_local=None,
+                cache: Optional[KVCache] = None, cache_pos=None,
+                query_chunk=None):
+    h = rms_norm(x, p["attn_norm"], plus_one=cfg.post_norms)
+    if cfg.attn_kind == "mla":
+        a, new_cache = mla_forward(p, h, cfg, positions=positions,
+                                   cache=cache, cache_pos=cache_pos,
+                                   query_chunk=query_chunk)
+    else:
+        a, new_cache = gqa_forward(p, h, cfg, positions=positions,
+                                   is_local=is_local, cache=cache,
+                                   cache_pos=cache_pos,
+                                   query_chunk=query_chunk)
+    if cfg.post_norms:
+        a = rms_norm(a, p["post_attn_norm"], plus_one=True)
+    x = x + a
+    h = rms_norm(x, p["mlp_norm"], plus_one=cfg.post_norms)
+    f, aux = _ffn(p, h, cfg)
+    if cfg.post_norms:
+        f = rms_norm(f, p["post_mlp_norm"], plus_one=True)
+    return x + f, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Forward pass (training / prefill).
+# ---------------------------------------------------------------------------
+
+def _local_flags(cfg: LMConfig, n_prefix: int) -> jnp.ndarray:
+    if cfg.local_global:
+        flags = [(i % 2 == 0) for i in range(cfg.num_layers)]  # local first
+    else:
+        flags = [False] * cfg.num_layers
+    return jnp.asarray(flags[n_prefix:], bool)
+
+
+def forward(params, tokens, cfg: LMConfig, *,
+            query_chunk: Optional[int] = None, scan_unroll: int = 1,
+            return_hidden: bool = False):
+    """tokens (B, S) -> logits (B, S, V). Scan over stacked layers.
+
+    ``scan_unroll``: layers per while-iteration; >1 is used by the dry-run's
+    cost calibration (XLA cost analysis counts a loop body once).
+    ``return_hidden``: skip the vocab projection (chunked-CE path)."""
+    b, s = tokens.shape
+    x = hint(params["embed"][tokens], "dp", None, None)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    n_prefix = len(params.get("prefix_layers", ()))
+    aux_sum = {"lb_loss": 0.0, "z_loss": 0.0, "dropped_frac": 0.0}
+
+    for p_layer in params.get("prefix_layers", ()):
+        x, _, _ = apply_layer(p_layer, x, cfg, positions=positions,
+                              query_chunk=query_chunk)
+
+    flags = _local_flags(cfg, n_prefix)
+
+    carry_spec = ("dp", "tp", None) if cfg.sp_residual else ("dp", None,
+                                                             None)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(x, inp):
+        p_layer, is_local = inp
+        # Megatron-SP style: the residual stream is sequence-sharded over the
+        # model axis BETWEEN layers, so the grad-of-scan carry stack (the
+        # dominant training buffer) is tp-times smaller; GSPMD inserts the
+        # all-gather / reduce-scatter pair at the layer boundary.
+        x = hint(x, *carry_spec)
+        y, _, aux = apply_layer(p_layer, x, cfg, positions=positions,
+                                is_local=is_local, query_chunk=query_chunk)
+        y = hint(y, *carry_spec)
+        return y, (aux.get("lb_loss", 0.0), aux.get("z_loss", 0.0))
+
+    x, (lb, zl) = jax.lax.scan(body, x, (params["layers"], flags),
+                               unroll=scan_unroll)
+    aux_sum["lb_loss"] = jnp.sum(jnp.asarray(lb))
+    aux_sum["z_loss"] = jnp.sum(jnp.asarray(zl))
+
+    x = rms_norm(x, params["final_norm"], plus_one=cfg.post_norms)
+    if return_hidden:
+        return x, aux_sum
+    logits = hint(x @ params["embed"].T, "dp", None, "tp")
+    if cfg.final_softcap:
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, aux_sum
+
+
+def _ce_from_logits(logits, labels, cfg: LMConfig):
+    logits = logits.astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = softcap(logits, cfg.final_softcap)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum(logz - gold)
+
+
+def chunked_ce(x, embed, labels, cfg: LMConfig, chunk: int):
+    """Cross-entropy without materializing the full (B, S, V) fp32 logits:
+    scan over sequence chunks, rematerializing per-chunk in the backward.
+    The dominant training buffer after the carry stack (EXPERIMENTS.md
+    §Perf gemma2 iteration 2)."""
+    b, s, d = x.shape
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(total, inp):
+        xb, lb = inp
+        logits = hint(xb @ embed.T, "dp", None, "tp")
+        return total + _ce_from_logits(logits, lb, cfg), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (b * s)
+
+
+def lm_loss(params, batch, cfg: LMConfig, *,
+            query_chunk: Optional[int] = None, scan_unroll: int = 1,
+            ce_chunk: Optional[int] = None):
+    """Next-token cross-entropy (fp32), plus MoE aux losses."""
+    labels = batch["labels"]
+    if ce_chunk:
+        x, aux = forward(params, batch["tokens"], cfg,
+                         query_chunk=query_chunk, scan_unroll=scan_unroll,
+                         return_hidden=True)
+        ce = chunked_ce(x, params["embed"], labels, cfg, ce_chunk)
+    else:
+        logits, aux = forward(params, batch["tokens"], cfg,
+                              query_chunk=query_chunk,
+                              scan_unroll=scan_unroll)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1)[..., 0]
+        ce = jnp.mean(logz - gold)
+    loss = ce + 0.01 * aux["lb_loss"] + 1e-4 * aux["z_loss"]
+    return loss, {"ce": ce, **aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step) with heterogeneous per-layer caches.
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int,
+               dtype=None) -> List[KVCache]:
+    """Per-layer caches. Gemma-2 local layers: ring of size window; MLA:
+    latent + rope caches; else full (B, max_len, Hkv, hd)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    caches = []
+    for i in range(cfg.num_layers):
+        local = cfg.local_global and (i % 2 == 0)
+        length = min(cfg.sliding_window, max_len) if (
+            local and cfg.sliding_window) else max_len
+        if cfg.attn_kind == "mla":
+            caches.append(KVCache(
+                k=jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
+                v=jnp.zeros((batch, length, cfg.qk_rope_dim), dtype)))
+        else:
+            caches.append(KVCache(
+                k=jnp.zeros((batch, length, cfg.num_kv_heads, cfg.head_dim),
+                            dtype),
+                v=jnp.zeros((batch, length, cfg.num_kv_heads, cfg.head_dim),
+                            dtype)))
+    return caches
+
+
+def abstract_cache(cfg: LMConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def _ring_slot(pos, length):
+    return jax.lax.rem(pos, length)
+
+
+def _decode_layer_gqa(p, x, cfg: LMConfig, cache: KVCache, pos, *, is_local):
+    """One-token decode for a GQA layer (handles ring-buffer local cache)."""
+    b = x.shape[0]
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    length = cache.k.shape[1]
+    q = (x @ p["wq"]).reshape(b, 1, h, hd)
+    k = (x @ p["wk"]).reshape(b, 1, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, 1, hkv, hd)
+    from repro.models.layers import apply_rope, rope_tables
+    cos, sin = rope_tables(pos[None].astype(jnp.int32), hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    slot = _ring_slot(pos, length) if is_local else pos
+    ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+    scale = (cfg.query_scale if cfg.query_scale is not None
+             else hd ** -0.5)
+    j = jnp.arange(length, dtype=jnp.int32)
+    if is_local:
+        # Ring slot j holds absolute token index pos - ((pos - j) mod L).
+        tok = pos - jax.lax.rem(pos - j + length * 2, length)
+        kv_mask = tok >= 0
+    else:
+        kv_mask = j <= pos
+    out = attention_core(q, ck, cv, scale=scale, causal=False,
+                         cap=cfg.attn_softcap, kv_mask=kv_mask)
+    return out.reshape(b, 1, h * hd) @ p["wo"], KVCache(ck, cv)
+
+
+def _decode_layer_mla(p, x, cfg: LMConfig, cache: KVCache, pos):
+    out, new_cache = mla_forward(p, x, cfg, positions=pos[None],
+                                 cache=cache, cache_pos=pos)
+    return out, new_cache
+
+
+def serve_step(params, caches, tokens, pos, cfg: LMConfig):
+    """One decode step. tokens (B,), pos scalar int32 -> logits (B, V)."""
+    x = params["embed"][tokens][:, None, :]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    n_prefix = len(params.get("prefix_layers", ()))
+    new_caches = []
+    for i in range(cfg.num_layers):
+        if i < n_prefix:
+            p_layer = params["prefix_layers"][i]
+        else:
+            p_layer = jax.tree.map(lambda a: a[i - n_prefix],
+                                   params["layers"])
+        is_local = cfg.local_global and (i % 2 == 0)
+        h = rms_norm(x, p_layer["attn_norm"], plus_one=cfg.post_norms)
+        if cfg.attn_kind == "mla":
+            a, nc = _decode_layer_mla(p_layer, h, cfg, caches[i], pos)
+        else:
+            a, nc = _decode_layer_gqa(p_layer, h, cfg, caches[i], pos,
+                                      is_local=is_local)
+        if cfg.post_norms:
+            a = rms_norm(a, p_layer["post_attn_norm"], plus_one=True)
+        x = x + a
+        h = rms_norm(x, p_layer["mlp_norm"], plus_one=cfg.post_norms)
+        f, _ = _ffn(p_layer, h, cfg)
+        if cfg.post_norms:
+            f = rms_norm(f, p_layer["post_mlp_norm"], plus_one=True)
+        x = x + f
+        new_caches.append(nc)
+    x = rms_norm(x, params["final_norm"], plus_one=cfg.post_norms)
+    logits = (x @ params["embed"].T)[:, 0]
+    if cfg.final_softcap:
+        logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, new_caches

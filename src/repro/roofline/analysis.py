@@ -1,0 +1,181 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from the compiled module:
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+cost_analysis() is per-PARTICIPANT (the SPMD module is the per-device
+program), so terms divide by per-chip peaks directly.  Scan-corrected values
+(dryrun's unroll-delta calibration) are used when present.
+
+MODEL_FLOPS uses 6*N*D (dense) / 6*N_active*D (MoE) per family, x3 for the
+fwd+bwd train step, and the ratio MODEL_FLOPS / (HLO_FLOPs x chips) exposes
+remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+# TPU v5e per-chip constants (assignment-specified).
+PEAK_FLOPS = 197e12        # bf16
+HBM_BW = 819e9             # bytes/s
+LINK_BW = 50e9             # bytes/s/link ICI
+
+
+def load_artifacts(art_dir: str = "artifacts/dryrun") -> Dict[str, dict]:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        key = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        if rec.get("tag"):
+            key += f"__{rec['tag']}"
+        out[key] = rec
+    return out
+
+
+def _param_count(cfg) -> float:
+    """Total and active parameter counts for an LMConfig."""
+    d = cfg.d_model
+    attn = d * cfg.q_dim + cfg.q_dim * d
+    if cfg.attn_kind == "mla":
+        attn = (d * cfg.q_dim + d * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+                + cfg.kv_lora_rank * cfg.num_heads
+                * (cfg.qk_nope_dim + cfg.v_head_dim)
+                + cfg.num_heads * cfg.v_head_dim * d)
+    else:
+        attn = (d * cfg.num_heads * cfg.head_dim
+                + 2 * d * cfg.num_kv_heads * cfg.head_dim
+                + cfg.num_heads * cfg.head_dim * d)
+    per_layer_total = attn
+    per_layer_active = attn
+    if cfg.moe is not None:
+        e = cfg.moe
+        expert = 3 * d * e.d_ff_expert
+        per_layer_total += e.num_experts * expert + d * e.num_experts
+        per_layer_active += e.top_k * expert
+        if e.num_shared_experts:
+            fs = e.d_ff_shared or e.num_shared_experts * e.d_ff_expert
+            per_layer_total += 3 * d * fs
+            per_layer_active += 3 * d * fs
+        if e.dense_residual:
+            per_layer_total += 3 * d * cfg.d_ff
+            per_layer_active += 3 * d * cfg.d_ff
+    else:
+        per_layer_total += 3 * d * cfg.d_ff
+        per_layer_active += 3 * d * cfg.d_ff
+    n_moe = cfg.num_layers - (cfg.first_k_dense if cfg.moe else 0)
+    n_dense_prefix = cfg.num_layers - n_moe
+    total = per_layer_total * n_moe
+    active = per_layer_active * n_moe
+    if n_dense_prefix:
+        dense_l = attn + 3 * d * (cfg.d_ff_dense_first or cfg.d_ff)
+        total += n_dense_prefix * dense_l
+        active += n_dense_prefix * dense_l
+    embed = cfg.vocab_size * d
+    return total + embed, active + embed
+
+
+def model_flops(arch: str, shape: str) -> Optional[float]:
+    """Analytic MODEL_FLOPS for the whole step (all chips)."""
+    from repro.configs.registry import ARCHS, get_arch
+    from repro.launch.shapes import FAMILY_SHAPES
+
+    if arch not in ARCHS:
+        return None  # extra rows (mst-boruvka)
+    entry = get_arch(arch)
+    if entry.family != "lm":
+        return None
+    cfg = entry.config
+    spec = FAMILY_SHAPES["lm"][shape]
+    total, active = _param_count(cfg)
+    if spec["kind"] in ("train", "prefill"):
+        tokens = spec["batch"] * spec["seq"]
+        mult = 6.0 if spec["kind"] == "train" else 2.0  # fwd+bwd vs fwd
+        return mult * active * tokens
+    # decode: one token per sequence; attention reads the KV cache.
+    tokens = spec["batch"]
+    flops = 2.0 * active * tokens
+    # attention score+value flops over the cache
+    kv = spec["seq"]
+    flops += (4.0 * cfg.num_heads * cfg.head_dim * kv * tokens
+              * cfg.num_layers)
+    return flops
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    bound_s: float
+    model_flops: Optional[float]
+    useful_ratio: Optional[float]
+    temp_gb: Optional[float]
+
+    def row(self) -> str:
+        mf = f"{self.model_flops:.3g}" if self.model_flops else "-"
+        ur = f"{self.useful_ratio:.2f}" if self.useful_ratio else "-"
+        tg = f"{self.temp_gb:.1f}" if self.temp_gb is not None else "-"
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.compute_s * 1e3:.3g} | {self.memory_s * 1e3:.3g} | "
+                f"{self.collective_s * 1e3:.3g} | {self.dominant} | "
+                f"{mf} | {ur} | {tg} |")
+
+
+def analyze(rec: dict) -> Roofline:
+    chips = 1
+    for v in rec["mesh_shape"].values():
+        chips *= v
+    ca = rec.get("scan_corrected") or {}
+    base = rec.get("cost_analysis", {})
+    flops = ca.get("flops", base.get("flops", 0.0))
+    bts = ca.get("bytes accessed", base.get("bytes accessed", 0.0))
+    coll = (ca.get("collective_link_bytes_weighted")
+            if "collective_link_bytes_weighted" in ca
+            else rec.get("collectives", {}).get("link_bytes_weighted", 0.0))
+    # cost_analysis is per-participant already.
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bts / HBM_BW
+    collective_s = (coll or 0.0) / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = (mf / (flops * chips)) if (mf and flops) else None
+    ma = rec.get("memory_analysis", {})
+    temp = ma.get("temp_size_in_bytes")
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"], chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, bound_s=max(terms.values()), model_flops=mf,
+        useful_ratio=useful, temp_gb=temp / 1e9 if temp else None)
+
+
+def table(art_dir: str = "artifacts/dryrun", mesh: str = "pod1") -> str:
+    rows = ["| arch | shape | mesh | compute ms | memory ms | collective ms"
+            " | bottleneck | MODEL_FLOPS | useful | temp GB |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for key, rec in load_artifacts(art_dir).items():
+        # Baseline rows only; tagged (hillclimb) variants live in §Perf.
+        if rec["mesh"] != mesh or not rec.get("ok") or rec.get("tag"):
+            continue
+        rows.append(analyze(rec).row())
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod1"
+    print(table(mesh=mesh))

@@ -1,0 +1,51 @@
+"""Batched decoding loops on top of ``serve_step``.
+
+``generate`` is the host-side driver the serving example uses; on a real
+slice the same jitted step runs with the dry-run's cache shardings
+(launch/steps.py decode cells).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models.transformer import init_cache, serve_step
+
+
+def greedy_sample(logits: jnp.ndarray, key=None) -> jnp.ndarray:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(logits: jnp.ndarray, key,
+                       temperature: float = 1.0) -> jnp.ndarray:
+    return jax.random.categorical(key, logits / temperature).astype(
+        jnp.int32)
+
+
+def generate(params, cfg: LMConfig, prompts: jnp.ndarray, steps: int,
+             *, temperature: Optional[float] = None,
+             seed: int = 0) -> Tuple[jnp.ndarray, list]:
+    """prompts (B, P) int32 -> (B, P+steps). Prefill runs through the same
+    decode step (token-by-token) for simplicity; production prefill lowers
+    the chunked forward (launch/steps.py prefill cells)."""
+    b, p = prompts.shape
+    caches = init_cache(cfg, b, p + steps)
+    step = jax.jit(lambda pa, c, t, pos: serve_step(pa, c, t, pos, cfg))
+    key = jax.random.key(seed)
+    toks = [prompts[:, i] for i in range(p)]
+    logits = None
+    for pos in range(p):  # prefill
+        logits, caches = step(params, caches, toks[pos], jnp.int32(pos))
+    out = list(toks)
+    for i in range(steps):
+        key, sub = jax.random.split(key)
+        if temperature is None:
+            nxt = greedy_sample(logits)
+        else:
+            nxt = temperature_sample(logits, sub, temperature)
+        out.append(nxt)
+        logits, caches = step(params, caches, nxt, jnp.int32(p + i))
+    return jnp.stack(out, axis=1), caches

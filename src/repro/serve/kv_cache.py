@@ -1,0 +1,34 @@
+"""KV-cache construction and sizing (serving substrate).
+
+Cache variants (models/attention.py KVCache):
+  * full      - (B, S_max, Hkv, hd) per layer (dense decode)
+  * ring      - (B, window, Hkv, hd) for Gemma-2 local layers: O(window)
+  * mla       - (B, S_max, kv_lora_rank) latent + (B, S_max, rope) shared key
+
+``cache_bytes`` is the planning function used for serving capacity and the
+long_500k feasibility notes in DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from repro.configs.base import LMConfig
+from repro.models.attention import KVCache  # re-export
+from repro.models.transformer import abstract_cache, init_cache  # re-export
+
+
+def cache_bytes(cfg: LMConfig, batch: int, max_len: int,
+                dtype_bytes: int = 2) -> int:
+    """Total KV-cache bytes for one request batch at max_len tokens."""
+    total = 0
+    for i in range(cfg.num_layers):
+        local = cfg.local_global and (i % 2 == 0)
+        length = (min(cfg.sliding_window, max_len)
+                  if (local and cfg.sliding_window) else max_len)
+        if cfg.attn_kind == "mla":
+            per_tok = cfg.kv_lora_rank + cfg.qk_rope_dim
+        else:
+            per_tok = 2 * cfg.num_kv_heads * cfg.head_dim
+        total += batch * length * per_tok * dtype_bytes
+    return total
+
+
+__all__ = ["KVCache", "init_cache", "abstract_cache", "cache_bytes"]

@@ -1,0 +1,215 @@
+"""Synthetic data pipelines for every family (smoke tests, examples,
+end-to-end training) plus sampled-block assembly for ``minibatch_lg``.
+
+Real deployments swap these for tokenized corpora / OGB loaders; the batch
+dict CONTRACT (keys, shapes, dtypes) is what the rest of the system depends
+on, and the dry-run derives its ShapeDtypeStructs from the same builders.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig, LMConfig, RecSysConfig
+from repro.graphs.generator import generate_graph
+from repro.graphs.sampler import SampledSubgraph
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def lm_batch(cfg: LMConfig, batch: int, seq: int, key) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (batch, seq), 0, cfg.vocab_size,
+                                jnp.int32)
+    labels = jnp.roll(tokens, -1, axis=1)
+    return {"tokens": tokens, "labels": labels}
+
+
+def lm_batch_spec(cfg: LMConfig, batch: int, seq: int):
+    t = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return {"tokens": t, "labels": t}
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def gnn_full_batch(cfg: GNNConfig, n: int, e: int, d_feat: int,
+                   classes: int, key, with_coords=None) -> Dict[str, Any]:
+    """Synthetic full-graph node-classification batch."""
+    kf, kl, kc = jax.random.split(key, 3)
+    g, _ = generate_graph(n, max(2 * e / n, 2.0), seed=0)
+    ee = g.num_edges
+    src = jnp.concatenate([g.src, g.dst])[:e] if ee >= e // 2 else g.src
+    dst = jnp.concatenate([g.dst, g.src])[:e] if ee >= e // 2 else g.dst
+    src = _pad_ids(src, e, n)
+    dst = _pad_ids(dst, e, n)
+    batch = {
+        "node_feat": jax.random.normal(kf, (n, d_feat), jnp.float32),
+        "edge_src": src,
+        "edge_dst": dst,
+        "edge_mask": jnp.ones((e,), bool),
+        "labels": jax.random.randint(kl, (n,), 0, classes, jnp.int32),
+        "node_mask": jnp.ones((n,), jnp.float32),
+    }
+    if with_coords or (with_coords is None and cfg.kind == "egnn"):
+        batch["coords"] = jax.random.normal(kc, (n, cfg.coord_dim),
+                                            jnp.float32)
+    return batch
+
+
+def _pad_ids(x, e, n):
+    if x.shape[0] >= e:
+        return x[:e].astype(jnp.int32)
+    reps = -(-e // x.shape[0])
+    return jnp.tile(x, reps)[:e].astype(jnp.int32)
+
+
+def gnn_full_batch_spec(cfg: GNNConfig, n: int, e: int, d_feat: int,
+                        classes: int) -> Dict[str, Any]:
+    spec = {
+        "node_feat": jax.ShapeDtypeStruct((n, d_feat), jnp.float32),
+        "edge_src": jax.ShapeDtypeStruct((e,), jnp.int32),
+        "edge_dst": jax.ShapeDtypeStruct((e,), jnp.int32),
+        "edge_mask": jax.ShapeDtypeStruct((e,), jnp.bool_),
+        "labels": jax.ShapeDtypeStruct((n,), jnp.int32),
+        "node_mask": jax.ShapeDtypeStruct((n,), jnp.float32),
+    }
+    if cfg.kind == "egnn":
+        spec["coords"] = jax.ShapeDtypeStruct((n, cfg.coord_dim),
+                                              jnp.float32)
+    return spec
+
+
+def block_shapes(batch_nodes: int, fanout) -> Tuple[int, int]:
+    """(total_nodes, total_edges) of a sampled block."""
+    sizes = [batch_nodes]
+    for f in fanout:
+        sizes.append(sizes[-1] * f)
+    return sum(sizes), sum(sizes[1:])
+
+
+def block_to_batch(sub: SampledSubgraph, feats, labels, classes: int,
+                   cfg: GNNConfig, key=None) -> Dict[str, Any]:
+    """Flatten a sampled subgraph into the standard GNN batch dict.
+
+    Nodes = concat(layers); block edges reindexed by layer offsets; loss is
+    masked to the seed layer.
+    """
+    layers = sub.layers
+    offsets = np.cumsum([0] + [int(l.shape[0]) for l in layers])
+    node_ids = jnp.concatenate(layers)
+    src = jnp.concatenate([offsets[h + 1] + b.src_pos
+                           for h, b in enumerate(sub.blocks)])
+    dst = jnp.concatenate([offsets[h] + b.dst_pos
+                           for h, b in enumerate(sub.blocks)])
+    mask = jnp.concatenate([b.mask for b in sub.blocks])
+    n_total = int(offsets[-1])
+    node_mask = jnp.zeros((n_total,), jnp.float32).at[
+        :layers[0].shape[0]].set(1.0)
+    batch = {
+        "node_feat": feats[node_ids],
+        "edge_src": src.astype(jnp.int32),
+        "edge_dst": dst.astype(jnp.int32),
+        "edge_mask": mask,
+        "labels": labels[node_ids],
+        "node_mask": node_mask,
+    }
+    if cfg.kind == "egnn":
+        if key is None:
+            key = jax.random.key(0)
+        batch["coords"] = jax.random.normal(key, (n_total, cfg.coord_dim),
+                                            jnp.float32)
+    return batch
+
+
+def gnn_sampled_batch_spec(cfg: GNNConfig, batch_nodes: int, fanout,
+                           d_feat: int, classes: int) -> Dict[str, Any]:
+    n_total, e_total = block_shapes(batch_nodes, fanout)
+    spec = {
+        "node_feat": jax.ShapeDtypeStruct((n_total, d_feat), jnp.float32),
+        "edge_src": jax.ShapeDtypeStruct((e_total,), jnp.int32),
+        "edge_dst": jax.ShapeDtypeStruct((e_total,), jnp.int32),
+        "edge_mask": jax.ShapeDtypeStruct((e_total,), jnp.bool_),
+        "labels": jax.ShapeDtypeStruct((n_total,), jnp.int32),
+        "node_mask": jax.ShapeDtypeStruct((n_total,), jnp.float32),
+    }
+    if cfg.kind == "egnn":
+        spec["coords"] = jax.ShapeDtypeStruct((n_total, cfg.coord_dim),
+                                              jnp.float32)
+    return spec
+
+
+def gnn_molecule_batch(cfg: GNNConfig, n_per: int, e_per: int, batch: int,
+                       d_feat: int, classes: int, key) -> Dict[str, Any]:
+    """Batched small graphs: ring + random chords per molecule."""
+    kf, kl, ke, kc = jax.random.split(key, 4)
+    n = n_per * batch
+    ring_src = jnp.arange(n_per, dtype=jnp.int32)
+    ring_dst = jnp.roll(ring_src, -1)
+    extra = e_per - n_per
+    ex_src = jax.random.randint(ke, (batch, extra), 0, n_per, jnp.int32)
+    ex_dst = jax.random.randint(kc, (batch, extra), 0, n_per, jnp.int32)
+    off = (jnp.arange(batch, dtype=jnp.int32) * n_per)[:, None]
+    src = jnp.concatenate([jnp.tile(ring_src, (batch, 1)) + off,
+                           ex_src + off], 1).reshape(-1)
+    dst = jnp.concatenate([jnp.tile(ring_dst, (batch, 1)) + off,
+                           ex_dst + off], 1).reshape(-1)
+    b = {
+        "node_feat": jax.random.normal(kf, (n, d_feat), jnp.float32),
+        "edge_src": src,
+        "edge_dst": dst,
+        "edge_mask": jnp.ones_like(src, bool),
+        "labels": jax.random.randint(kl, (batch,), 0, classes, jnp.int32),
+        "graph_ids": jnp.repeat(jnp.arange(batch, dtype=jnp.int32), n_per),
+    }
+    if cfg.kind == "egnn":
+        b["coords"] = jax.random.normal(kc, (n, cfg.coord_dim), jnp.float32)
+    return b
+
+
+def gnn_molecule_batch_spec(cfg: GNNConfig, n_per: int, e_per: int,
+                            batch: int, d_feat: int,
+                            classes: int) -> Dict[str, Any]:
+    n, e = n_per * batch, e_per * batch
+    spec = {
+        "node_feat": jax.ShapeDtypeStruct((n, d_feat), jnp.float32),
+        "edge_src": jax.ShapeDtypeStruct((e,), jnp.int32),
+        "edge_dst": jax.ShapeDtypeStruct((e,), jnp.int32),
+        "edge_mask": jax.ShapeDtypeStruct((e,), jnp.bool_),
+        "labels": jax.ShapeDtypeStruct((batch,), jnp.int32),
+        "graph_ids": jax.ShapeDtypeStruct((n,), jnp.int32),
+    }
+    if cfg.kind == "egnn":
+        spec["coords"] = jax.ShapeDtypeStruct((n, cfg.coord_dim),
+                                              jnp.float32)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+
+def fm_batch(cfg: RecSysConfig, batch: int, key) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "sparse_ids": jax.random.randint(
+            k1, (batch, cfg.n_sparse, cfg.multi_hot), 0,
+            cfg.vocab_per_field, jnp.int32),
+        "dense": jax.random.normal(k2, (batch, cfg.n_dense), jnp.float32),
+        "labels": jax.random.bernoulli(k3, 0.3, (batch,)).astype(jnp.int32),
+    }
+
+
+def fm_batch_spec(cfg: RecSysConfig, batch: int) -> Dict[str, Any]:
+    return {
+        "sparse_ids": jax.ShapeDtypeStruct(
+            (batch, cfg.n_sparse, cfg.multi_hot), jnp.int32),
+        "dense": jax.ShapeDtypeStruct((batch, cfg.n_dense), jnp.float32),
+        "labels": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }

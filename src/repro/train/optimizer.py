@@ -1,0 +1,79 @@
+"""AdamW (pure JAX) with fp32 moments over bf16 params, global-norm clip,
+and optional bf16 gradient compression for the cross-replica all-reduce.
+
+Distributed behaviour comes from sharding, not code: moments inherit the
+parameters' FSDP/TP PartitionSpecs (ZeRO-1-style state sharding falls out of
+the (data, model) weight sharding in launch/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr: float = 3e-4,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: Optional[float] = 1.0,
+                 compress_bf16: bool = False
+                 ) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    if compress_bf16:
+        # Gradient compression: half-width collectives; moments stay fp32.
+        grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+    gnorm = global_norm(grads)
+    if clip_norm is not None:
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    flat_p = treedef.flatten_up_to(params)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        a, b, c = upd(g, m, v, p)
+        new_p.append(a)
+        new_m.append(b)
+        new_v.append(c)
+    return (treedef.unflatten(new_p),
+            AdamWState(step, treedef.unflatten(new_m),
+                       treedef.unflatten(new_v)),
+            {"grad_norm": gnorm})

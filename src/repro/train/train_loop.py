@@ -1,0 +1,91 @@
+"""Training drivers: jitted per-family train steps + a fault-tolerant host
+loop (checkpoint every N steps, resume-from-latest, straggler note below).
+
+Straggler/fault model at scale: synchronous SPMD means a slow host delays the
+collective; mitigation here is (a) checkpoint-restart with elastic re-mesh
+(checkpoint.py), (b) data-pipeline prefetch (next batch built while step N
+runs - JAX dispatch is async), (c) deterministic batches keyed by step so a
+restarted worker reproduces the exact stream.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig, LMConfig, RecSysConfig
+from repro.models.gnn import gnn_loss
+from repro.models.recsys import fm_loss
+from repro.models.transformer import lm_loss
+from repro.train import checkpoint as ckpt_lib
+from repro.train import data as data_lib
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update
+
+
+def make_train_step(loss_fn: Callable, cfg, *, lr: float = 3e-4,
+                    compress_bf16: bool = False,
+                    query_chunk: Optional[int] = None,
+                    donate: bool = True):
+    """Generic (params, opt, batch) -> (params, opt, metrics) step."""
+
+    kwargs = {}
+    if query_chunk is not None:
+        kwargs["query_chunk"] = query_chunk
+
+    def step(params, opt_state: AdamWState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, **kwargs), has_aux=True)(params)
+        params, opt_state, gm = adamw_update(
+            grads, opt_state, params, lr=lr, compress_bf16=compress_bf16)
+        return params, opt_state, {"loss": loss, **metrics, **gm}
+
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+def lm_train_step(cfg: LMConfig, **kw):
+    return make_train_step(lm_loss, cfg, **kw)
+
+
+def gnn_train_step(cfg: GNNConfig, **kw):
+    return make_train_step(gnn_loss, cfg, **kw)
+
+
+def fm_train_step(cfg: RecSysConfig, **kw):
+    return make_train_step(fm_loss, cfg, **kw)
+
+
+def run_training(*, cfg, init_params_fn, loss_fn, batch_fn,
+                 num_steps: int, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 50, lr: float = 3e-4,
+                 log_every: int = 10, seed: int = 0,
+                 print_fn=print) -> Tuple[Any, Dict[str, float]]:
+    """Fault-tolerant host loop. Resumes from the latest checkpoint if any."""
+    key = jax.random.key(seed)
+    params = init_params_fn(key)
+    opt_state = adamw_init(params)
+    start_step = 0
+    if ckpt_dir is not None and ckpt_lib.latest_step(ckpt_dir) is not None:
+        (params, opt_state), start_step = ckpt_lib.restore_checkpoint(
+            ckpt_dir, (params, opt_state))
+        print_fn(f"[resume] restored step {start_step} from {ckpt_dir}")
+
+    step_fn = make_train_step(loss_fn, cfg, lr=lr)
+    metrics = {}
+    t0 = time.time()
+    for step in range(start_step, num_steps):
+        # Deterministic per-step batch => restart reproduces the stream.
+        batch = batch_fn(jax.random.fold_in(jax.random.key(seed + 1), step))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if log_every and (step + 1) % log_every == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = (time.time() - t0) / max(1, step + 1 - start_step)
+            print_fn(f"[step {step + 1:5d}] "
+                     + " ".join(f"{k}={v:.4f}" for k, v in m.items())
+                     + f" ({dt * 1e3:.0f} ms/step)")
+        if ckpt_dir is not None and (step + 1) % ckpt_every == 0:
+            ckpt_lib.save_checkpoint(ckpt_dir, step + 1, (params, opt_state))
+            ckpt_lib.prune_checkpoints(ckpt_dir)
+    return params, {k: float(v) for k, v in metrics.items()}

@@ -1,0 +1,9 @@
+import os
+
+# Tests see ONE device (the dry-run alone forces 512 - never set here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

@@ -1,0 +1,33 @@
+"""Every (arch x shape) cell must BUILD (abstract params, shardings, jit
+closure) on a small mesh - the structural half of the dry-run, cheap enough
+for CI.  Compilation on the production meshes is covered by
+launch/dryrun.py artifacts."""
+import jax
+import pytest
+
+from repro.launch.shapes import cells
+from repro.launch.steps import build_cell
+
+CELLS = [(a, s) for a, s, skip in cells() if not skip]
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.mark.parametrize("arch,shape", CELLS)
+def test_cell_builds(arch, shape, mesh):
+    cell = build_cell(arch, shape, mesh)
+    assert cell.args, (arch, shape)
+    assert cell.meta.get("kind") in ("train", "prefill", "decode", "serve",
+                                     "retrieval", "mst")
+    # abstract-only: no leaf may be a concrete array
+    for leaf in jax.tree.leaves(cell.args):
+        assert isinstance(leaf, jax.ShapeDtypeStruct), (arch, shape, leaf)
+
+
+def test_mst_cell_builds(mesh):
+    cell = build_cell("mst-boruvka", "graph_100k_9", mesh)
+    assert cell.meta["kind"] == "mst"
+    assert cell.meta["nodes"] == 100_000

@@ -1,0 +1,86 @@
+"""Registry guards: the 10 assigned archs carry their EXACT shape numbers."""
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.launch.shapes import FAMILY_SHAPES, LONG_CONTEXT_SKIP, cells
+
+
+def test_all_ten_archs_present():
+    assert sorted(ARCHS) == sorted([
+        "gemma2-27b", "deepseek-coder-33b", "tinyllama-1.1b",
+        "deepseek-v2-lite-16b", "arctic-480b", "pna", "gin-tu", "egnn",
+        "gat-cora", "fm"])
+
+
+def test_gemma2_exact():
+    c = ARCHS["gemma2-27b"].config
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (46, 4608, 32, 16, 36864, 256_000)
+    assert c.local_global and c.sliding_window == 4096
+    assert c.attn_softcap == 50.0 and c.final_softcap == 30.0
+
+
+def test_deepseek_coder_exact():
+    c = ARCHS["deepseek-coder-33b"].config
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (62, 7168, 56, 8, 19200, 32_256)
+
+
+def test_tinyllama_exact():
+    c = ARCHS["tinyllama-1.1b"].config
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (22, 2048, 32, 4, 5632, 32_000)
+
+
+def test_deepseek_v2_lite_exact():
+    c = ARCHS["deepseek-v2-lite-16b"].config
+    assert (c.num_layers, c.d_model, c.num_heads,
+            c.vocab_size) == (27, 2048, 16, 102_400)
+    assert c.attn_kind == "mla" and c.kv_lora_rank == 512
+    assert c.moe.num_experts == 64 and c.moe.top_k == 6
+    assert c.moe.d_ff_expert == 1408 and c.moe.num_shared_experts == 2
+
+
+def test_arctic_exact():
+    c = ARCHS["arctic-480b"].config
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (35, 7168, 56, 8, 4864, 32_000)
+    assert c.moe.num_experts == 128 and c.moe.top_k == 2
+    assert c.moe.dense_residual
+
+
+def test_gnn_exact():
+    pna = ARCHS["pna"].config
+    assert pna.num_layers == 4 and pna.d_hidden == 75
+    assert pna.aggregators == ("mean", "max", "min", "std")
+    assert pna.scalers == ("identity", "amplification", "attenuation")
+    gin = ARCHS["gin-tu"].config
+    assert gin.num_layers == 5 and gin.d_hidden == 64 and gin.learn_eps
+    egnn = ARCHS["egnn"].config
+    assert egnn.num_layers == 4 and egnn.d_hidden == 64
+    gat = ARCHS["gat-cora"].config
+    assert (gat.num_layers, gat.d_hidden, gat.num_heads) == (2, 8, 8)
+
+
+def test_fm_exact():
+    c = ARCHS["fm"].config
+    assert c.n_sparse == 39 and c.embed_dim == 10
+
+
+def test_cell_count_is_40():
+    all_cells = cells()
+    assert len(all_cells) == 40
+    skips = [c for c in all_cells if c[2]]
+    assert {c[0] for c in skips} == LONG_CONTEXT_SKIP
+    assert all(c[1] == "long_500k" for c in skips)
+
+
+def test_shape_tables_exact():
+    lm = FAMILY_SHAPES["lm"]
+    assert lm["train_4k"] == dict(kind="train", seq=4096, batch=256)
+    assert lm["long_500k"]["seq"] == 524_288
+    gnn = FAMILY_SHAPES["gnn"]
+    assert gnn["minibatch_lg"]["e"] == 114_615_892
+    assert gnn["ogb_products"]["n"] == 2_449_029
+    rec = FAMILY_SHAPES["recsys"]
+    assert rec["retrieval_cand"]["candidates"] == 1_000_000

@@ -1,0 +1,67 @@
+"""Distributed MST + pjit smoke on 8 forced host devices (subprocess)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax
+from repro.graphs.generator import generate_graph
+from repro.core.distributed_mst import distributed_msf, make_flat_mesh
+from repro.core.oracle import kruskal_numpy
+
+mesh = make_flat_mesh(8)
+out = {}
+for variant in ("cas", "lock"):
+    g, v = generate_graph(600, 5, seed=11)
+    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, v)
+    r = distributed_msf(g, num_nodes=v, mesh=mesh, variant=variant)
+    out[variant] = {
+        "match": bool((np.asarray(r.mst_mask) == om).all()),
+        "ncomp": int(r.num_components),
+        "rounds": int(r.num_rounds),
+        "devices": len(jax.devices()),
+    }
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_distributed_msf_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("JAX_PLATFORMS", None)
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600,
+                          cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT:")][0]
+    out = json.loads(line[len("RESULT:"):])
+    for variant in ("cas", "lock"):
+        assert out[variant]["devices"] == 8
+        assert out[variant]["match"], out
+        assert out[variant]["ncomp"] == 1
+
+
+def test_distributed_matches_single_device_on_trivial_mesh():
+    """distributed_msf on a 1-device mesh must equal the single-device
+    engine bit for bit (same hooking, no real collectives)."""
+    import jax
+    import numpy as np
+    from repro.core.distributed_mst import distributed_msf, make_flat_mesh
+    from repro.core.mst import minimum_spanning_forest
+    from repro.graphs.generator import generate_graph
+
+    g, v = generate_graph(400, 5, seed=21)
+    mesh = make_flat_mesh(1)
+    r_d = distributed_msf(g, num_nodes=v, mesh=mesh, variant="cas")
+    r_s = minimum_spanning_forest(g, num_nodes=v, variant="cas")
+    assert (np.asarray(r_d.mst_mask) == np.asarray(r_s.mst_mask)).all()
+    assert int(r_d.num_rounds) == int(r_s.num_rounds)

@@ -1,0 +1,61 @@
+"""MoE dispatch: scatter and gather dataflows must be bit-identical, and
+capacity dropping must behave identically in both."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.models.moe import init_moe_params, moe_capacity, moe_ffn
+
+
+def _pair(e=8, k=2, capf=4.0):
+    s = MoEConfig(num_experts=e, top_k=k, d_ff_expert=16,
+                  capacity_factor=capf, dispatch="scatter")
+    return s, dataclasses.replace(s, dispatch="gather")
+
+
+@pytest.mark.parametrize("capf", [4.0, 1.25, 0.25])
+def test_dispatch_equivalence(capf):
+    cfg_s, cfg_g = _pair(capf=capf)
+    key = jax.random.key(0)
+    p = init_moe_params(key, 12, cfg_s, jnp.float32)
+    x = jax.random.normal(key, (8, 16, 12))
+    o1, a1 = moe_ffn(p, x, cfg_s)
+    o2, a2 = moe_ffn(p, x, cfg_g)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    assert float(a1["dropped_frac"]) == pytest.approx(
+        float(a2["dropped_frac"]), abs=1e-6)
+
+
+def test_tight_capacity_actually_drops():
+    cfg_s, cfg_g = _pair(e=4, k=2, capf=0.25)
+    key = jax.random.key(1)
+    p = init_moe_params(key, 8, cfg_s, jnp.float32)
+    x = jax.random.normal(key, (16, 16, 8))
+    _, a1 = moe_ffn(p, x, cfg_s)
+    _, a2 = moe_ffn(p, x, cfg_g)
+    assert float(a1["dropped_frac"]) > 0.0
+    assert float(a1["dropped_frac"]) == pytest.approx(
+        float(a2["dropped_frac"]), abs=1e-6)
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=10)
+def test_property_dispatch_equivalence(seed):
+    cfg_s, cfg_g = _pair(e=4, k=2, capf=1.0)
+    key = jax.random.key(seed)
+    p = init_moe_params(key, 8, cfg_s, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 8))
+    o1, _ = moe_ffn(p, x, cfg_s)
+    o2, _ = moe_ffn(p, x, cfg_g)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_capacity_rounding():
+    cfg = MoEConfig(num_experts=8, top_k=2, d_ff_expert=16)
+    c = moe_capacity(cfg, 1024)
+    assert c % 8 == 0 and c >= 1024 * 2 * 1.25 / 8

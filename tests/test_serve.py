@@ -1,0 +1,36 @@
+"""Serving layer: generation loop + cache sizing."""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS
+from repro.models.transformer import init_lm_params
+from repro.serve.decode import generate
+from repro.serve.kv_cache import cache_bytes
+
+
+def test_generate_greedy_deterministic():
+    cfg = ARCHS["tinyllama-1.1b"].smoke
+    params = init_lm_params(jax.random.key(0), cfg)
+    prompts = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32)
+    out1, _ = generate(params, cfg, prompts, steps=4)
+    out2, _ = generate(params, cfg, prompts, steps=4)
+    assert out1.shape == (2, 7)
+    assert (out1 == out2).all()
+    assert (out1[:, :3] == prompts).all()
+
+
+def test_cache_bytes_mla_much_smaller():
+    gqa = ARCHS["deepseek-coder-33b"].config
+    mla = ARCHS["deepseek-v2-lite-16b"].config
+    b_gqa = cache_bytes(gqa, 1, 32768) / gqa.num_layers
+    b_mla = cache_bytes(mla, 1, 32768) / mla.num_layers
+    assert b_mla < b_gqa / 3  # the MLA compression headline
+
+
+def test_cache_bytes_ring_bounded():
+    g2 = ARCHS["gemma2-27b"].config
+    full = cache_bytes(g2, 1, 524_288)
+    # local layers only keep `window` tokens: way below 2x full-cache
+    dense_equiv = (g2.num_layers * 524_288 * 2 * g2.num_kv_heads
+                   * g2.head_dim * 2)
+    assert full < 0.6 * dense_equiv

@@ -1,0 +1,151 @@
+"""Training substrate: optimizer, checkpoints, crash-resume, convergence."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.models.transformer import init_lm_params, lm_loss
+from repro.train import checkpoint as ckpt
+from repro.train import data as data_lib
+from repro.train.optimizer import adamw_init, adamw_update, global_norm
+from repro.train.train_loop import make_train_step, run_training
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = adamw_update(grads, state, params, lr=0.05,
+                                        weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    grads = {"w": jnp.asarray([1e6, 0.0, 0.0])}
+    _, _, m = adamw_update(grads, state, params, clip_norm=1.0)
+    assert float(m["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(5, dtype=jnp.float32),
+            "b": {"c": jnp.ones((2, 2), jnp.bfloat16)}}
+    ckpt.save_checkpoint(str(tmp_path), 7, tree)
+    out, step = ckpt.restore_checkpoint(str(tmp_path), tree)
+    assert step == 7
+    assert out["b"]["c"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_checkpoint_crash_resume(tmp_path):
+    """A half-written checkpoint (simulated SIGKILL mid-write) must be
+    invisible; resume picks the last complete step."""
+    tree = {"x": jnp.zeros(3)}
+    ckpt.save_checkpoint(str(tmp_path), 10, tree)
+    # simulate a crash: orphaned .tmp directory from a dead writer
+    os.makedirs(tmp_path / "step_20.tmp")
+    with open(tmp_path / "step_20.tmp" / "state.npz", "wb") as f:
+        f.write(b"garbage-partial-write")
+    assert ckpt.latest_step(str(tmp_path)) == 10
+    out, step = ckpt.restore_checkpoint(str(tmp_path), tree)
+    assert step == 10
+
+
+def test_checkpoint_prune(tmp_path):
+    tree = {"x": jnp.zeros(1)}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save_checkpoint(str(tmp_path), s, tree)
+    ckpt.prune_checkpoints(str(tmp_path), keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    assert sorted(os.listdir(tmp_path)) == ["step_4", "step_5"]
+
+
+@pytest.mark.slow
+def test_tiny_lm_training_reduces_loss(tmp_path):
+    cfg = ARCHS["tinyllama-1.1b"].smoke
+    losses = []
+
+    def batch_fn(key):
+        # tiny fixed dataset: loss must drop by memorization
+        return data_lib.lm_batch(cfg, 4, 16, jax.random.key(0))
+
+    params, metrics = run_training(
+        cfg=cfg, init_params_fn=lambda k: init_lm_params(k, cfg),
+        loss_fn=lm_loss, batch_fn=batch_fn, num_steps=30,
+        ckpt_dir=str(tmp_path / "ck"), ckpt_every=10, lr=3e-3,
+        log_every=0, print_fn=lambda *a: None)
+    step_fn = make_train_step(lm_loss, cfg, lr=3e-3)
+    from repro.train.optimizer import adamw_init as ai
+    loss_final = float(lm_loss(params, batch_fn(None), cfg)[0])
+    params0 = init_lm_params(jax.random.key(0), cfg)
+    loss_init = float(lm_loss(params0, batch_fn(None), cfg)[0])
+    assert loss_final < loss_init - 0.5, (loss_init, loss_final)
+    # checkpoints were written and resumable
+    assert ckpt.latest_step(str(tmp_path / "ck")) == 30
+
+
+@pytest.mark.slow
+def test_training_resume_continues(tmp_path):
+    """Kill after N steps, rerun: must resume from the checkpoint, not 0."""
+    cfg = ARCHS["fm"].smoke
+    from repro.models.recsys import fm_loss, init_fm_params
+    seen = []
+
+    def batch_fn(key):
+        return data_lib.fm_batch(cfg, 32, jax.random.key(1))
+
+    kw = dict(cfg=cfg, init_params_fn=lambda k: init_fm_params(k, cfg),
+              loss_fn=fm_loss, batch_fn=batch_fn,
+              ckpt_dir=str(tmp_path), ckpt_every=5, log_every=0,
+              print_fn=seen.append)
+    run_training(num_steps=10, **kw)
+    run_training(num_steps=20, **kw)  # second "launch" after a "failure"
+    assert any("[resume] restored step 10" in s for s in seen)
+
+
+def test_grad_accum_matches_full_batch():
+    """grad_accum=2 must produce (numerically close) the same update as a
+    single full-batch step."""
+    from repro.launch.steps import _train_step_fn
+    cfg = ARCHS["fm"].smoke
+    from repro.models.recsys import fm_loss, init_fm_params
+    key = jax.random.key(0)
+    params = init_fm_params(key, cfg)
+    batch = data_lib.fm_batch(cfg, 32, key)
+    s1 = _train_step_fn(fm_loss, cfg, grad_accum=1)
+    s2 = _train_step_fn(fm_loss, cfg, grad_accum=2)
+    p1, _, m1 = s1(params, adamw_init(params), batch)
+    p2, _, m2 = s2(params, adamw_init(params), batch)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_bf16_gradient_compression_close():
+    """compress_bf16 halves collective width; the update must stay close."""
+    params = {"w": jnp.linspace(-1, 1, 64)}
+    grads = {"w": jnp.linspace(0.5, -0.5, 64)}
+    p1, _, _ = adamw_update(grads, adamw_init(params), params, lr=1e-2)
+    p2, _, _ = adamw_update(grads, adamw_init(params), params, lr=1e-2,
+                            compress_bf16=True)
+    np.testing.assert_allclose(np.asarray(p1["w"]), np.asarray(p2["w"]),
+                               rtol=1e-2, atol=1e-3)
+
+
+def test_checkpoint_elastic_restore(tmp_path):
+    """Checkpoints are saved unsharded-logical: a restart may use any mesh.
+    Simulated by restoring into a differently-devised template (dtype cast
+    path) - shapes are logical, so reshard-on-load is a device_put."""
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    ckpt.save_checkpoint(str(tmp_path), 3, tree)
+    template = {"w": jnp.zeros((4, 4), jnp.float32)}
+    out, step = ckpt.restore_checkpoint(str(tmp_path), template)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(tree["w"]))
