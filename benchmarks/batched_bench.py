@@ -1,0 +1,54 @@
+"""Batched-engine throughput/latency section (mstserve workload).
+
+Measures aggregate graphs/sec of ``batched_msf`` at batch sizes {1, 8, 64}
+on one fixed graph class: the scaling signal for the serving subsystem.
+
+The bench class is deliberately *small* (V=64): that is the serving regime —
+many tiny user queries — where per-solve dispatch and round-loop overhead
+dominate and batching amortizes them across lanes (~2.5-3x aggregate
+throughput at b=64 on CPU).  Large graphs are compute-bound and batching is
+throughput-neutral there; see EXPERIMENTS.md §Batched for the measured
+crossover.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core.batched_mst import batched_msf, pack_padded
+from repro.graphs.batching import bucket_shape
+from repro.graphs.generator import generate_graph
+
+BATCH_SIZES = (1, 8, 64)
+BENCH_NODES = 64
+BENCH_DEGREE = 4
+
+
+def batched_throughput_rows(batch_sizes=BATCH_SIZES, *,
+                            num_nodes: int = BENCH_NODES,
+                            degree: int = BENCH_DEGREE,
+                            variant: str = "cas",
+                            repeats: int = 3) -> List[Tuple[str, float, str]]:
+    """(name, us_per_call, derived) rows; derived carries graphs_per_sec."""
+    rows = []
+    for b in batch_sizes:
+        graphs = [generate_graph(num_nodes, degree, seed=s)
+                  for s in range(b)]
+        e_pad, v_pad = bucket_shape(graphs[0][0].num_edges, num_nodes)
+        packed = pack_padded(graphs, padded_edges=e_pad, padded_nodes=v_pad)
+
+        def run():
+            return batched_msf(packed, num_nodes=v_pad, variant=variant
+                               ).total_weight.block_until_ready()
+
+        run()  # compile
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            run()
+            best = min(best, time.perf_counter() - t0)
+        us = best * 1e6
+        gps = b / best
+        rows.append((f"batched_msf_{variant}_V{num_nodes}_b{b}", us,
+                     f"graphs_per_sec={gps:.1f}"))
+    return rows

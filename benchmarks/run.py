@@ -3,12 +3,19 @@
 Prints ``name,us_per_call,derived`` CSV.  Default scope is the reduced
 graph sweep (10K/100K); pass --full for the paper's 1M-vertex classes and
 --scaling for the multi-device scaling figures (subprocess per worker
-count).
+count).  --json additionally writes ``BENCH_mst.json``
+(``{name: us_per_call}``) so the perf trajectory is machine-readable
+across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+
+JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                         "BENCH_mst.json")
 
 
 def main() -> None:
@@ -18,6 +25,8 @@ def main() -> None:
     ap.add_argument("--scaling", action="store_true",
                     help="run fig2/3/4 multi-device scaling (subprocesses)")
     ap.add_argument("--graph", default="Graph100K_6")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_mst.json next to the CSV output")
     args = ap.parse_args()
 
     from benchmarks import kernel_bench, mst_figures, roofline_bench
@@ -49,12 +58,24 @@ def main() -> None:
             rows.append((f"fig23_{args.graph}_{variant}_1proc", us,
                          f"rounds={int(r.num_rounds)};"
                          f"waves={int(r.num_waves)}"))
+    # Batched multi-graph engine: serving throughput at batch {1, 8, 64}.
+    from benchmarks import batched_bench
+    rows += batched_bench.batched_throughput_rows()
+
     rows += kernel_bench.all_rows()
     rows += roofline_bench.all_rows()
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+    if args.json:
+        path = os.path.normpath(JSON_PATH)
+        with open(path, "w") as f:
+            json.dump({name: round(us, 1) for name, us, _ in rows},
+                      f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,177 @@
+"""Batched multi-graph Borůvka MSF — the unit of work becomes a *batch*.
+
+Durbhakula (2020) evaluates one solve at a time; serving MST queries at
+production scale means many small/medium graphs in flight at once.  Sparse
+MSF formulations (Baer et al.) and "Engineering Massively Parallel MST
+Algorithms" both get their throughput from regular batched data-parallel
+kernels, and the single-graph engine in ``core/mst.py`` is already pure SPMD
+dataflow — so the whole engine vmaps (DESIGN.md §3).
+
+Layout: a :class:`BatchedGraph` packs ``B`` graphs into padded ``(B, E_pad)``
+edge arrays plus per-lane true sizes.  Padding is *sentinel-rank* padding:
+
+  * pad edges are self-loops ``(0, 0)`` with ``+inf`` weight — a self-loop is
+    "covered" in round 1, so its rank key becomes ``INT_SENTINEL`` and it
+    never becomes a candidate;
+  * pad vertices are isolated — no edge touches them, so they stay singleton
+    roots and are subtracted from ``num_components`` at the end.
+
+Every lane therefore converges independently inside ONE ``lax.while_loop``
+(the loop runs until the *slowest* lane finishes; finished lanes round-trip
+as no-ops: no candidates => parent/mask/rounds all fixed).  Shape bucketing
+to bound recompiles lives in ``graphs/batching.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mst import boruvka_round, rank_edges, _init_state
+from repro.core.types import Graph
+from repro.core.union_find import count_components
+
+PAD_WEIGHT = jnp.float32(jnp.inf)  # sorts after every real weight
+
+
+class BatchedGraph(NamedTuple):
+    """``B`` edge-list graphs packed into one padded pytree.
+
+    Attributes:
+      src:       (B, E_pad) int32; pad lanes hold self-loops (0, 0).
+      dst:       (B, E_pad) int32.
+      weight:    (B, E_pad) float32; pad entries are +inf.
+      num_nodes: (B,) int32 true vertex count per lane (<= padded V).
+      num_edges: (B,) int32 true edge count per lane (<= E_pad).
+    """
+
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    weight: jnp.ndarray
+    num_nodes: jnp.ndarray
+    num_edges: jnp.ndarray
+
+    @property
+    def batch_size(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def padded_edges(self) -> int:
+        return int(self.src.shape[1])
+
+
+class BatchedMSTResult(NamedTuple):
+    """Per-lane forest results (padded shapes; trim with ``num_*``).
+
+    ``num_components`` already excludes pad vertices, so a connected lane
+    reads 1 regardless of padding.
+    """
+
+    parent: jnp.ndarray          # (B, V_pad)
+    mst_mask: jnp.ndarray        # (B, E_pad)
+    num_rounds: jnp.ndarray      # (B,)
+    num_waves: jnp.ndarray       # (B,)
+    total_weight: jnp.ndarray    # (B,)
+    num_components: jnp.ndarray  # (B,) pad-singleton corrected
+
+
+def pack_padded(graphs: Sequence[Tuple[Graph, int]], *, padded_edges: int,
+                padded_nodes: int) -> BatchedGraph:
+    """Stack ``(graph, num_nodes)`` pairs into one padded BatchedGraph.
+
+    Host-side (numpy) construction; callers wanting automatic power-of-two
+    bucketing should go through ``graphs.batching.pack_graphs``.
+    """
+    b = len(graphs)
+    src = np.zeros((b, padded_edges), np.int32)
+    dst = np.zeros((b, padded_edges), np.int32)
+    weight = np.full((b, padded_edges), np.inf, np.float32)
+    nn = np.zeros((b,), np.int32)
+    ne = np.zeros((b,), np.int32)
+    for i, (g, v) in enumerate(graphs):
+        e = g.num_edges
+        if e > padded_edges or v > padded_nodes:
+            raise ValueError(f"graph {i} ({v}V/{e}E) exceeds bucket "
+                             f"({padded_nodes}V/{padded_edges}E)")
+        src[i, :e] = np.asarray(g.src)
+        dst[i, :e] = np.asarray(g.dst)
+        weight[i, :e] = np.asarray(g.weight)
+        nn[i] = v
+        ne[i] = e
+    return BatchedGraph(jnp.asarray(src), jnp.asarray(dst),
+                        jnp.asarray(weight), jnp.asarray(nn),
+                        jnp.asarray(ne))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_nodes", "variant", "track_covered",
+                     "max_lock_waves"))
+def batched_msf(batch: BatchedGraph, *, num_nodes: int,
+                variant: str = "cas", track_covered: bool = True,
+                max_lock_waves: int = 16) -> BatchedMSTResult:
+    """Borůvka MSF over every lane of ``batch`` in one jitted while_loop.
+
+    Args:
+      batch: padded (B, E_pad) graphs; see module docstring for the padding
+        contract (``pack_padded`` / ``pack_graphs`` construct it).
+      num_nodes: padded per-lane vertex count V_pad (static).
+      variant: "cas" or "lock" — same paper variants as the single engine;
+        the lock-variant's retry-wave while_loop batches via lax select
+        masking, so fast lanes idle while contended lanes drain.
+
+    Returns per-lane results; lane i is only meaningful up to
+    ``batch.num_nodes[i]`` / ``batch.num_edges[i]``.
+    """
+    e_pad = batch.src.shape[1]
+    rank, order = jax.vmap(rank_edges)(batch.weight)
+
+    def one_lane_init(_):
+        return _init_state(num_nodes, e_pad, e_pad)
+
+    init = jax.vmap(one_lane_init)(batch.num_nodes)
+
+    round_fn = jax.vmap(
+        functools.partial(boruvka_round, variant=variant,
+                          track_covered=track_covered, num_nodes=num_nodes,
+                          max_lock_waves=max_lock_waves))
+
+    def cond(s):
+        return ~jnp.all(s.done)
+
+    def body(s):
+        return round_fn(s, batch.src, batch.dst, rank,
+                        batch.src, batch.dst, order)
+
+    final = jax.lax.while_loop(cond, body, init)
+
+    total = jnp.sum(jnp.where(final.mst_mask, batch.weight, 0.0), axis=1)
+    comp = jax.vmap(count_components)(final.parent)
+    pad_singletons = jnp.int32(num_nodes) - batch.num_nodes
+    return BatchedMSTResult(
+        parent=final.parent,
+        mst_mask=final.mst_mask,
+        num_rounds=final.num_rounds,
+        num_waves=final.num_waves,
+        total_weight=total,
+        num_components=comp - pad_singletons,
+    )
+
+
+def unpack_lane(batch: BatchedGraph, result: BatchedMSTResult, lane: int):
+    """Trim lane ``lane`` to its true sizes: (mst_mask (E,), parent (V,),
+    total_weight, num_components, num_rounds).
+
+    One-lane convenience; bulk consumers (``graphs.batching
+    .unpack_results``) transfer the whole result once instead.
+    """
+    v = int(batch.num_nodes[lane])
+    e = int(batch.num_edges[lane])
+    return (np.asarray(result.mst_mask[lane])[:e],
+            np.asarray(result.parent[lane])[:v],
+            float(result.total_weight[lane]),
+            int(result.num_components[lane]),
+            int(result.num_rounds[lane]))

@@ -1,0 +1,105 @@
+"""Shape bucketing for the batched MST engine.
+
+``batched_msf`` is jitted on the padded shapes ``(B, E_pad)`` x ``V_pad``:
+every distinct shape is a recompile.  The single-graph engine already bounds
+its compaction shapes by padding survivor counts to the next power of two
+(``core/mst._python_loop``); this module applies the same idiom at the
+*batch* level — every graph is rounded up to a power-of-two (edge, vertex)
+bucket, so a stream of arbitrary request sizes compiles at most
+``log2(E_max) * log2(V_max)`` engine variants, and in practice a handful.
+
+``pack_graphs`` groups a request list into buckets; ``unpack_results``
+scatters per-lane results back to the original request order.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.batched_mst import (BatchedGraph, BatchedMSTResult,
+                                    pack_padded)
+from repro.core.types import Graph
+
+MIN_BUCKET = 64  # below this, shapes collapse into one tiny bucket
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= max(n, MIN_BUCKET)."""
+    n = max(int(n), MIN_BUCKET)
+    return 1 << (n - 1).bit_length()
+
+
+def bucket_shape(num_edges: int, num_nodes: int) -> Tuple[int, int]:
+    """(E_pad, V_pad) power-of-two bucket for one graph."""
+    return next_pow2(num_edges), next_pow2(num_nodes)
+
+
+class PackedBucket(NamedTuple):
+    """One shape bucket of the packed request list.
+
+    Attributes:
+      graph:        padded BatchedGraph, one lane per member graph.
+      padded_nodes: V_pad — the static ``num_nodes`` to pass to
+                    ``batched_msf``.
+      indices:      original position (into the ``pack_graphs`` input) of
+                    each lane.
+    """
+
+    graph: BatchedGraph
+    padded_nodes: int
+    indices: List[int]
+
+    @property
+    def padded_edges(self) -> int:
+        return self.graph.padded_edges
+
+
+def pack_graphs(graphs: Sequence[Tuple[Graph, int]],
+                *, max_batch: int | None = None) -> List[PackedBucket]:
+    """Group ``(graph, num_nodes)`` requests into power-of-two buckets.
+
+    Args:
+      graphs: request list; order defines the index space that
+        ``unpack_results`` restores.
+      max_batch: optional cap on lanes per bucket (micro-batching); buckets
+        overflow into multiple PackedBuckets of the same shape.
+    """
+    by_shape: Dict[Tuple[int, int], List[int]] = {}
+    for i, (g, v) in enumerate(graphs):
+        by_shape.setdefault(bucket_shape(g.num_edges, v), []).append(i)
+
+    buckets: List[PackedBucket] = []
+    for (e_pad, v_pad), idxs in sorted(by_shape.items()):
+        for lo in range(0, len(idxs), max_batch or len(idxs)):
+            chunk = idxs[lo:lo + (max_batch or len(idxs))]
+            bg = pack_padded([graphs[i] for i in chunk],
+                             padded_edges=e_pad, padded_nodes=v_pad)
+            buckets.append(PackedBucket(bg, v_pad, list(chunk)))
+    return buckets
+
+
+def unpack_results(buckets: Sequence[PackedBucket],
+                   results: Sequence[BatchedMSTResult]) -> List[tuple]:
+    """Scatter per-lane results back to original request order.
+
+    Returns a list (len == total requests) of per-graph tuples
+    ``(mst_mask, parent, total_weight, num_components, num_rounds)`` trimmed
+    to each graph's true sizes — the identity inverse of ``pack_graphs``.
+    """
+    n = sum(len(b.indices) for b in buckets)
+    out: List[tuple] = [None] * n  # type: ignore[list-item]
+    for bucket, res in zip(buckets, results):
+        # One device->host transfer per bucket (not per lane per field).
+        res_np = jax.device_get(res)
+        nn = np.asarray(bucket.graph.num_nodes)
+        ne = np.asarray(bucket.graph.num_edges)
+        for lane, orig in enumerate(bucket.indices):
+            v, e = int(nn[lane]), int(ne[lane])
+            out[orig] = (res_np.mst_mask[lane, :e],
+                         res_np.parent[lane, :v],
+                         float(res_np.total_weight[lane]),
+                         int(res_np.num_components[lane]),
+                         int(res_np.num_rounds[lane]))
+    return out

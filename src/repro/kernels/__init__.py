@@ -9,10 +9,11 @@ This container is CPU-only: kernels are validated with interpret=True, which
 executes the kernel body in Python; the BlockSpecs encode the real VMEM
 tiling the TPU target would use.
 """
-from repro.kernels.segment_min_edges.ops import segment_min_edges
+from repro.kernels.segment_min_edges.ops import (batched_segment_min_edges,
+                                                 segment_min_edges)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.fm_interaction.ops import fm_interaction_kernel
 from repro.kernels.gnn_spmm.ops import gather_segment_sum
 
-__all__ = ["segment_min_edges", "flash_attention", "fm_interaction_kernel",
-           "gather_segment_sum"]
+__all__ = ["segment_min_edges", "batched_segment_min_edges",
+           "flash_attention", "fm_interaction_kernel", "gather_segment_sum"]

@@ -15,6 +15,13 @@ TPU adaptation of the paper's per-thread edge scan (DESIGN.md §6):
 The irregular per-edge update runs on the scalar unit via fori_loop; the
 payload is a single int32, so the sweep is DMA-bound on the edge stream -
 the right regime for this kernel (see EXPERIMENTS.md §Perf).
+
+The batched variant extends the grid to ``(batch, edge_block)``: every
+batch lane streams its own edge row while its ``minimum[]`` row stays
+VMEM-resident across that lane's edge steps (index_map pins the output row
+per lane, re-initialized when the edge axis restarts).  Grid iteration is
+row-major, so lane b's edge sweep is contiguous - the same sequential-DMA
+shape as the single-graph kernel, repeated per lane.
 """
 from __future__ import annotations
 
@@ -68,5 +75,53 @@ def segment_min_edges_pallas(keys, cu, cv, num_nodes: int,
         in_specs=[spec_e, spec_e, spec_e],
         out_specs=spec_out,
         out_shape=jax.ShapeDtypeStruct((num_nodes,), jnp.int32),
+        interpret=interpret,
+    )(keys, cu, cv)
+
+
+def _batched_kernel(keys_ref, cu_ref, cv_ref, out_ref):
+    # Edge axis restarts at 0 for each batch lane => re-init this lane's
+    # VMEM-resident minimum[] row.
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, INT_SENTINEL)
+
+    block = keys_ref.shape[1]
+
+    lane = pl.dslice(0, 1)  # block shape is (1, ...): single-lane row
+
+    def body(i, _):
+        k = pl.load(keys_ref, (lane, pl.dslice(i, 1)))
+        u = pl.load(cu_ref, (lane, pl.dslice(i, 1)))[0, 0]
+        v = pl.load(cv_ref, (lane, pl.dslice(i, 1)))[0, 0]
+        cur_u = pl.load(out_ref, (lane, pl.dslice(u, 1)))
+        pl.store(out_ref, (lane, pl.dslice(u, 1)), jnp.minimum(cur_u, k))
+        cur_v = pl.load(out_ref, (lane, pl.dslice(v, 1)))
+        pl.store(out_ref, (lane, pl.dslice(v, 1)), jnp.minimum(cur_v, k))
+        return 0
+
+    jax.lax.fori_loop(0, block, body, 0)
+
+
+def batched_segment_min_edges_pallas(keys, cu, cv, num_nodes: int,
+                                     block_edges: int = 4096,
+                                     interpret: bool = True):
+    """keys/cu/cv: (B, E) int32 -> (B, V) int32 per-lane per-vertex min key.
+
+    E must be a multiple of block_edges (pad with INT_SENTINEL keys).
+    VMEM budget per grid step: block_edges*3*4B streamed + num_nodes*4B
+    resident (one lane's minimum[] row).
+    """
+    b, e = keys.shape
+    assert e % block_edges == 0, (e, block_edges)
+    grid = (b, e // block_edges)
+    spec_e = pl.BlockSpec((1, block_edges), lambda bi, i: (bi, i))
+    spec_out = pl.BlockSpec((1, num_nodes), lambda bi, i: (bi, 0))
+    return pl.pallas_call(
+        _batched_kernel,
+        grid=grid,
+        in_specs=[spec_e, spec_e, spec_e],
+        out_specs=spec_out,
+        out_shape=jax.ShapeDtypeStruct((b, num_nodes), jnp.int32),
         interpret=interpret,
     )(keys, cu, cv)

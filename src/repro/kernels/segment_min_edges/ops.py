@@ -1,4 +1,9 @@
-"""Public wrapper: padding, block selection, interpret switch."""
+"""Public wrapper: padding, block selection, interpret switch.
+
+``interpret`` defaults to auto-detection: on a TPU backend the kernel is
+compiled for real; everywhere else (CPU test containers) it runs in
+interpreter mode.  Pass an explicit bool to override.
+"""
 from __future__ import annotations
 
 import functools
@@ -7,13 +12,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import INT_SENTINEL
-from repro.kernels.segment_min_edges.kernel import segment_min_edges_pallas
+from repro.kernels.segment_min_edges.kernel import (
+    batched_segment_min_edges_pallas, segment_min_edges_pallas)
+
+
+def _resolve_interpret(interpret) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("num_nodes", "block_edges", "interpret"))
 def segment_min_edges(keys, cu, cv, *, num_nodes: int,
-                      block_edges: int = 4096, interpret: bool = True):
+                      block_edges: int = 4096, interpret: bool | None = None):
     e = keys.shape[0]
     block = min(block_edges, max(256, e))
     pad = (-e) % block
@@ -23,4 +35,32 @@ def segment_min_edges(keys, cu, cv, *, num_nodes: int,
         cu = jnp.concatenate([cu, jnp.zeros((pad,), cu.dtype)])
         cv = jnp.concatenate([cv, jnp.zeros((pad,), cv.dtype)])
     return segment_min_edges_pallas(keys, cu, cv, num_nodes,
-                                    block_edges=block, interpret=interpret)
+                                    block_edges=block,
+                                    interpret=_resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_nodes", "block_edges", "interpret"))
+def batched_segment_min_edges(keys, cu, cv, *, num_nodes: int,
+                              block_edges: int = 4096,
+                              interpret: bool | None = None):
+    """(B, E) int32 keys/cu/cv -> (B, V) per-lane per-vertex min key.
+
+    Batch-axis extension of ``segment_min_edges`` for the batched Borůvka
+    engine: grid (batch, edge_block), one VMEM-resident minimum[] row per
+    lane.  Pad lanes (key == INT_SENTINEL, cu == cv == 0) are harmless -
+    sentinel never wins a minimum.
+    """
+    _, e = keys.shape
+    block = min(block_edges, max(256, e))
+    pad = (-e) % block
+    if pad:
+        def pad_edges(x, fill):
+            return jnp.pad(x, ((0, 0), (0, pad)), constant_values=fill)
+
+        keys = pad_edges(keys, INT_SENTINEL)
+        cu = pad_edges(cu, 0)
+        cv = pad_edges(cv, 0)
+    return batched_segment_min_edges_pallas(
+        keys, cu, cv, num_nodes, block_edges=block,
+        interpret=_resolve_interpret(interpret))

@@ -9,3 +9,10 @@ def segment_min_edges_ref(keys, cu, cv, num_nodes: int):
     best_u = jax.ops.segment_min(keys, cu, num_segments=num_nodes)
     best_v = jax.ops.segment_min(keys, cv, num_segments=num_nodes)
     return jnp.minimum(best_u, best_v)
+
+
+def batched_segment_min_edges_ref(keys, cu, cv, num_nodes: int):
+    """(B, E) -> (B, V): the single-graph oracle vmapped over lanes."""
+    return jax.vmap(
+        lambda k, u, v: segment_min_edges_ref(k, u, v, num_nodes)
+    )(keys, cu, cv)

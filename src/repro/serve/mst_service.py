@@ -1,0 +1,217 @@
+"""mstserve: micro-batching MST request scheduler + result cache.
+
+The serving analogue of ``serve/decode.py``'s host-side driver, for MST
+queries instead of tokens: callers ``submit`` graphs, the service queues
+them, and ``flush`` drains the queue in micro-batches —
+
+    queue -> content-hash cache probe -> bucket by padded shape
+          -> ``batched_msf`` per bucket -> scatter responses
+
+Shape bucketing (``graphs/batching.pack_graphs``) keeps the number of
+compiled engine variants bounded while mixed request sizes share lanes;
+the LRU cache turns repeated graphs (hot queries from millions of users hit
+the same road network / social subgraph again and again) into O(1) lookups.
+
+Everything is synchronous and single-host: the scheduling *structure* is
+what later PRs make async / multi-device (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.batched_mst import batched_msf
+from repro.core.types import Graph
+from repro.graphs.batching import pack_graphs, unpack_results
+
+
+@dataclass(frozen=True)
+class MSTResponse:
+    """One solved request, trimmed to the graph's true sizes."""
+
+    request_id: int
+    mst_mask: np.ndarray      # (E,) bool
+    parent: np.ndarray        # (V,) int32
+    total_weight: float
+    num_components: int
+    num_rounds: int
+    cached: bool = False
+
+
+def graph_key(graph: Graph, num_nodes: int) -> str:
+    """Content hash of a request — identical graphs dedupe in the cache."""
+    h = hashlib.sha1()
+    h.update(np.int64(num_nodes).tobytes())
+    for arr, dtype in ((graph.src, np.int32), (graph.dst, np.int32),
+                      (graph.weight, np.float32)):
+        a = np.ascontiguousarray(np.asarray(arr, dtype=dtype))
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+@dataclass
+class ServiceStats:
+    submitted: int = 0
+    served: int = 0
+    cache_hits: int = 0
+    engine_solves: int = 0   # lanes actually run through batched_msf
+    flushes: int = 0
+    buckets: int = 0
+    bucket_shapes: Dict[Tuple[int, int], int] = field(default_factory=dict)
+
+
+class MSTService:
+    """Synchronous micro-batching MST server.
+
+    Args:
+      variant: Borůvka hooking variant for the engine ("cas" / "lock").
+      max_batch: lane cap per engine call; a bucket with more members
+        overflows into multiple solves (bounds padded-batch memory).
+      cache_size: LRU capacity in *results*; 0 disables caching.
+    """
+
+    def __init__(self, *, variant: str = "cas", max_batch: int = 64,
+                 cache_size: int = 256):
+        self.variant = variant
+        self.max_batch = int(max_batch)
+        self.cache_size = int(cache_size)
+        self.stats = ServiceStats()
+        self._cache: "OrderedDict[str, MSTResponse]" = OrderedDict()
+        # pending: (request_id, key, graph, num_nodes)
+        self._pending: List[Tuple[int, str, Graph, int]] = []
+        # solved but not yet handed to any caller (a solve()/solve_many()
+        # drained the queue for requests submitted earlier); delivered by
+        # the next flush(), in submit order.
+        self._unclaimed: List[MSTResponse] = []
+        self._next_id = 0
+
+    # -- request side -------------------------------------------------------
+
+    def submit(self, graph: Graph, num_nodes: int) -> int:
+        """Queue one request; returns its request id (flush order = submit
+        order)."""
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append((rid, graph_key(graph, num_nodes), graph,
+                              num_nodes))
+        self.stats.submitted += 1
+        return rid
+
+    def flush(self) -> List[MSTResponse]:
+        """Drain the queue; responses come back in submit order.
+
+        Also delivers any responses a previous ``solve``/``solve_many``
+        computed for earlier submissions but did not claim.
+        """
+        unclaimed, self._unclaimed = self._unclaimed, []
+        pending, self._pending = self._pending, []
+        if not pending:
+            return unclaimed
+        self.stats.flushes += 1
+
+        responses: Dict[int, MSTResponse] = {}
+        misses: List[Tuple[int, str, Graph, int]] = []
+        for rid, key, g, v in pending:
+            hit = self._cache_get(key)
+            if hit is not None:
+                self.stats.cache_hits += 1
+                responses[rid] = MSTResponse(rid, hit.mst_mask, hit.parent,
+                                             hit.total_weight,
+                                             hit.num_components,
+                                             hit.num_rounds, cached=True)
+            else:
+                misses.append((rid, key, g, v))
+
+        if misses:
+            # Intra-flush dedup: identical graphs (same content key) share
+            # one engine lane; duplicates fan out from the first solve.
+            unique: Dict[str, Tuple[int, str, Graph, int]] = {}
+            for m in misses:
+                unique.setdefault(m[1], m)
+            solve_list = list(unique.values())
+            buckets = pack_graphs([(g, v) for _, _, g, v in solve_list],
+                                  max_batch=self.max_batch)
+            results = []
+            for b in buckets:
+                self.stats.buckets += 1
+                shape = (b.padded_edges, b.padded_nodes)
+                self.stats.bucket_shapes[shape] = (
+                    self.stats.bucket_shapes.get(shape, 0)
+                    + len(b.indices))
+                self.stats.engine_solves += len(b.indices)
+                results.append(batched_msf(b.graph, num_nodes=b.padded_nodes,
+                                           variant=self.variant))
+            per_request = unpack_results(buckets, results)
+            by_key: Dict[str, MSTResponse] = {}
+            for (rid, key, _, _), (mask, parent, tw, nc, nr) in zip(
+                    solve_list, per_request):
+                # Responses are shared via the cache: freeze the arrays so
+                # one caller's mutation can't corrupt later hits.
+                mask.setflags(write=False)
+                parent.setflags(write=False)
+                resp = MSTResponse(rid, mask, parent, tw, nc, nr)
+                by_key[key] = resp
+                self._cache_put(key, resp)
+            for rid, key, _, _ in misses:
+                base = by_key[key]
+                responses[rid] = (base if rid == base.request_id else
+                                  MSTResponse(rid, base.mst_mask,
+                                              base.parent, base.total_weight,
+                                              base.num_components,
+                                              base.num_rounds))
+
+        self.stats.served += len(pending)
+        return unclaimed + [responses[rid] for rid, _, _, _ in pending]
+
+    def solve(self, graph: Graph, num_nodes: int) -> MSTResponse:
+        """Convenience: submit one request and flush immediately.
+
+        Requests submitted earlier are solved in the same flush; their
+        responses stay queued for the next ``flush()`` call.
+        """
+        return self.solve_many([(graph, num_nodes)])[0]
+
+    def solve_many(self, requests: Sequence[Tuple[Graph, int]]
+                   ) -> List[MSTResponse]:
+        """Submit a request list and flush once; results in request order.
+
+        Responses for earlier unflushed submissions are retained for the
+        next ``flush()`` rather than dropped.
+        """
+        ids = set(self.submit(g, v) for g, v in requests)
+        mine: Dict[int, MSTResponse] = {}
+        for r in self.flush():
+            if r.request_id in ids:
+                mine[r.request_id] = r
+            else:
+                self._unclaimed.append(r)
+        return [mine[i] for i in sorted(ids)]
+
+    # -- cache --------------------------------------------------------------
+
+    def _cache_get(self, key: str) -> Optional[MSTResponse]:
+        if self.cache_size <= 0:
+            return None
+        resp = self._cache.get(key)
+        if resp is not None:
+            self._cache.move_to_end(key)  # LRU touch
+        return resp
+
+    def _cache_put(self, key: str, resp: MSTResponse) -> None:
+        if self.cache_size <= 0:
+            return
+        self._cache[key] = resp
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    @property
+    def cache_len(self) -> int:
+        return len(self._cache)
+
+
+__all__ = ["MSTService", "MSTResponse", "ServiceStats", "graph_key"]

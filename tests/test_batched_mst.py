@@ -1,0 +1,218 @@
+"""Batched engine, shape bucketing, and mstserve vs the Kruskal oracle."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.batched_mst import batched_msf, pack_padded, unpack_lane
+from repro.core.oracle import kruskal_numpy
+from repro.core.types import Graph
+from repro.graphs.batching import (bucket_shape, next_pow2, pack_graphs,
+                                   unpack_results)
+from repro.graphs.generator import generate_graph
+from repro.serve.mst_service import MSTService, graph_key
+
+MIXED = [(50, 3, 0), (120, 4, 1), (33, 5, 2), (200, 3, 3),
+         (64, 6, 4), (10, 2, 5), (90, 3, 6), (150, 5, 7)]
+
+
+def _oracle(g, v):
+    return kruskal_numpy(g.src, g.dst, g.weight, v)
+
+
+def _two_component_graph(seed):
+    """Disjoint union of two random graphs => an honest forest input."""
+    g1, v1 = generate_graph(40, 3, seed=seed, as_jax=False)
+    g2, v2 = generate_graph(25, 4, seed=seed + 1, as_jax=False)
+    src = np.concatenate([g1.src, g2.src + v1]).astype(np.int32)
+    dst = np.concatenate([g1.dst, g2.dst + v1]).astype(np.int32)
+    w = np.concatenate([g1.weight, g2.weight]).astype(np.float32)
+    return Graph(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)), v1 + v2
+
+
+@pytest.mark.parametrize("variant", ["cas", "lock"])
+def test_batched_mixed_sizes_match_oracle_per_lane(variant):
+    """>= 8 mixed-size graphs packed through buckets: every lane's edge set,
+    weight and component count must equal the per-graph Kruskal oracle."""
+    reqs = [generate_graph(n, d, seed=s) for n, d, s in MIXED]
+    buckets = pack_graphs(reqs)
+    assert sum(len(b.indices) for b in buckets) == len(reqs)
+    results = [batched_msf(b.graph, num_nodes=b.padded_nodes,
+                           variant=variant) for b in buckets]
+    per = unpack_results(buckets, results)
+    for i, (g, v) in enumerate(reqs):
+        om, ow, _ = _oracle(g, v)
+        mask, parent, tw, nc, _ = per[i]
+        assert mask.shape == (g.num_edges,)
+        assert parent.shape == (v,)
+        assert (mask == om).all()
+        assert np.isclose(tw, ow, rtol=1e-5)
+        assert nc == 1
+        assert mask.sum() == v - 1
+
+
+@pytest.mark.parametrize("variant", ["cas", "lock"])
+def test_batched_duplicate_weights(variant):
+    """Ties everywhere: the (weight, edge_id) rank must keep lanes exact."""
+    reqs = []
+    for s in range(4):
+        g, v = generate_graph(80, 4, seed=s)
+        w = jnp.round(g.weight * 8) / 8.0  # heavy ties
+        reqs.append((Graph(g.src, g.dst, w), v))
+    e_pad = next_pow2(max(g.num_edges for g, _ in reqs))
+    v_pad = next_pow2(max(v for _, v in reqs))
+    bg = pack_padded(reqs, padded_edges=e_pad, padded_nodes=v_pad)
+    res = batched_msf(bg, num_nodes=v_pad, variant=variant)
+    for i, (g, v) in enumerate(reqs):
+        om, ow, _ = _oracle(g, v)
+        mask, _, tw, nc, _ = unpack_lane(bg, res, i)
+        assert (mask == om).all()
+        assert nc == 1
+
+
+@pytest.mark.parametrize("variant", ["cas", "lock"])
+def test_batched_disconnected_forest(variant):
+    """A lane that is a forest (2 components) must converge and report
+    num_components excluding pad vertices."""
+    reqs = [_two_component_graph(0), generate_graph(60, 3, seed=9),
+            _two_component_graph(10)]
+    e_pad = next_pow2(max(g.num_edges for g, _ in reqs))
+    v_pad = next_pow2(max(v for _, v in reqs))
+    bg = pack_padded(reqs, padded_edges=e_pad, padded_nodes=v_pad)
+    res = batched_msf(bg, num_nodes=v_pad, variant=variant)
+    expected_comps = [2, 1, 2]
+    for i, (g, v) in enumerate(reqs):
+        om, ow, oc = _oracle(g, v)
+        mask, _, tw, nc, _ = unpack_lane(bg, res, i)
+        assert (mask == om).all()
+        assert np.isclose(tw, ow, rtol=1e-5)
+        assert nc == expected_comps[i] == oc
+
+
+def test_cas_and_lock_agree_lane_for_lane():
+    reqs = [generate_graph(n, d, seed=s) for n, d, s in MIXED[:5]]
+    buckets = pack_graphs(reqs)
+    for b in buckets:
+        r1 = batched_msf(b.graph, num_nodes=b.padded_nodes, variant="cas")
+        r2 = batched_msf(b.graph, num_nodes=b.padded_nodes, variant="lock")
+        assert (np.asarray(r1.mst_mask) == np.asarray(r2.mst_mask)).all()
+
+
+def test_bucketing_round_trip_identity():
+    """pack_graphs -> unpack_results restores request order and true shapes
+    regardless of how buckets permuted the lanes."""
+    reqs = [generate_graph(n, d, seed=s) for n, d, s in MIXED]
+    buckets = pack_graphs(reqs, max_batch=3)  # force bucket overflow too
+    assert all(len(b.indices) <= 3 for b in buckets)
+    # Every graph's true edges survive packing verbatim in its lane.
+    for b in buckets:
+        for lane, orig in enumerate(b.indices):
+            g, v = reqs[orig]
+            e = g.num_edges
+            assert (np.asarray(b.graph.src[lane, :e])
+                    == np.asarray(g.src)).all()
+            assert (np.asarray(b.graph.dst[lane, :e])
+                    == np.asarray(g.dst)).all()
+            assert np.allclose(np.asarray(b.graph.weight[lane, :e]),
+                               np.asarray(g.weight))
+            assert int(b.graph.num_nodes[lane]) == v
+            # padding contract: self-loops with +inf weight
+            assert (np.asarray(b.graph.src[lane, e:]) == 0).all()
+            assert np.isinf(np.asarray(b.graph.weight[lane, e:])).all()
+    results = [batched_msf(b.graph, num_nodes=b.padded_nodes)
+               for b in buckets]
+    per = unpack_results(buckets, results)
+    assert len(per) == len(reqs)
+    for (g, v), (mask, parent, _, _, _) in zip(reqs, per):
+        assert mask.shape == (g.num_edges,)
+        assert parent.shape == (v,)
+
+
+def test_bucket_shape_pow2_bounds():
+    assert next_pow2(1) == 64  # MIN_BUCKET floor
+    assert next_pow2(64) == 64
+    assert next_pow2(65) == 128
+    assert bucket_shape(300, 100) == (512, 128)
+
+
+def test_mst_service_cache_hit_and_ordering():
+    svc = MSTService(variant="cas", max_batch=4)
+    reqs = [generate_graph(n, d, seed=s) for n, d, s in MIXED]
+    responses = svc.solve_many(reqs)
+    assert [r.request_id for r in responses] == list(range(len(reqs)))
+    assert not any(r.cached for r in responses)
+    for (g, v), r in zip(reqs, responses):
+        om, ow, _ = _oracle(g, v)
+        assert (r.mst_mask == om).all()
+        assert np.isclose(r.total_weight, ow, rtol=1e-5)
+    solves_before = svc.stats.engine_solves
+
+    # Replay a shuffled subset + one new graph: hits stay hits, order holds.
+    new_g = generate_graph(77, 3, seed=42)
+    replay = [reqs[5], reqs[0], new_g, reqs[3]]
+    again = svc.solve_many(replay)
+    assert [r.cached for r in again] == [True, True, False, True]
+    assert svc.stats.engine_solves == solves_before + 1
+    assert svc.stats.cache_hits == 3
+    for (g, v), r in zip(replay, again):
+        om, _, _ = _oracle(g, v)
+        assert (r.mst_mask == om).all()
+
+
+def test_mst_service_lru_eviction():
+    svc = MSTService(cache_size=2)
+    reqs = [generate_graph(30, 3, seed=s) for s in range(3)]
+    for g, v in reqs:
+        svc.solve(g, v)
+    assert svc.cache_len == 2
+    # Oldest (seed 0) evicted; newest two are hits.
+    assert not svc.solve(*reqs[0]).cached
+    assert svc.solve(*reqs[2]).cached
+
+
+def test_mst_service_intra_flush_dedup():
+    """N identical graphs in one micro-batch cost one engine lane."""
+    svc = MSTService()
+    g, v = generate_graph(40, 3, seed=0)
+    other = generate_graph(50, 4, seed=1)
+    responses = svc.solve_many([(g, v), other, (g, v), (g, v)])
+    assert svc.stats.engine_solves == 2  # one lane for g, one for other
+    om, _, _ = _oracle(g, v)
+    for r in (responses[0], responses[2], responses[3]):
+        assert (r.mst_mask == om).all()
+    assert [r.request_id for r in responses] == [0, 1, 2, 3]
+
+
+def test_mst_service_unflushed_submissions_not_lost():
+    """solve()/solve_many() drain the queue; earlier submissions' responses
+    must surface on the next flush, not vanish."""
+    svc = MSTService()
+    g0 = generate_graph(30, 3, seed=0)
+    g1 = generate_graph(45, 4, seed=1)
+    rid0 = svc.submit(*g0)
+    r1 = svc.solve(*g1)  # flushes both
+    assert r1.request_id == 1
+    later = svc.flush()
+    assert [r.request_id for r in later] == [rid0]
+    om, _, _ = _oracle(*g0)
+    assert (later[0].mst_mask == om).all()
+
+
+def test_mst_service_responses_are_frozen():
+    """Cache entries share arrays with responses; they must be read-only so
+    a caller can't corrupt future hits."""
+    svc = MSTService()
+    g, v = generate_graph(35, 3, seed=2)
+    r = svc.solve(g, v)
+    with pytest.raises(ValueError):
+        r.mst_mask[0] = True
+    with pytest.raises(ValueError):
+        r.parent[0] = 5
+
+
+def test_graph_key_content_hash():
+    g1, v1 = generate_graph(40, 3, seed=0)
+    g2, _ = generate_graph(40, 3, seed=1)
+    assert graph_key(g1, v1) == graph_key(Graph(g1.src, g1.dst, g1.weight),
+                                          v1)
+    assert graph_key(g1, v1) != graph_key(g2, v1)
+    assert graph_key(g1, v1) != graph_key(g1, v1 + 1)

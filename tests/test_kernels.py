@@ -9,8 +9,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.segment_min_edges.ops import segment_min_edges
-from repro.kernels.segment_min_edges.ref import segment_min_edges_ref
+from repro.kernels.segment_min_edges.ops import (batched_segment_min_edges,
+                                                 segment_min_edges)
+from repro.kernels.segment_min_edges.ref import (
+    batched_segment_min_edges_ref, segment_min_edges_ref)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.fm_interaction.ops import fm_interaction_kernel
@@ -80,6 +82,45 @@ def test_gnn_spmm_sweep(v, e, d, block):
     ref = gather_segment_sum_ref(src, dst, w, feat, v)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
                                atol=1e-4)
+
+
+@pytest.mark.parametrize("b,v,e,block", [(1, 17, 96, 32), (3, 64, 512, 128),
+                                         (4, 40, 200, 256)])
+def test_batched_segment_min_sweep(b, v, e, block):
+    key = jax.random.key(b * v + e)
+    keys = jnp.stack([
+        jax.random.permutation(jax.random.fold_in(key, i), e)
+        for i in range(b)]).astype(jnp.int32)
+    cu = jax.random.randint(key, (b, e), 0, v, jnp.int32)
+    cv = jax.random.randint(jax.random.key(e), (b, e), 0, v, jnp.int32)
+    out = batched_segment_min_edges(keys, cu, cv, num_nodes=v,
+                                    block_edges=block)
+    ref = batched_segment_min_edges_ref(keys, cu, cv, v)
+    assert out.shape == (b, v)
+    assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+def test_batched_segment_min_matches_engine_padding():
+    """Sentinel-rank padding contract: pad lanes (key=INT_SENTINEL,
+    cu=cv=0) must never displace a real minimum."""
+    from repro.core.types import INT_SENTINEL
+    v, e = 32, 100
+    keys = jax.random.permutation(jax.random.key(0), e).astype(jnp.int32)
+    cu = jax.random.randint(jax.random.key(1), (e,), 0, v, jnp.int32)
+    cv = jax.random.randint(jax.random.key(2), (e,), 0, v, jnp.int32)
+    pad = jnp.full((28,), INT_SENTINEL, jnp.int32)
+    keys2 = jnp.stack([jnp.concatenate([keys, pad]),
+                       jnp.concatenate([pad, keys])])
+    zeros = jnp.zeros((28,), jnp.int32)
+    cu2 = jnp.stack([jnp.concatenate([cu, zeros]),
+                     jnp.concatenate([zeros, cu])])
+    cv2 = jnp.stack([jnp.concatenate([cv, zeros]),
+                     jnp.concatenate([zeros, cv])])
+    out = batched_segment_min_edges(keys2, cu2, cv2, num_nodes=v,
+                                    block_edges=64)
+    ref = segment_min_edges_ref(keys, cu, cv, v)
+    assert (np.asarray(out[0]) == np.asarray(ref)).all()
+    assert (np.asarray(out[1]) == np.asarray(ref)).all()
 
 
 def test_segment_min_inside_boruvka_round():

@@ -1,0 +1,90 @@
+"""Hypothesis property tests, collected from across the suite.
+
+This module is the only place that imports ``hypothesis``; it is skipped
+wholesale when the optional dev dependency is missing so the deterministic
+suite still runs (see requirements-dev.txt for the pinned version).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.configs.registry import ARCHS
+from repro.core.mst import minimum_spanning_forest
+from repro.core.oracle import kruskal_numpy
+from repro.graphs.generator import generate_graph
+from repro.models.gnn import gnn_forward, init_gnn_params
+from repro.models.moe import init_moe_params, moe_ffn
+from repro.models.recsys import fm_interaction
+from repro.train import data as data_lib
+
+
+@given(st.integers(10, 120), st.integers(2, 6), st.integers(0, 10_000))
+@settings(max_examples=20)
+def test_property_spanning_tree(n, deg, seed):
+    """For any random connected graph: |M| = V-1, acyclic (forms one
+    component), total weight equals the Kruskal optimum."""
+    g, v = generate_graph(n, deg, seed=seed)
+    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, v)
+    r = minimum_spanning_forest(g, num_nodes=v)
+    mask = np.asarray(r.mst_mask)
+    assert mask.sum() == v - 1
+    assert int(r.num_components) == 1
+    assert np.isclose(float(r.total_weight), ow, rtol=1e-5)
+
+
+@given(st.integers(5, 60), st.integers(0, 1000))
+@settings(max_examples=15)
+def test_property_edge_mask_zeroes_messages(n, seed):
+    """Masking ALL edges reduces GIN to pure self-transform: equals a graph
+    with no edges."""
+    cfg = ARCHS["gin-tu"].smoke
+    key = jax.random.key(seed)
+    b = data_lib.gnn_full_batch(cfg, n=n, e=4 * n, d_feat=6, classes=3,
+                                key=key)
+    p = init_gnn_params(key, cfg, d_in=6, num_classes=3)
+    b_masked = dict(b)
+    b_masked["edge_mask"] = jnp.zeros_like(b["edge_mask"])
+    b_self = dict(b)
+    b_self["edge_src"] = jnp.zeros_like(b["edge_src"])
+    b_self["edge_dst"] = jnp.zeros_like(b["edge_dst"])
+    b_self["edge_mask"] = jnp.zeros_like(b["edge_mask"])
+    out1 = gnn_forward(p, b_masked, cfg)
+    out2 = gnn_forward(p, b_self, cfg)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def _moe_pair(e=8, k=2, capf=4.0):
+    s = MoEConfig(num_experts=e, top_k=k, d_ff_expert=16,
+                  capacity_factor=capf, dispatch="scatter")
+    return s, dataclasses.replace(s, dispatch="gather")
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=10)
+def test_property_dispatch_equivalence(seed):
+    cfg_s, cfg_g = _moe_pair(e=4, k=2, capf=1.0)
+    key = jax.random.key(seed)
+    p = init_moe_params(key, 8, cfg_s, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 8))
+    o1, _ = moe_ffn(p, x, cfg_s)
+    o2, _ = moe_ffn(p, x, cfg_g)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+@given(st.integers(2, 30), st.integers(1, 8), st.integers(0, 999))
+@settings(max_examples=20)
+def test_property_interaction_identity(b, f, seed):
+    v = jax.random.normal(jax.random.key(seed), (b, f, 4))
+    fast = np.asarray(fm_interaction(v))
+    vn = np.asarray(v, np.float64)
+    s = vn.sum(1)
+    slow = 0.5 * ((s * s).sum(-1) - (vn * vn).sum(2).sum(1))
+    np.testing.assert_allclose(fast, slow, rtol=1e-3, atol=1e-3)
