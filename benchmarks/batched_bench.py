@@ -12,6 +12,10 @@ crossover.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 from typing import List, Tuple
 
@@ -22,6 +26,92 @@ from repro.graphs.generator import generate_graph
 BATCH_SIZES = (1, 8, 64)
 BENCH_NODES = 64
 BENCH_DEGREE = 4
+
+# Weak scaling: per-device edge load is FIXED while the mesh grows — the
+# sharded engine's promise is that per-device topology memory stays flat
+# (O(E/S)) and only the (V,)-sized collectives grow with the problem.
+WEAK_EDGES_PER_DEV = 2048
+WEAK_DEVICE_COUNTS = (1, 2, 4, 8)
+
+_WEAK_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=%(max_devices)d")
+import json
+import time
+import numpy as np
+from repro.core.distributed_mst import make_flat_mesh
+from repro.core.sharded_mst import sharded_msf
+from repro.graphs.partition_edges import partition_edges
+from repro.graphs.generator import generate_graph
+
+EDGES_PER_DEV = %(edges_per_dev)d
+out = []
+for n_dev in %(device_counts)r:
+    e = EDGES_PER_DEV * n_dev
+    v = max(16, e // 3)  # ~degree-6 graphs, growing with the mesh
+    g, v = generate_graph(v, 6, seed=n_dev)
+    mesh = make_flat_mesh(n_dev)
+    part = partition_edges(g, n_dev)
+
+    def run():
+        return sharded_msf(g, num_nodes=v, mesh=mesh, partition=part
+                           ).total_weight.block_until_ready()
+
+    run()  # compile
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        run()
+        best = min(best, time.perf_counter() - t0)
+    out.append({
+        "n_dev": n_dev,
+        "num_edges": g.num_edges,
+        "num_nodes": v,
+        "us": best * 1e6,
+        "edges_per_dev": part.shard_edges,
+        "topology_bytes_per_dev": part.bytes_per_shard,
+    })
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def weak_scaling_rows(edges_per_dev: int = WEAK_EDGES_PER_DEV,
+                      device_counts=WEAK_DEVICE_COUNTS
+                      ) -> List[Tuple[str, float, str]]:
+    """Sharded-engine weak scaling on forced host devices (subprocess).
+
+    One child process forces ``max(device_counts)`` host devices (the flag
+    must precede jax init), then sweeps mesh sizes with a constant
+    per-device edge load.
+    The derived column records the per-device topology footprint — the
+    number BENCH_mst.json tracks across PRs to catch replication creeping
+    back in.
+    """
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    src = os.path.join(repo, "src")
+    prev = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = src + (os.pathsep + prev if prev else "")
+    env["JAX_PLATFORMS"] = "cpu"
+    script = _WEAK_SCRIPT % {"edges_per_dev": edges_per_dev,
+                             "device_counts": tuple(device_counts),
+                             "max_devices": max(device_counts)}
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=1800,
+                          cwd=repo)
+    if proc.returncode != 0:
+        raise RuntimeError(f"weak-scaling subprocess failed:\n"
+                           f"{proc.stderr[-2000:]}")
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
+    rows = []
+    for r in json.loads(line[len("RESULT:"):]):
+        rows.append((
+            f"sharded_weak_e{edges_per_dev}_d{r['n_dev']}", r["us"],
+            f"edges_per_dev={r['edges_per_dev']};"
+            f"topology_bytes_per_dev={r['topology_bytes_per_dev']};"
+            f"V={r['num_nodes']};E={r['num_edges']}"))
+    return rows
 
 
 def batched_throughput_rows(batch_sizes=BATCH_SIZES, *,

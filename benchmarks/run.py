@@ -25,6 +25,11 @@ def main() -> None:
     ap.add_argument("--scaling", action="store_true",
                     help="run fig2/3/4 multi-device scaling (subprocesses)")
     ap.add_argument("--graph", default="Graph100K_6")
+    ap.add_argument("--engine", default="single",
+                    help="MST engine registry name for the single-process "
+                         "comparison (repro.core.ENGINES)")
+    ap.add_argument("--no-weak", action="store_true",
+                    help="skip the sharded weak-scaling subprocess section")
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_mst.json next to the CSV output")
     args = ap.parse_args()
@@ -42,25 +47,31 @@ def main() -> None:
         rows += mst_figures.fig4_cas_vs_lock(args.graph)
     else:
         # single-process variant comparison (structural metrics + wall time)
+        # dispatched through the engine registry (--engine picks the path).
         import time
-        from repro.core.mst import minimum_spanning_forest
+        from repro.core import solve_mst
         from repro.graphs.generator import paper_graph
         g, v = paper_graph(args.graph, seed=0)
         for variant in ("cas", "lock"):
-            fn = lambda: minimum_spanning_forest(
-                g, num_nodes=v, variant=variant
+            fn = lambda: solve_mst(
+                g, v, engine=args.engine, variant=variant
             ).total_weight.block_until_ready()
             fn()
             t0 = time.perf_counter()
             fn()
             us = (time.perf_counter() - t0) * 1e6
-            r = minimum_spanning_forest(g, num_nodes=v, variant=variant)
-            rows.append((f"fig23_{args.graph}_{variant}_1proc", us,
+            r = solve_mst(g, v, engine=args.engine, variant=variant)
+            rows.append((f"fig23_{args.graph}_{variant}_{args.engine}_1proc",
+                         us,
                          f"rounds={int(r.num_rounds)};"
                          f"waves={int(r.num_waves)}"))
     # Batched multi-graph engine: serving throughput at batch {1, 8, 64}.
     from benchmarks import batched_bench
     rows += batched_bench.batched_throughput_rows()
+    if not args.no_weak:
+        # Sharded-engine weak scaling (forced 8-host-device subprocess):
+        # per-device topology bytes land in BENCH_mst.json's derived column.
+        rows += batched_bench.weak_scaling_rows()
 
     rows += kernel_bench.all_rows()
     rows += roofline_bench.all_rows()
@@ -71,9 +82,14 @@ def main() -> None:
 
     if args.json:
         path = os.path.normpath(JSON_PATH)
+        payload = {name: round(us, 1) for name, us, _ in rows}
+        # Non-timing metrics (per-device topology bytes, rounds, graphs/s)
+        # ride along under "_derived" so the weak-scaling memory trajectory
+        # is machine-checkable across PRs, not just the wall times.
+        payload["_derived"] = {name: derived for name, us, derived in rows
+                               if derived}
         with open(path, "w") as f:
-            json.dump({name: round(us, 1) for name, us, _ in rows},
-                      f, indent=2, sort_keys=True)
+            json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"# wrote {path}", file=sys.stderr)
 

@@ -1,8 +1,10 @@
 """Multi-worker distributed Borůvka demo (8 forced host devices).
 
-Demonstrates the SPMD mapping of the paper's thread parallelism: edge
-shards per device, a min-all-reduce per round for the candidate merge,
-replicated hooking (DESIGN.md §2).
+Runs BOTH mesh engines through the registry: ``distributed`` (edge scan
+sharded, topology replicated, DESIGN.md §2) and ``sharded`` (topology
+shard-local with the owner-decode collective, DESIGN.md §2a), and prints
+each one's per-device topology footprint — the number the sharded engine
+exists to shrink.
 
     PYTHONPATH=src python examples/distributed_mst.py
 """
@@ -14,23 +16,36 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 
-from repro.core.distributed_mst import distributed_msf, make_flat_mesh  # noqa: E402
+from repro.core import solve_mst  # noqa: E402
+from repro.core.distributed_mst import make_flat_mesh  # noqa: E402
 from repro.core.oracle import kruskal_numpy  # noqa: E402
 from repro.graphs.generator import generate_graph  # noqa: E402
+from repro.graphs.partition_edges import partition_edges  # noqa: E402
 
 
 def main():
+    n_dev = 8
     print(f"devices: {len(jax.devices())}")
-    mesh = make_flat_mesh(8)
+    mesh = make_flat_mesh(n_dev)
     graph, v = generate_graph(50_000, 6, seed=0)
     oracle_mask, oracle_w, _ = kruskal_numpy(graph.src, graph.dst,
                                              graph.weight, v)
-    for variant in ("cas", "lock"):
-        r = distributed_msf(graph, num_nodes=v, mesh=mesh, variant=variant)
-        match = bool((np.asarray(r.mst_mask) == oracle_mask).all())
-        print(f"{variant:5s}: weight={float(r.total_weight):.1f} "
-              f"(oracle {oracle_w:.1f}) rounds={int(r.num_rounds)} "
-              f"waves={int(r.num_waves)} exact-match={match}")
+    part = partition_edges(graph, n_dev)
+    # distributed_msf replicates src+dst+order+weight (4 x 4 B/edge) on
+    # every device, on top of its 3-array scan shard.
+    replicated = graph.num_edges * 4 * 4
+    print(f"topology per device: distributed={replicated} B (replicated), "
+          f"sharded={part.bytes_per_shard} B "
+          f"({replicated / part.bytes_per_shard:.1f}x smaller)")
+    for engine in ("distributed", "sharded"):
+        for variant in ("cas", "lock"):
+            r = solve_mst(graph, v, engine=engine, variant=variant,
+                          mesh=mesh)
+            match = bool((np.asarray(r.mst_mask) == oracle_mask).all())
+            print(f"{engine:12s} {variant:5s}: "
+                  f"weight={float(r.total_weight):.1f} "
+                  f"(oracle {oracle_w:.1f}) rounds={int(r.num_rounds)} "
+                  f"waves={int(r.num_waves)} exact-match={match}")
 
 
 if __name__ == "__main__":

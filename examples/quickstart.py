@@ -1,13 +1,14 @@
-"""Quickstart: generate a paper-style graph, run both parallel Borůvka
-variants, and verify against the Kruskal oracle.
+"""Quickstart: generate a paper-style graph, run any registry engine with
+both parallel Borůvka variants, and verify against the Kruskal oracle.
 
     PYTHONPATH=src python examples/quickstart.py [--nodes 20000] [--degree 6]
+    PYTHONPATH=src python examples/quickstart.py --engine opt-seq
 """
 import argparse
 
 import numpy as np
 
-from repro.core.mst import minimum_spanning_forest
+from repro.core import ENGINES, solve_mst
 from repro.core.oracle import kruskal_numpy
 from repro.graphs.generator import generate_graph
 
@@ -17,17 +18,20 @@ def main():
     ap.add_argument("--nodes", type=int, default=20_000)
     ap.add_argument("--degree", type=float, default=6)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", default="single", choices=sorted(ENGINES),
+                    help="MST engine registry name")
     args = ap.parse_args()
 
     graph, v = generate_graph(args.nodes, args.degree, seed=args.seed)
     print(f"graph: {v} vertices, {graph.num_edges} edges")
+    print(f"engine: {args.engine} — {ENGINES[args.engine].description}")
 
     oracle_mask, oracle_w, _ = kruskal_numpy(graph.src, graph.dst,
                                              graph.weight, v)
     print(f"oracle (Kruskal): total weight {oracle_w:.2f}")
 
     for variant in ("cas", "lock"):
-        r = minimum_spanning_forest(graph, num_nodes=v, variant=variant)
+        r = solve_mst(graph, v, engine=args.engine, variant=variant)
         match = bool((np.asarray(r.mst_mask) == oracle_mask).all())
         print(f"{variant:5s}: weight={float(r.total_weight):.2f} "
               f"rounds={int(r.num_rounds)} waves={int(r.num_waves)} "

@@ -12,6 +12,7 @@ import time
 
 import numpy as np
 
+from repro.core import ENGINES
 from repro.core.oracle import kruskal_numpy
 from repro.graphs.generator import generate_graph
 from repro.serve.mst_service import MSTService
@@ -21,6 +22,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--variant", default="cas", choices=["cas", "lock"])
+    ap.add_argument("--engine", default="batched", choices=sorted(ENGINES),
+                    help="registry engine behind the service (batched = "
+                         "lane-parallel; others solve per request)")
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -28,7 +32,8 @@ def main():
         ap.error("--requests must be >= 1")
 
     rng = np.random.default_rng(args.seed)
-    svc = MSTService(variant=args.variant, max_batch=args.max_batch)
+    svc = MSTService(variant=args.variant, engine=args.engine,
+                     max_batch=args.max_batch)
 
     reqs = []
     for i in range(args.requests):

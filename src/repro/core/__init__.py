@@ -1,17 +1,136 @@
-"""Core library: the paper's parallel Borůvka MST, TPU-native."""
+"""Core library: the paper's parallel Borůvka MST, TPU-native.
+
+Six engines solve the same problem with one call shape; ``ENGINES`` is the
+registry every dispatcher (mstserve, benchmarks, examples, the conformance
+matrix) goes through:
+
+    ENGINES[name].solve(graph, num_nodes, variant="cas", mesh=None)
+
+``mesh`` is accepted by every engine (ignored by the single-device ones) so
+callers can dispatch uniformly; mesh-backed engines default to a 1-D mesh
+over all local devices when none is given.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
 from repro.core.types import Graph, MSTResult, INT_SENTINEL
+from repro.core.engine import rank_edges
 from repro.core.mst import (
     minimum_spanning_forest,
     mst_optimized,
     mst_unoptimized,
-    rank_edges,
 )
 from repro.core.union_find import pointer_jump, count_components
+
+
+def _solve_single(graph: Graph, num_nodes: int, *, variant: str = "cas",
+                  mesh=None) -> MSTResult:
+    return minimum_spanning_forest(graph, num_nodes=num_nodes,
+                                   variant=variant)
+
+
+def _solve_unopt_seq(graph: Graph, num_nodes: int, *, variant: str = "cas",
+                     mesh=None) -> MSTResult:
+    return mst_unoptimized(graph, num_nodes, variant=variant)
+
+
+def _solve_opt_seq(graph: Graph, num_nodes: int, *, variant: str = "cas",
+                   mesh=None) -> MSTResult:
+    return mst_optimized(graph, num_nodes, variant=variant)
+
+
+def _solve_batched(graph: Graph, num_nodes: int, *, variant: str = "cas",
+                   mesh=None) -> MSTResult:
+    """One-lane batch through the vmapped engine, trimmed back to MSTResult."""
+    from repro.core.batched_mst import batched_msf, pack_padded
+
+    packed = pack_padded([(graph, num_nodes)],
+                         padded_edges=graph.num_edges,
+                         padded_nodes=num_nodes)
+    r = batched_msf(packed, num_nodes=num_nodes, variant=variant)
+    return MSTResult(parent=r.parent[0], mst_mask=r.mst_mask[0],
+                     num_rounds=r.num_rounds[0], num_waves=r.num_waves[0],
+                     total_weight=r.total_weight[0],
+                     num_components=r.num_components[0])
+
+
+def _default_mesh(mesh):
+    if mesh is not None:
+        return mesh
+    from repro.core.distributed_mst import make_flat_mesh
+    return make_flat_mesh()
+
+
+def _solve_distributed(graph: Graph, num_nodes: int, *, variant: str = "cas",
+                       mesh=None) -> MSTResult:
+    from repro.core.distributed_mst import distributed_msf
+
+    return distributed_msf(graph, num_nodes=num_nodes,
+                           mesh=_default_mesh(mesh), variant=variant)
+
+
+def _solve_sharded(graph: Graph, num_nodes: int, *, variant: str = "cas",
+                   mesh=None) -> MSTResult:
+    from repro.core.sharded_mst import sharded_msf
+
+    return sharded_msf(graph, num_nodes=num_nodes, mesh=_default_mesh(mesh),
+                       variant=variant)
+
+
+class EngineSpec(NamedTuple):
+    """One registered MST engine.
+
+    Attributes:
+      name: registry key.
+      solve: ``(graph, num_nodes, *, variant, mesh) -> MSTResult``.
+      needs_mesh: True when the engine runs real collectives (a mesh is
+        constructed over all local devices if the caller passes none).
+      description: one-line summary for --help texts and docs tables.
+    """
+
+    name: str
+    solve: Callable[..., MSTResult]
+    needs_mesh: bool
+    description: str
+
+
+ENGINES = {
+    spec.name: spec for spec in (
+        EngineSpec("single", _solve_single, False,
+                   "one jitted while_loop, cas/lock hooking (paper §2.2)"),
+        EngineSpec("unopt-seq", _solve_unopt_seq, False,
+                   "paper §2.1 baseline: rescans every edge per round"),
+        EngineSpec("opt-seq", _solve_opt_seq, False,
+                   "paper §2.1 optimized: covered-edge compaction"),
+        EngineSpec("batched", _solve_batched, False,
+                   "vmapped multi-graph engine, one-lane adapter"),
+        EngineSpec("distributed", _solve_distributed, True,
+                   "edge scan sharded, topology replicated, pmin merge"),
+        EngineSpec("sharded", _solve_sharded, True,
+                   "shard-local topology + owner-decode collective"),
+    )
+}
+
+
+def solve_mst(graph: Graph, num_nodes: int, *, engine: str = "single",
+              variant: str = "cas", mesh=None) -> MSTResult:
+    """Dispatch one MST solve through the engine registry."""
+    try:
+        spec = ENGINES[engine]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {engine!r}; known: {sorted(ENGINES)}") from None
+    return spec.solve(graph, num_nodes, variant=variant, mesh=mesh)
+
 
 __all__ = [
     "Graph",
     "MSTResult",
     "INT_SENTINEL",
+    "ENGINES",
+    "EngineSpec",
+    "solve_mst",
     "minimum_spanning_forest",
     "mst_optimized",
     "mst_unoptimized",

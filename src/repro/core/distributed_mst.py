@@ -16,12 +16,11 @@ mapping (DESIGN.md §2):
 
 Graph topology (src/dst/order) is replicated, like the paper's shared edge
 array; only scan work is partitioned.  For graphs too large to replicate,
-the scaling path is an all-gather of the (V,)-sized candidate arrays - the
-topology never moves - which is exactly what the dry-run meshes exercise.
+``core/sharded_mst.py`` keeps even the topology shard-local (owner-decode
+collective instead of replicated ``order``/``full_src``/``full_dst``).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -30,15 +29,16 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.types import Graph, MSTResult, INT_SENTINEL
-from repro.core.mst import (
+from repro.core.engine import (
     BoruvkaState,
-    _init_state,
     candidate_min_edges,
     commit_edges,
     hook_cas,
     hook_lock_waves,
+    init_state,
     rank_edges,
     resolve_candidates,
+    shard_map_compat,
 )
 from repro.core.union_find import pointer_jump, count_components
 
@@ -69,12 +69,8 @@ def distributed_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
     shard = P(axis)
     repl = P()
 
-    @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(shard, shard, shard, repl, repl, repl, repl),
-        out_specs=repl, check_vma=False)
     def run(s_src, s_dst, s_rank, f_src, f_dst, f_order, weight):
-        init = _init_state(num_nodes, e, s_rank.shape[0])
+        init = init_state(num_nodes, e, s_rank.shape[0])
 
         def cond(s):
             return ~s.done
@@ -88,7 +84,7 @@ def distributed_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
             local_best = candidate_min_edges(key, cu_e, cv_e, num_nodes)
             # The paper's cross-thread merge of minimum[]: one collective.
             best = jax.lax.pmin(local_best, axis)
-            has, cand_edge, other, iota = resolve_candidates(
+            has, cand_edge, end_u, end_v, other, iota = resolve_candidates(
                 best, f_order, f_src, f_dst, state.parent)
             if variant == "cas":
                 new_parent, commit = hook_cas(state.parent, has, cand_edge,
@@ -99,7 +95,7 @@ def distributed_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
             else:
                 new_parent, mst_mask, waves = hook_lock_waves(
                     state.parent, state.mst_mask, has, cand_edge,
-                    f_src, f_dst, max_waves=max_lock_waves)
+                    end_u, end_v, max_waves=max_lock_waves)
             done = ~jnp.any(has)
             return BoruvkaState(
                 new_parent, mst_mask, new_covered,
@@ -112,7 +108,11 @@ def distributed_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
         return (final.parent, final.mst_mask, final.num_rounds,
                 final.num_waves, total, ncomp)
 
-    parent, mst_mask, rounds, waves, total, ncomp = run(
+    run_sharded = shard_map_compat(
+        run, mesh=mesh,
+        in_specs=(shard, shard, shard, repl, repl, repl, repl),
+        out_specs=repl)
+    parent, mst_mask, rounds, waves, total, ncomp = run_sharded(
         scan_src, scan_dst, scan_rank, graph.src, graph.dst, order,
         graph.weight)
     return MSTResult(parent=parent, mst_mask=mst_mask, num_rounds=rounds,

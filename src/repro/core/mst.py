@@ -29,236 +29,37 @@ Index spaces: the per-round *scan* arrays (``scan_src/scan_dst/scan_rank``)
 may be a compacted subset of the edge list (opt-seq), but ranks are global,
 so candidate resolution always goes through the full-size ``order`` /
 ``full_src`` / ``full_dst`` arrays and commits into the full-size MST mask.
+
+The per-round building blocks live in :mod:`repro.core.engine` (shared by
+the batched, distributed, and shard-local-topology engines); this module
+holds the single-device drivers and re-exports the blocks for backward
+compatibility.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.types import Graph, MSTResult, INT_SENTINEL
-from repro.core.union_find import pointer_jump, count_components
+from repro.core.engine import (  # noqa: F401  (re-exported API)
+    BoruvkaState,
+    boruvka_round,
+    candidate_min_edges,
+    commit_edges,
+    finish_result,
+    hook_cas,
+    hook_lock_waves,
+    init_state,
+    partner_components,
+    rank_edges,
+    resolve_candidates,
+)
 
-
-# ---------------------------------------------------------------------------
-# Edge ranking: "distinct weights" as a structural property.
-# ---------------------------------------------------------------------------
-
-def rank_edges(weight: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Dense rank of every edge under (weight, edge_id) lexicographic order.
-
-    Returns:
-      rank:  (E,) int32, rank[e] = position of edge e in the sorted order.
-      order: (E,) int32, order[r] = edge id holding rank r (rank's inverse).
-    """
-    e = weight.shape[0]
-    order = jnp.argsort(weight, stable=True).astype(jnp.int32)
-    rank = jnp.zeros((e,), jnp.int32).at[order].set(
-        jnp.arange(e, dtype=jnp.int32)
-    )
-    return rank, order
-
-
-class BoruvkaState(NamedTuple):
-    parent: jnp.ndarray    # (V,) component array, fully compressed
-    mst_mask: jnp.ndarray  # (E_full,) bool, committed MST edges ("M")
-    covered: jnp.ndarray   # (E_scan,) bool, paper's covered bit
-    num_rounds: jnp.ndarray
-    num_waves: jnp.ndarray  # lock-variant retry waves (== rounds for CAS)
-    done: jnp.ndarray
-
-
-# ---------------------------------------------------------------------------
-# Per-round building blocks.
-# ---------------------------------------------------------------------------
-
-def candidate_min_edges(key, cu, cv, num_nodes):
-    """Per-component minimum outgoing edge rank (paper lines 15-28).
-
-    ``key`` already carries INT_SENTINEL for covered/self edges.  Each edge
-    offers itself to the components of *both* endpoints (the graph is
-    undirected), mirroring the paper's two minimum[] updates per edge.
-    """
-    best_u = jax.ops.segment_min(key, cu, num_segments=num_nodes)
-    best_v = jax.ops.segment_min(key, cv, num_segments=num_nodes)
-    return jnp.minimum(best_u, best_v)  # (V,) rank or INT_SENTINEL
-
-
-def resolve_candidates(best, order, full_src, full_dst, parent):
-    """Decode per-component candidate rank -> (edge id, other-side root)."""
-    num_nodes = parent.shape[0]
-    iota = jnp.arange(num_nodes, dtype=jnp.int32)
-    has = best < INT_SENTINEL
-    cand_edge = order[jnp.clip(best, 0, order.shape[0] - 1)]
-    cu = parent[full_src[cand_edge]]
-    cv = parent[full_dst[cand_edge]]
-    # One endpoint root is this component itself; `other` is the partner.
-    other = jnp.where(has, cu + cv - iota, iota)
-    cand_edge = jnp.where(has, cand_edge, 0)
-    return has, cand_edge, other, iota
-
-
-def commit_edges(mst_mask, cand_edge, commit):
-    """Scatter-commit candidate edges; non-committers scatter out of bounds
-    (dropped), mirroring 'Add edge minimum[v] to the set M' under guard."""
-    e = mst_mask.shape[0]
-    idx = jnp.where(commit, cand_edge, e)  # e == out-of-bounds -> dropped
-    return mst_mask.at[idx].set(True, mode="drop")
-
-
-# ---------------------------------------------------------------------------
-# Hooking variants - the paper's two synchronization schemes, data-parallel.
-# ---------------------------------------------------------------------------
-
-def hook_cas(parent, has, cand_edge, other, iota):
-    """CAS-variant hooking (paper §2.2.2).
-
-    Every component atomically swings its parent pointer along its minimum
-    edge.  Racing CASes on *distinct* parents all succeed => chains are
-    allowed.  The only possible cycle is a mutual 2-cycle (both components
-    picked the same edge - provably the same edge under distinct weights);
-    it is broken deterministically by keeping the smaller root.
-    """
-    # Hooking roots swing their pointer to `other`; everyone else keeps their
-    # (already compressed) parent.  `has` is only ever True for roots.
-    prop = jnp.where(has, other, parent)
-    mutual = has & (prop != iota) & (prop[prop] == iota)
-    keep_root = mutual & (iota < prop)  # smaller root survives the 2-cycle
-    new_parent = jnp.where(keep_root, iota, prop)
-    # A component whose pointer actually moved commits its candidate edge.
-    # (The 2-cycle winner's edge equals the loser's edge; committed once,
-    # scatter is idempotent anyway.)
-    commit = has & (new_parent != iota)
-    return new_parent, commit
-
-
-def hook_lock_waves(parent, mst_mask, has, cand_edge, full_src, full_dst,
-                    *, max_waves: int):
-    """Lock-variant hooking (paper §2.2.1), as propose-verify *retry waves*.
-
-    One wave = one synchronous generation of the paper's lock protocol:
-
-      Phase A (acquire): each hooking component r writes its id into the lock
-      cell of *both* components; contention resolves deterministically by min
-      (stand-in for the racy first-writer of the paper).
-      Phase B (verify): r proceeds iff it holds both locks - the paper's
-      re-read of lock_tid[C1]/lock_tid[C2] == tid - then *re-finds* both
-      endpoints (lines 52-55) and commits only if they are still distinct.
-
-    Holding both locks makes each wave's merge set a *matching*.  The paper's
-    threads simply retry failed acquisitions while scanning their remaining
-    vertices within the round; the synchronous analogue is to re-run waves
-    with the round's fixed minimum[] candidates until no active candidate
-    remains (or ``max_waves`` is hit - leftovers retry in the next round,
-    which recomputes minima; correctness is unaffected).
-
-    SPMD finding (see EXPERIMENTS.md): once a giant component forms, every
-    surviving component's min edge points into it, and lock arbitration on
-    the giant's cell admits ONE union per wave - lock-style serialization
-    that the paper's asynchronous multicore hides at ~100ns/union but
-    lockstep SPMD pays at a full O(V) wave each.  This is the structural
-    reason the CAS variant wins, and why its win is far larger on TPU than
-    the paper's 1.15x on multicore.
-
-    Progress: the smallest active root always wins both its locks, so every
-    wave commits >= 1 union while any candidate is valid.
-    """
-    num_nodes = parent.shape[0]
-    iota = jnp.arange(num_nodes, dtype=jnp.int32)
-
-    def wave(carry):
-        parent, mst, active, waves = carry
-        cu = parent[full_src[cand_edge]]
-        cv = parent[full_dst[cand_edge]]
-        isroot = parent == iota
-        # owner/root check + re-find staleness (paper lines 38-43).
-        valid = active & isroot & (cu != cv) & ((cu == iota) | (cv == iota))
-        other = jnp.where(valid, cu + cv - iota, iota)
-        # Phase A: acquire both lock cells (scatter-min arbitration).
-        writer = jnp.where(valid, iota, INT_SENTINEL)
-        lock = jnp.full((num_nodes,), INT_SENTINEL, jnp.int32)
-        lock = lock.at[jnp.where(valid, iota, num_nodes)].min(
-            writer, mode="drop")
-        lock = lock.at[jnp.where(valid, other, num_nodes)].min(
-            writer, mode="drop")
-        # Phase B: verify both locks held, then commit.
-        granted = valid & (lock[iota] == iota) & (lock[other] == iota)
-        parent = parent.at[jnp.where(granted, other, num_nodes)].set(
-            iota, mode="drop")
-        mst = commit_edges(mst, cand_edge, granted)
-        parent = pointer_jump(parent)
-        active = valid & ~granted
-        return parent, mst, active, waves + 1
-
-    def cond(carry):
-        _, _, active, waves = carry
-        return jnp.any(active) & (waves < max_waves)
-
-    parent, mst_mask, _, waves = jax.lax.while_loop(
-        cond, wave, (parent, mst_mask, has, jnp.zeros((), jnp.int32)))
-    return parent, mst_mask, waves
-
-
-# ---------------------------------------------------------------------------
-# One Borůvka round.
-# ---------------------------------------------------------------------------
-
-def boruvka_round(state: BoruvkaState, scan_src, scan_dst, scan_rank,
-                  full_src, full_dst, order, *, variant: str,
-                  track_covered: bool, num_nodes: int,
-                  max_lock_waves: int = 16) -> BoruvkaState:
-    """One round: min-edge search over scan lanes, hooking, compression."""
-    cu_e = state.parent[scan_src]
-    cv_e = state.parent[scan_dst]
-    self_edge = cu_e == cv_e
-    new_covered = state.covered | self_edge  # "graph_edge[E].covered = 1"
-    key = jnp.where(new_covered, INT_SENTINEL, scan_rank)
-    best = candidate_min_edges(key, cu_e, cv_e, num_nodes)
-    has, cand_edge, other, iota = resolve_candidates(
-        best, order, full_src, full_dst, state.parent)
-    if variant == "cas":
-        new_parent, commit = hook_cas(state.parent, has, cand_edge, other,
-                                      iota)
-        mst_mask = commit_edges(state.mst_mask, cand_edge, commit)
-        new_parent = pointer_jump(new_parent)
-        waves = jnp.ones((), jnp.int32)
-    elif variant == "lock":
-        new_parent, mst_mask, waves = hook_lock_waves(
-            state.parent, state.mst_mask, has, cand_edge, full_src, full_dst,
-            max_waves=max_lock_waves)
-    else:
-        raise ValueError(f"unknown variant {variant!r}")
-    covered = new_covered if track_covered else state.covered
-    # Done when no component saw an outgoing edge (forest complete).
-    done = ~jnp.any(has)
-    return BoruvkaState(new_parent, mst_mask, covered,
-                        state.num_rounds + jnp.where(done, 0, 1),
-                        state.num_waves + jnp.where(done, 0, waves), done)
-
-
-def _init_state(num_nodes: int, e_full: int, e_scan: int) -> BoruvkaState:
-    return BoruvkaState(
-        parent=jnp.arange(num_nodes, dtype=jnp.int32),
-        mst_mask=jnp.zeros((e_full,), bool),
-        covered=jnp.zeros((e_scan,), bool),
-        num_rounds=jnp.zeros((), jnp.int32),
-        num_waves=jnp.zeros((), jnp.int32),
-        done=jnp.zeros((), bool),
-    )
-
-
-def _finish(graph: Graph, state: BoruvkaState, rounds) -> MSTResult:
-    total = jnp.sum(jnp.where(state.mst_mask, graph.weight, 0.0))
-    return MSTResult(
-        parent=state.parent,
-        mst_mask=state.mst_mask,
-        num_rounds=jnp.asarray(rounds, jnp.int32),
-        num_waves=state.num_waves,
-        total_weight=total,
-        num_components=count_components(state.parent),
-    )
+# Backward-compatible aliases (pre-engine-extraction names).
+_init_state = init_state
+_finish = finish_result
 
 
 # ---------------------------------------------------------------------------
@@ -286,7 +87,7 @@ def minimum_spanning_forest(graph: Graph, *, num_nodes: int,
     """
     e = graph.num_edges
     rank, order = rank_edges(graph.weight)
-    init = _init_state(num_nodes, e, e)
+    init = init_state(num_nodes, e, e)
 
     def cond(s):
         return ~s.done
@@ -299,7 +100,7 @@ def minimum_spanning_forest(graph: Graph, *, num_nodes: int,
                              max_lock_waves=max_lock_waves)
 
     final = jax.lax.while_loop(cond, body, init)
-    return _finish(graph, final, final.num_rounds)
+    return finish_result(graph, final, final.num_rounds)
 
 
 @functools.partial(
@@ -330,7 +131,7 @@ def _python_loop(graph: Graph, num_nodes: int, *, variant: str,
                  compact: bool) -> MSTResult:
     rank, order = rank_edges(graph.weight)
     e_full = graph.num_edges
-    state = _init_state(num_nodes, e_full, e_full)
+    state = init_state(num_nodes, e_full, e_full)
     scan_src, scan_dst, scan_rank = graph.src, graph.dst, rank
     rounds = 0
     while True:
@@ -361,4 +162,4 @@ def _python_loop(graph: Graph, num_nodes: int, *, variant: str,
                 state = state._replace(
                     covered=jnp.where(pad, True,
                                       jnp.zeros((bucket,), bool)))
-    return _finish(graph, state, rounds)
+    return finish_result(graph, state, rounds)

@@ -1,0 +1,119 @@
+"""Deterministic edge sharding + per-shard rank tables (sharded engine input).
+
+``core/sharded_mst.py`` keeps graph topology shard-local: each mesh device
+owns one contiguous block of the edge list and never sees the rest.  This
+module builds that layout on the host, deterministically:
+
+  * edges keep their *original* ids (global edge id = index into the input
+    edge list — the id space ``mst_mask`` is defined over);
+  * the global (weight, edge_id) dense rank is computed once
+    (``engine.rank_edges``) and each shard carries its edges' **global**
+    ranks — so a shard-local ``segment_min`` over ranks composes with a
+    cross-shard ``pmin`` into exactly the single-device candidate search;
+  * the edge list is padded to a multiple of ``num_shards`` with sentinel
+    edges (rank = INT_SENTINEL, endpoints 0, edge id = E) that can never win
+    a minimum nor be committed;
+  * shard i owns global edge ids ``[i*S, (i+1)*S)`` where
+    ``S = E_pad / num_shards`` — recovering the owner of any edge id is a
+    single divide, which is what the sharded engine's commit step uses.
+
+Round-trip invariant (property-tested): flattening the per-shard rank
+tables in shard order and dropping the sentinel pad reproduces the global
+``rank_edges`` output for *any* weight multiset, including all-equal
+weights — ranking before sharding is what keeps duplicate weights exact.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import rank_edges
+from repro.core.types import Graph, INT_SENTINEL
+
+
+class EdgePartition(NamedTuple):
+    """Shard-local topology tables for one graph.
+
+    Attributes:
+      src:     (S, E_shard) int32 per-shard source vertices (pad rows: 0).
+      dst:     (S, E_shard) int32 per-shard destination vertices (pad: 0).
+      rank:    (S, E_shard) int32 global (weight, edge_id) rank table per
+               shard (pad: INT_SENTINEL).
+      edge_id: (S, E_shard) int32 global edge id of each slot (pad: E —
+               one past the last real edge, out of bounds for commits).
+      num_edges: true (unpadded) global edge count E.
+    """
+
+    src: jnp.ndarray
+    dst: jnp.ndarray
+    rank: jnp.ndarray
+    edge_id: jnp.ndarray
+    num_edges: int
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def shard_edges(self) -> int:
+        return int(self.src.shape[1])
+
+    @property
+    def bytes_per_shard(self) -> int:
+        """Topology bytes resident on ONE device (src+dst+rank+edge_id)."""
+        return self.shard_edges * 4 * 4
+
+
+def partition_edges(graph: Graph, num_shards: int) -> EdgePartition:
+    """Contiguous-block edge sharding with global rank tables.
+
+    Deterministic in (graph, num_shards): same input, same layout.
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    e = graph.num_edges
+    e_pad = -(-max(e, 1) // num_shards) * num_shards
+    rank, _ = rank_edges(graph.weight)
+
+    def pad(x, fill):
+        out = np.full((e_pad,), fill, np.int32)
+        out[:e] = np.asarray(x, np.int32)
+        return jnp.asarray(out.reshape(num_shards, e_pad // num_shards))
+
+    return EdgePartition(
+        src=pad(graph.src, 0),
+        dst=pad(graph.dst, 0),
+        rank=pad(rank, INT_SENTINEL),
+        edge_id=pad(np.arange(e, dtype=np.int32), e),
+        num_edges=e,
+    )
+
+
+def flatten_partition(part: EdgePartition) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                    jnp.ndarray, jnp.ndarray]:
+    """(E_pad,) flat views (shard-major) of src/dst/rank/edge_id.
+
+    Contiguous reshape: slot ``[i, j]`` lands at ``i * E_shard + j``, so a
+    1-D ``PartitionSpec`` over the flat arrays hands shard row i to device i.
+    """
+    return (part.src.reshape(-1), part.dst.reshape(-1),
+            part.rank.reshape(-1), part.edge_id.reshape(-1))
+
+
+def reconstruct_rank(part: EdgePartition) -> np.ndarray:
+    """Invert the partition: global rank array recovered from shard tables.
+
+    Places each shard slot's rank at its global edge id; the sentinel pad
+    (edge_id == E) is dropped.  ``reconstruct_rank(partition_edges(g, s))``
+    must equal ``rank_edges(g.weight)[0]`` exactly — the property test's
+    round-trip.
+    """
+    e = part.num_edges
+    out = np.full((e,), -1, np.int64)
+    ids = np.asarray(part.edge_id).reshape(-1)
+    ranks = np.asarray(part.rank).reshape(-1)
+    real = ids < e
+    out[ids[real]] = ranks[real]
+    return out

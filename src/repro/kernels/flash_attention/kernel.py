@@ -77,18 +77,21 @@ def flash_attention_pallas(q, k, v, *, scale: float, causal: bool = True,
     g = h // hkv
     assert sq % block_q == 0 and skv % block_kv == 0
     grid = (b, h, sq // block_q)
-    q_spec = pl.BlockSpec((1, 1, block_q, hd),
+    # None-squeezed batch/head dims: kernel refs are 2-D (seq, hd) blocks, a
+    # single indexer per load/store (jax 0.4.37's interpret-mode discharge
+    # rule rejects the stacked `.at[0, 0]` + dslice form).
+    q_spec = pl.BlockSpec((None, None, block_q, hd),
                           lambda bi, hi, qi: (bi, hi, qi, 0))
     # GQA: the kv-head index comes from the INDEX MAP - no repeat in memory.
-    kv_spec = pl.BlockSpec((1, 1, skv, hd),
+    kv_spec = pl.BlockSpec((None, None, skv, hd),
                            lambda bi, hi, qi: (bi, hi // g, 0, 0))
-    o_spec = pl.BlockSpec((1, 1, block_q, hd),
+    o_spec = pl.BlockSpec((None, None, block_q, hd),
                           lambda bi, hi, qi: (bi, hi, qi, 0))
 
     def kern(q_ref, k_ref, v_ref, o_ref):
-        _kernel(q_ref.at[0, 0], k_ref.at[0, 0], v_ref.at[0, 0],
-                o_ref.at[0, 0], scale=scale, causal=causal, window=window,
-                cap=cap, block_kv=block_kv, seq_kv=skv, q_offset=q_offset)
+        _kernel(q_ref, k_ref, v_ref, o_ref, scale=scale, causal=causal,
+                window=window, cap=cap, block_kv=block_kv, seq_kv=skv,
+                q_offset=q_offset)
 
     return pl.pallas_call(
         kern,

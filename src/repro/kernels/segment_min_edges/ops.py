@@ -64,3 +64,41 @@ def batched_segment_min_edges(keys, cu, cv, *, num_nodes: int,
     return batched_segment_min_edges_pallas(
         keys, cu, cv, num_nodes, block_edges=block,
         interpret=_resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_nodes", "num_shards", "block_edges",
+                                    "interpret"))
+def sharded_segment_min_edges(keys, cu, cv, *, num_nodes: int,
+                              num_shards: int, block_edges: int = 4096,
+                              interpret: bool | None = None):
+    """(E,) keys/cu/cv -> (V,) min key, computed on a SHARD-SHAPED grid.
+
+    Single-device mirror of the sharded engine's candidate search
+    (``core/sharded_mst.py``): the edge stream is viewed as
+    ``(num_shards, E/num_shards)`` contiguous blocks — the same layout
+    ``graphs/partition_edges.py`` hands one row per mesh device — and the
+    grid iterates ``(shard, edge_block)`` with one VMEM-resident
+    ``minimum[]`` row per shard.  The final ``min`` over the shard axis is
+    the moral equivalent of the cross-shard ``pmin``, so kernel output is
+    bit-identical to what the mesh computes, which is what the conformance
+    tests pin down.
+
+    E is padded to a multiple of ``num_shards * block`` with sentinel keys.
+    """
+    e = keys.shape[0]
+    per_shard = -(-e // num_shards)
+    block = min(block_edges, max(256, per_shard))
+    per_shard = -(-per_shard // block) * block
+    pad = num_shards * per_shard - e
+    if pad:
+        keys = jnp.concatenate([keys, jnp.full((pad,), INT_SENTINEL,
+                                               keys.dtype)])
+        cu = jnp.concatenate([cu, jnp.zeros((pad,), cu.dtype)])
+        cv = jnp.concatenate([cv, jnp.zeros((pad,), cv.dtype)])
+    shape = (num_shards, per_shard)
+    per_shard_best = batched_segment_min_edges_pallas(
+        keys.reshape(shape), cu.reshape(shape), cv.reshape(shape),
+        num_nodes, block_edges=block,
+        interpret=_resolve_interpret(interpret))
+    return jnp.min(per_shard_best, axis=0)  # the "pmin" over shards

@@ -16,3 +16,8 @@ def batched_segment_min_edges_ref(keys, cu, cv, num_nodes: int):
     return jax.vmap(
         lambda k, u, v: segment_min_edges_ref(k, u, v, num_nodes)
     )(keys, cu, cv)
+
+
+# Sharding is an implementation layout, not a semantics change: the
+# shard-shaped grid must reduce to the flat single-graph oracle.
+sharded_segment_min_edges_ref = segment_min_edges_ref

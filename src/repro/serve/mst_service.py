@@ -24,6 +24,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import ENGINES, solve_mst
 from repro.core.batched_mst import batched_msf
 from repro.core.types import Graph
 from repro.graphs.batching import pack_graphs, unpack_results
@@ -69,14 +70,24 @@ class MSTService:
 
     Args:
       variant: Borůvka hooking variant for the engine ("cas" / "lock").
+      engine: MST engine registry name (``repro.core.ENGINES``).  The
+        default "batched" solves each flush's cache misses lane-parallel via
+        ``batched_msf``; any other registry engine (single / unopt-seq /
+        opt-seq / distributed / sharded) is dispatched per request through
+        ``solve_mst`` — the queue, dedup, and cache layers are identical, so
+        the serving path is a conformance surface for every engine.
       max_batch: lane cap per engine call; a bucket with more members
         overflows into multiple solves (bounds padded-batch memory).
       cache_size: LRU capacity in *results*; 0 disables caching.
     """
 
-    def __init__(self, *, variant: str = "cas", max_batch: int = 64,
-                 cache_size: int = 256):
+    def __init__(self, *, variant: str = "cas", engine: str = "batched",
+                 max_batch: int = 64, cache_size: int = 256):
+        if engine not in ENGINES:
+            raise ValueError(
+                f"unknown engine {engine!r}; known: {sorted(ENGINES)}")
         self.variant = variant
+        self.engine = engine
         self.max_batch = int(max_batch)
         self.cache_size = int(cache_size)
         self.stats = ServiceStats()
@@ -133,19 +144,7 @@ class MSTService:
             for m in misses:
                 unique.setdefault(m[1], m)
             solve_list = list(unique.values())
-            buckets = pack_graphs([(g, v) for _, _, g, v in solve_list],
-                                  max_batch=self.max_batch)
-            results = []
-            for b in buckets:
-                self.stats.buckets += 1
-                shape = (b.padded_edges, b.padded_nodes)
-                self.stats.bucket_shapes[shape] = (
-                    self.stats.bucket_shapes.get(shape, 0)
-                    + len(b.indices))
-                self.stats.engine_solves += len(b.indices)
-                results.append(batched_msf(b.graph, num_nodes=b.padded_nodes,
-                                           variant=self.variant))
-            per_request = unpack_results(buckets, results)
+            per_request = self._solve_batch(solve_list)
             by_key: Dict[str, MSTResponse] = {}
             for (rid, key, _, _), (mask, parent, tw, nc, nr) in zip(
                     solve_list, per_request):
@@ -166,6 +165,36 @@ class MSTService:
 
         self.stats.served += len(pending)
         return unclaimed + [responses[rid] for rid, _, _, _ in pending]
+
+    def _solve_batch(self, solve_list):
+        """Solve deduped cache misses via the configured registry engine.
+
+        Returns per-request ``(mask, parent, tw, nc, nr)`` tuples in
+        ``solve_list`` order (the ``unpack_results`` contract).
+        """
+        if self.engine == "batched":
+            buckets = pack_graphs([(g, v) for _, _, g, v in solve_list],
+                                  max_batch=self.max_batch)
+            results = []
+            for b in buckets:
+                self.stats.buckets += 1
+                shape = (b.padded_edges, b.padded_nodes)
+                self.stats.bucket_shapes[shape] = (
+                    self.stats.bucket_shapes.get(shape, 0)
+                    + len(b.indices))
+                self.stats.engine_solves += len(b.indices)
+                results.append(batched_msf(b.graph, num_nodes=b.padded_nodes,
+                                           variant=self.variant))
+            return unpack_results(buckets, results)
+        # Non-batched registry engines: one dispatch per request.
+        out = []
+        for _, _, g, v in solve_list:
+            self.stats.engine_solves += 1
+            r = solve_mst(g, v, engine=self.engine, variant=self.variant)
+            out.append((np.asarray(r.mst_mask), np.asarray(r.parent),
+                        float(r.total_weight), int(r.num_components),
+                        int(r.num_rounds)))
+        return out
 
     def solve(self, graph: Graph, num_nodes: int) -> MSTResponse:
         """Convenience: submit one request and flush immediately.

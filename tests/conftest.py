@@ -3,6 +3,14 @@ import os
 # Tests see ONE device (the dry-run alone forces 512 - never set here).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+
+def pytest_configure(config):
+    # `slow` annotates long-running cells; tier-1 runs them anyway (nothing
+    # deselects the marker), registering just silences the unknown-mark
+    # warning and lets humans `-m "not slow"` locally.
+    config.addinivalue_line("markers",
+                            "slow: long-running test (still tier-1)")
+
 # hypothesis is an optional dev dependency (requirements-dev.txt): register
 # the CI profile only when it is importable so collection never dies on a
 # missing module.  Property-test modules importorskip it themselves.

@@ -158,6 +158,28 @@ def test_mst_service_cache_hit_and_ordering():
         assert (r.mst_mask == om).all()
 
 
+@pytest.mark.parametrize("engine", ["single", "opt-seq"])
+def test_mst_service_engine_dispatch(engine):
+    """The service's queue/dedup/cache layers must behave identically when
+    the solve step dispatches through a non-batched registry engine."""
+    svc = MSTService(engine=engine)
+    reqs = [generate_graph(n, d, seed=s) for n, d, s in MIXED[:4]]
+    responses = svc.solve_many(reqs)
+    for (g, v), r in zip(reqs, responses):
+        om, ow, _ = _oracle(g, v)
+        assert (r.mst_mask == om).all()
+        assert np.isclose(r.total_weight, ow, rtol=1e-5)
+    assert svc.stats.engine_solves == len(reqs)
+    assert svc.stats.buckets == 0  # per-request path, no shape bucketing
+    again = svc.solve(*reqs[0])
+    assert again.cached
+
+
+def test_mst_service_rejects_unknown_engine():
+    with pytest.raises(ValueError, match="unknown engine"):
+        MSTService(engine="nope")
+
+
 def test_mst_service_lru_eviction():
     svc = MSTService(cache_size=2)
     reqs = [generate_graph(30, 3, seed=s) for s in range(3)]

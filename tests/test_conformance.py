@@ -1,0 +1,151 @@
+"""Cross-engine conformance matrix: every engine x variant x graph family.
+
+Single source of truth: ``kruskal_numpy`` with (weight, edge_id) tie
+breaking — under the engines' identical rank construction the minimum
+forest is *unique*, so every cell must reproduce the oracle's edge set
+exactly (not just the total weight).
+
+The mesh engines (distributed / sharded) run over every local device; under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI matrix job,
+``tests/test_distributed.py``'s subprocess) the same cells exercise real
+8-way collectives, on a plain CPU container they degrade to a 1-device mesh
+with the identical code path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ENGINES, solve_mst
+from repro.core.oracle import kruskal_numpy
+from repro.core.types import Graph
+from repro.graphs.generator import generate_graph
+
+ENGINE_NAMES = ("single", "unopt-seq", "opt-seq", "batched", "distributed",
+                "sharded")
+VARIANTS = ("cas", "lock")
+
+
+def _path_graph(n=48, seed=0):
+    """Chain 0-1-...-(n-1): every round halves components, worst-case depth."""
+    rng = np.random.default_rng(seed)
+    src = np.arange(n - 1, dtype=np.int32)
+    dst = src + 1
+    w = rng.random(n - 1).astype(np.float32)
+    return Graph(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)), n
+
+
+def _star_graph(n=48, seed=1):
+    """Hub 0 to all spokes: one giant component after round 1 — the
+    lock-variant's worst serialization shape."""
+    rng = np.random.default_rng(seed)
+    src = np.zeros(n - 1, np.int32)
+    dst = np.arange(1, n, dtype=np.int32)
+    w = rng.random(n - 1).astype(np.float32)
+    return Graph(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)), n
+
+
+def _random_sparse(n=48, seed=2):
+    return generate_graph(n, 4, seed=seed)
+
+
+def _duplicate_weight(n=48, seed=3):
+    """Heavy ties: weights quantized to 1/4 — the rank construction must
+    keep the forest unique and oracle-identical anyway."""
+    g, v = generate_graph(n, 4, seed=seed)
+    w = jnp.round(g.weight * 4) / 4.0
+    return Graph(g.src, g.dst, w), v
+
+
+def _disconnected_forest(n=48, seed=4):
+    """Two path components with no connecting edge: MSF, ncomp == 2."""
+    rng = np.random.default_rng(seed)
+    k = n // 2
+    src = np.concatenate([np.arange(k - 1), np.arange(k, n - 1)])
+    dst = src + 1
+    w = rng.random(src.shape[0]).astype(np.float32)
+    return Graph(jnp.asarray(src.astype(np.int32)),
+                 jnp.asarray(dst.astype(np.int32)), jnp.asarray(w)), n
+
+
+FAMILIES = {
+    "path": _path_graph,
+    "star": _star_graph,
+    "random-sparse": _random_sparse,
+    "duplicate-weight": _duplicate_weight,
+    "disconnected-forest": _disconnected_forest,
+}
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    from repro.core.distributed_mst import make_flat_mesh
+    return make_flat_mesh(min(8, len(jax.devices())))
+
+
+def assert_matches_oracle(result, graph, num_nodes):
+    """THE conformance assert: exact edge-set identity with Kruskal."""
+    om, ow, oc = kruskal_numpy(graph.src, graph.dst, graph.weight, num_nodes)
+    mask = np.asarray(result.mst_mask)
+    assert mask.shape == om.shape
+    assert (mask == om).all(), (
+        f"edge-set mismatch: engine XOR oracle at "
+        f"{np.nonzero(mask != om)[0].tolist()}")
+    assert np.isclose(float(result.total_weight), ow, rtol=1e-5)
+    assert int(result.num_components) == oc
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("engine", ENGINE_NAMES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_conformance_matrix(engine, variant, family, mesh):
+    graph, v = FAMILIES[family]()
+    r = solve_mst(graph, v, engine=engine, variant=variant,
+                  mesh=mesh if ENGINES[engine].needs_mesh else None)
+    assert_matches_oracle(r, graph, v)
+
+
+def test_registry_covers_matrix():
+    """The matrix must not silently drop an engine when the registry grows:
+    every registered engine appears in ENGINE_NAMES."""
+    assert sorted(ENGINE_NAMES) == sorted(ENGINES)
+
+
+def test_sharded_topology_is_actually_sharded(mesh):
+    """Acceptance guard: the sharded engine's topology inputs carry a
+    1-D NamedSharding over the mesh axis — per-device shards hold E_pad/S
+    slots, NOT the full edge list — and the result still matches the
+    oracle when solved from exactly those arrays."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.sharded_mst import shard_topology, sharded_msf
+    from repro.graphs.partition_edges import partition_edges
+
+    n_dev = mesh.shape["data"]
+    graph, v = generate_graph(400, 5, seed=17)
+    part = partition_edges(graph, n_dev)
+    arrays = shard_topology(part, mesh)
+    for arr in arrays:
+        assert isinstance(arr.sharding, NamedSharding)
+        assert arr.sharding.spec == P("data")
+        assert len(arr.sharding.device_set) == n_dev
+        shard_shapes = {s.data.shape for s in arr.addressable_shards}
+        # Every device holds exactly one 1/n_dev block of the edge axis.
+        assert shard_shapes == {(arr.shape[0] // n_dev,)}
+    r = sharded_msf(graph, num_nodes=v, mesh=mesh, partition=part)
+    assert_matches_oracle(r, graph, v)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_sharded_matches_distributed_round_counts(variant, mesh):
+    """Same hooking decisions, different memory layout: the shard-local
+    engine must agree with the replicated-topology engine on rounds and
+    waves, not only on the final mask."""
+    from repro.core.distributed_mst import distributed_msf
+    from repro.core.sharded_mst import sharded_msf
+
+    graph, v = generate_graph(300, 5, seed=23)
+    r_d = distributed_msf(graph, num_nodes=v, mesh=mesh, variant=variant)
+    r_s = sharded_msf(graph, num_nodes=v, mesh=mesh, variant=variant)
+    assert (np.asarray(r_d.mst_mask) == np.asarray(r_s.mst_mask)).all()
+    assert int(r_d.num_rounds) == int(r_s.num_rounds)
+    assert int(r_d.num_waves) == int(r_s.num_waves)

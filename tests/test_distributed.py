@@ -1,10 +1,18 @@
-"""Distributed MST + pjit smoke on 8 forced host devices (subprocess)."""
+"""Distributed + sharded MST on 8 forced host devices (subprocess).
+
+The device-count forcing flag must be set before jax initializes, hence the
+subprocess.  The child env is propagated explicitly: ``PYTHONPATH`` gets the
+repo's ``src`` *prepended* (not clobbered — the parent interpreter may rely
+on its own entries) and ``JAX_PLATFORMS`` is pinned to cpu (forced host
+devices only exist on the cpu platform; inheriting an unset/other value
+makes the child's device count silently wrong).
+"""
 import json
 import os
 import subprocess
 import sys
 
-import pytest
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 _SCRIPT = r"""
 import os
@@ -14,46 +22,53 @@ import numpy as np
 import jax
 from repro.graphs.generator import generate_graph
 from repro.core.distributed_mst import distributed_msf, make_flat_mesh
+from repro.core.sharded_mst import sharded_msf
 from repro.core.oracle import kruskal_numpy
 
 mesh = make_flat_mesh(8)
 out = {}
-for variant in ("cas", "lock"):
-    g, v = generate_graph(600, 5, seed=11)
-    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, v)
-    r = distributed_msf(g, num_nodes=v, mesh=mesh, variant=variant)
-    out[variant] = {
-        "match": bool((np.asarray(r.mst_mask) == om).all()),
-        "ncomp": int(r.num_components),
-        "rounds": int(r.num_rounds),
-        "devices": len(jax.devices()),
-    }
+g, v = generate_graph(600, 5, seed=11)
+om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, v)
+for name, fn in (("distributed", distributed_msf), ("sharded", sharded_msf)):
+    for variant in ("cas", "lock"):
+        r = fn(g, num_nodes=v, mesh=mesh, variant=variant)
+        out[f"{name}-{variant}"] = {
+            "match": bool((np.asarray(r.mst_mask) == om).all()),
+            "ncomp": int(r.num_components),
+            "rounds": int(r.num_rounds),
+            "devices": len(jax.devices()),
+        }
 print("RESULT:" + json.dumps(out))
 """
 
 
-@pytest.mark.slow
-def test_distributed_msf_8dev():
+def _run_forced_8dev(script):
     env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
-    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
-                          capture_output=True, text=True, timeout=600,
-                          cwd=os.path.dirname(os.path.dirname(__file__)))
+    src = os.path.join(_REPO, "src")
+    prev = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = src + (os.pathsep + prev if prev else "")
+    env["JAX_PLATFORMS"] = "cpu"
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=900,
+                          cwd=_REPO)
     assert proc.returncode == 0, proc.stderr[-2000:]
     line = [l for l in proc.stdout.splitlines()
             if l.startswith("RESULT:")][0]
-    out = json.loads(line[len("RESULT:"):])
-    for variant in ("cas", "lock"):
-        assert out[variant]["devices"] == 8
-        assert out[variant]["match"], out
-        assert out[variant]["ncomp"] == 1
+    return json.loads(line[len("RESULT:"):])
+
+
+def test_msf_8dev_both_engines():
+    out = _run_forced_8dev(_SCRIPT)
+    for cell in ("distributed-cas", "distributed-lock",
+                 "sharded-cas", "sharded-lock"):
+        assert out[cell]["devices"] == 8, out
+        assert out[cell]["match"], out
+        assert out[cell]["ncomp"] == 1, out
 
 
 def test_distributed_matches_single_device_on_trivial_mesh():
     """distributed_msf on a 1-device mesh must equal the single-device
     engine bit for bit (same hooking, no real collectives)."""
-    import jax
     import numpy as np
     from repro.core.distributed_mst import distributed_msf, make_flat_mesh
     from repro.core.mst import minimum_spanning_forest
@@ -62,6 +77,23 @@ def test_distributed_matches_single_device_on_trivial_mesh():
     g, v = generate_graph(400, 5, seed=21)
     mesh = make_flat_mesh(1)
     r_d = distributed_msf(g, num_nodes=v, mesh=mesh, variant="cas")
+    r_s = minimum_spanning_forest(g, num_nodes=v, variant="cas")
+    assert (np.asarray(r_d.mst_mask) == np.asarray(r_s.mst_mask)).all()
+    assert int(r_d.num_rounds) == int(r_s.num_rounds)
+
+
+def test_sharded_matches_single_device_on_trivial_mesh():
+    """Same bit-identity for the shard-local-topology engine: owner-decode
+    on one shard must reduce to plain resolve_candidates."""
+    import numpy as np
+    from repro.core.distributed_mst import make_flat_mesh
+    from repro.core.mst import minimum_spanning_forest
+    from repro.core.sharded_mst import sharded_msf
+    from repro.graphs.generator import generate_graph
+
+    g, v = generate_graph(400, 5, seed=21)
+    mesh = make_flat_mesh(1)
+    r_d = sharded_msf(g, num_nodes=v, mesh=mesh, variant="cas")
     r_s = minimum_spanning_forest(g, num_nodes=v, variant="cas")
     assert (np.asarray(r_d.mst_mask) == np.asarray(r_s.mst_mask)).all()
     assert int(r_d.num_rounds) == int(r_s.num_rounds)

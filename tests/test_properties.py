@@ -16,9 +16,11 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import MoEConfig
 from repro.configs.registry import ARCHS
-from repro.core.mst import minimum_spanning_forest
+from repro.core.mst import minimum_spanning_forest, rank_edges
 from repro.core.oracle import kruskal_numpy
+from repro.core.types import Graph, INT_SENTINEL
 from repro.graphs.generator import generate_graph
+from repro.graphs.partition_edges import partition_edges, reconstruct_rank
 from repro.models.gnn import gnn_forward, init_gnn_params
 from repro.models.moe import init_moe_params, moe_ffn
 from repro.models.recsys import fm_interaction
@@ -37,6 +39,48 @@ def test_property_spanning_tree(n, deg, seed):
     assert mask.sum() == v - 1
     assert int(r.num_components) == 1
     assert np.isclose(float(r.total_weight), ow, rtol=1e-5)
+
+
+@given(
+    weights=st.lists(
+        st.sampled_from([0.0, 0.25, 0.5, 1.0, 2.0]), min_size=1,
+        max_size=64),
+    num_shards=st.integers(1, 8),
+)
+@settings(max_examples=40)
+def test_property_partition_rank_roundtrip(weights, num_shards):
+    """Edge-shard partition + per-shard rank tables round-trip to the global
+    ``rank_edges`` order for ANY weight multiset.
+
+    Weights are drawn from a tiny value set so duplicate and all-equal
+    multisets dominate the search space — exactly where a rank/shard
+    interaction bug would hide.  Invariants:
+
+      * ``reconstruct_rank(partition) == rank_edges(weight)[0]`` exactly;
+      * the per-shard tables' real ranks form the permutation 0..E-1
+        (no rank lost or duplicated by sharding);
+      * pad slots are sentinel-ranked and sit at edge_id == E.
+    """
+    e = len(weights)
+    w = jnp.asarray(np.asarray(weights, np.float32))
+    g = Graph(jnp.zeros((e,), jnp.int32), jnp.ones((e,), jnp.int32), w)
+    part = partition_edges(g, num_shards)
+    rank, order = rank_edges(w)
+
+    np.testing.assert_array_equal(reconstruct_rank(part), np.asarray(rank))
+
+    flat_rank = np.asarray(part.rank).reshape(-1)
+    flat_id = np.asarray(part.edge_id).reshape(-1)
+    real = flat_id < e
+    assert sorted(flat_rank[real].tolist()) == list(range(e))
+    assert (flat_rank[~real] == INT_SENTINEL).all()
+    assert (flat_id[~real] == e).all()
+    # Ties break by edge id: equal weights must rank in id order.
+    by_rank = np.asarray(order)
+    ranked_w = np.asarray(w)[by_rank]
+    assert (np.diff(ranked_w) >= 0).all()
+    same = np.diff(ranked_w) == 0
+    assert (np.diff(by_rank)[same] > 0).all()
 
 
 @given(st.integers(5, 60), st.integers(0, 1000))
