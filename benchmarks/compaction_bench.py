@@ -1,0 +1,99 @@
+"""Frontier-compaction section: compacted vs uncompacted, same engine.
+
+Methodology (the container's wall clock drifts by tens of percent over
+minutes, so unpaired timings are meaningless):
+
+  * every variant gets one UNTIMED warmup solve (jit compile + every
+    bucket shape its deterministic input will visit);
+  * the base and compacted solves are then timed in adjacent PAIRS and
+    the reported speedup is the median of the per-pair ratios — slow
+    phases hit both sides of a pair, so the ratio survives the drift;
+  * absolute us columns are medians over the same repeats.
+
+The derived column also records the per-round live-edge decay
+(``live_edge_trace``) — the frontier signal the compacted engines'
+pow2 buckets ride down (EXPERIMENTS.md §Compaction).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+# (graph, cadence) cells; the sparsest class decays fastest (EXPERIMENTS.md
+# §Compaction) and is the headline acceptance row.  The smoke cell is a
+# subset of the default set so the CI regression job always has a committed
+# baseline key to compare.
+DEFAULT_CELLS: Sequence[Tuple[str, int]] = (
+    ("Sparse100K_2.5", 1),
+    ("Graph100K_3", 1),
+    ("Graph100K_6", 1),
+    ("Graph10K_6", 1),
+)
+SMOKE_CELLS: Sequence[Tuple[str, int]] = (("Graph10K_6", 1),)
+
+
+def _resolve(name: str):
+    """Bench graph by name: the paper's Table-1 classes, plus the
+    ``Sparse<V>_<deg>`` random-sparse classes the paper's sweep skips."""
+    from repro.graphs.generator import generate_graph, paper_graph
+
+    if name.startswith("Sparse"):
+        nodes, deg = name[len("Sparse"):].split("_")
+        v = int(nodes.replace("K", "000").replace("M", "000000"))
+        return generate_graph(v, float(deg), seed=0)
+    return paper_graph(name, seed=0)
+
+
+def paired_time(base_fn, comp_fn, repeats: int):
+    """(base_us, comp_us, median per-pair base/comp ratio), after one
+    untimed warmup each.  Shared by every A-vs-B section (fig1 uses it
+    too): adjacent pairs are the only timing this container's drifting
+    clock can't poison."""
+    base_fn()
+    comp_fn()
+    base_ts, comp_ts, ratios = [], [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        base_fn()
+        t1 = time.perf_counter()
+        comp_fn()
+        t2 = time.perf_counter()
+        base_ts.append(t1 - t0)
+        comp_ts.append(t2 - t1)
+        ratios.append((t1 - t0) / (t2 - t1))
+    return (float(np.median(base_ts)) * 1e6,
+            float(np.median(comp_ts)) * 1e6,
+            float(np.median(ratios)))
+
+
+def compaction_rows(cells: Sequence[Tuple[str, int]] = DEFAULT_CELLS,
+                    variant: str = "cas",
+                    repeats: int = 5) -> List[Tuple[str, float, str]]:
+    """(name, us, derived) rows: paired speedup + live-edge decay trace."""
+    from repro.core.mst import live_edge_trace, minimum_spanning_forest
+
+    rows = []
+    for graph_name, k in cells:
+        g, v = _resolve(graph_name)
+
+        def base():
+            return minimum_spanning_forest(
+                g, num_nodes=v, variant=variant
+            ).total_weight.block_until_ready()
+
+        def comp():
+            return minimum_spanning_forest(
+                g, num_nodes=v, variant=variant, compaction=k
+            ).total_weight.block_until_ready()
+
+        base_us, comp_us, speedup = paired_time(base, comp, repeats)
+        rows.append((f"compaction_single_{graph_name}_{variant}_off",
+                     base_us, ""))
+        rows.append((f"compaction_single_{graph_name}_{variant}_k{k}",
+                     comp_us, f"speedup_vs_off={speedup:.3f}"))
+        trace = live_edge_trace(g, v, variant=variant)
+        rows.append((f"compaction_live_{graph_name}_{variant}", 0.0,
+                     "live_per_round=" + "-".join(str(c) for c in trace)))
+    return rows

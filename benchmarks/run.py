@@ -32,15 +32,27 @@ def main() -> None:
                     help="skip the sharded weak-scaling subprocess section")
     ap.add_argument("--json", action="store_true",
                     help="also write BENCH_mst.json next to the CSV output")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed repetitions per row (median reported) after "
+                         "one untimed warmup solve per (engine, variant, "
+                         "shape); the paired compaction section floors "
+                         "this at 5 — its median-of-ratios needs the "
+                         "pairs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shape set for the CI bench-regression "
+                         "job: small graphs, no subprocess sections")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, mst_figures, roofline_bench
+    from benchmarks import (compaction_bench, kernel_bench, mst_figures,
+                            roofline_bench)
 
     rows = []
-    graphs = list(mst_figures.DEFAULT_GRAPHS)
+    graphs = (["Graph10K_3", "Graph10K_6"] if args.smoke
+              else list(mst_figures.DEFAULT_GRAPHS))
     if args.full:
         graphs += mst_figures.FULL_EXTRA
-    rows += mst_figures.fig1_sequential_optimization(graphs)
+    rows += mst_figures.fig1_sequential_optimization(graphs,
+                                                     repeats=args.repeats)
     if args.scaling:
         rows += mst_figures.fig23_parallel_scaling("lock", args.graph)
         rows += mst_figures.fig23_parallel_scaling("cas", args.graph)
@@ -48,27 +60,30 @@ def main() -> None:
     else:
         # single-process variant comparison (structural metrics + wall time)
         # dispatched through the engine registry (--engine picks the path).
-        import time
         from repro.core import solve_mst
         from repro.graphs.generator import paper_graph
-        g, v = paper_graph(args.graph, seed=0)
+        gname = "Graph10K_6" if args.smoke else args.graph
+        g, v = paper_graph(gname, seed=0)
         for variant in ("cas", "lock"):
             fn = lambda: solve_mst(
                 g, v, engine=args.engine, variant=variant
             ).total_weight.block_until_ready()
-            fn()
-            t0 = time.perf_counter()
-            fn()
-            us = (time.perf_counter() - t0) * 1e6
+            us = mst_figures._time(fn, reps=args.repeats)
             r = solve_mst(g, v, engine=args.engine, variant=variant)
-            rows.append((f"fig23_{args.graph}_{variant}_{args.engine}_1proc",
+            rows.append((f"fig23_{gname}_{variant}_{args.engine}_1proc",
                          us,
                          f"rounds={int(r.num_rounds)};"
                          f"waves={int(r.num_waves)}"))
+    # Frontier compaction vs uncompacted, same engine (paired ratios), plus
+    # the per-round live-edge decay traces.
+    rows += compaction_bench.compaction_rows(
+        cells=(compaction_bench.SMOKE_CELLS if args.smoke
+               else compaction_bench.DEFAULT_CELLS),
+        repeats=max(args.repeats, 5))
     # Batched multi-graph engine: serving throughput at batch {1, 8, 64}.
     from benchmarks import batched_bench
-    rows += batched_bench.batched_throughput_rows()
-    if not args.no_weak:
+    rows += batched_bench.batched_throughput_rows(repeats=args.repeats)
+    if not (args.no_weak or args.smoke):
         # Sharded-engine weak scaling (forced 8-host-device subprocess):
         # per-device topology bytes land in BENCH_mst.json's derived column.
         rows += batched_bench.weak_scaling_rows()

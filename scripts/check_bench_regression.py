@@ -1,0 +1,85 @@
+"""Fail CI when a derived speedup metric regresses vs the committed bench.
+
+Usage:
+    python scripts/check_bench_regression.py BASELINE.json NEW.json \
+        [--threshold 0.2]
+
+Compares every ``metric=value`` pair inside the ``_derived`` column of the
+two BENCH_mst.json files, restricted to SPEEDUP-style metrics (bigger is
+better; ratios survive the CI runners' absolute-speed differences, raw
+microseconds do not).  Only keys present in BOTH files are compared, so a
+``--smoke`` run checks exactly its subset against the committed full run.
+Exits non-zero when any metric drops more than ``threshold`` (default 20%).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+# Metrics where larger is better and the value is hardware-portable: all
+# are SAME-RUN ratios (A/B on one machine).  graphs_per_sec is absolute
+# throughput and deliberately NOT here — a slower runner would trip the
+# threshold without any real regression.
+SPEEDUP_METRICS = ("speedup_vs_off", "speedup_vs_unopt", "speedup_vs_opt",
+                   "cas_speedup")
+
+_PAIR = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)=([-+0-9.eE]+)")
+
+
+def parse_derived(derived: dict) -> dict:
+    """{(row, metric): float} for every numeric metric=value pair."""
+    out = {}
+    for row, text in derived.items():
+        for metric, value in _PAIR.findall(str(text)):
+            try:
+                out[(row, metric)] = float(value)
+            except ValueError:
+                continue
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="max allowed fractional drop (0.2 = 20%%)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = parse_derived(json.load(f).get("_derived", {}))
+    with open(args.new) as f:
+        new = parse_derived(json.load(f).get("_derived", {}))
+
+    shared = [k for k in sorted(base) if k in new
+              and k[1] in SPEEDUP_METRICS]
+    if not shared:
+        print("check_bench_regression: no shared speedup metrics — "
+              "nothing to compare", file=sys.stderr)
+        return 0
+
+    failures = []
+    for key in shared:
+        b, n = base[key], new[key]
+        drop = (b - n) / b if b > 0 else 0.0
+        status = "REGRESSED" if drop > args.threshold else "ok"
+        print(f"{key[0]}:{key[1]}  baseline={b:.3f}  new={n:.3f}  "
+              f"drop={drop * 100:+.1f}%  {status}")
+        if drop > args.threshold:
+            failures.append(key)
+
+    if failures:
+        print(f"\n{len(failures)} metric(s) regressed more than "
+              f"{args.threshold * 100:.0f}%: "
+              + ", ".join(f"{r}:{m}" for r, m in failures),
+              file=sys.stderr)
+        return 1
+    print(f"\nall {len(shared)} shared speedup metrics within "
+          f"{args.threshold * 100:.0f}% of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

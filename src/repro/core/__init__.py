@@ -25,30 +25,35 @@ from repro.core.union_find import pointer_jump, count_components
 
 
 def _solve_single(graph: Graph, num_nodes: int, *, variant: str = "cas",
-                  mesh=None) -> MSTResult:
+                  mesh=None, compaction: int = 0) -> MSTResult:
     return minimum_spanning_forest(graph, num_nodes=num_nodes,
-                                   variant=variant)
+                                   variant=variant, compaction=compaction)
 
 
 def _solve_unopt_seq(graph: Graph, num_nodes: int, *, variant: str = "cas",
-                     mesh=None) -> MSTResult:
+                     mesh=None, compaction: int = 0) -> MSTResult:
+    # The §2.1 baseline rescans every edge by definition: compaction is a
+    # no-op here (accepted so the dispatch surface stays uniform).
     return mst_unoptimized(graph, num_nodes, variant=variant)
 
 
 def _solve_opt_seq(graph: Graph, num_nodes: int, *, variant: str = "cas",
-                   mesh=None) -> MSTResult:
+                   mesh=None, compaction: int = 0) -> MSTResult:
+    # Host-side compaction every round is this engine's definition; the
+    # knob is accepted for dispatch uniformity.
     return mst_optimized(graph, num_nodes, variant=variant)
 
 
 def _solve_batched(graph: Graph, num_nodes: int, *, variant: str = "cas",
-                   mesh=None) -> MSTResult:
+                   mesh=None, compaction: int = 0) -> MSTResult:
     """One-lane batch through the vmapped engine, trimmed back to MSTResult."""
     from repro.core.batched_mst import batched_msf, pack_padded
 
     packed = pack_padded([(graph, num_nodes)],
                          padded_edges=graph.num_edges,
                          padded_nodes=num_nodes)
-    r = batched_msf(packed, num_nodes=num_nodes, variant=variant)
+    r = batched_msf(packed, num_nodes=num_nodes, variant=variant,
+                    compaction=compaction)
     return MSTResult(parent=r.parent[0], mst_mask=r.mst_mask[0],
                      num_rounds=r.num_rounds[0], num_waves=r.num_waves[0],
                      total_weight=r.total_weight[0],
@@ -63,19 +68,20 @@ def _default_mesh(mesh):
 
 
 def _solve_distributed(graph: Graph, num_nodes: int, *, variant: str = "cas",
-                       mesh=None) -> MSTResult:
+                       mesh=None, compaction: int = 0) -> MSTResult:
     from repro.core.distributed_mst import distributed_msf
 
     return distributed_msf(graph, num_nodes=num_nodes,
-                           mesh=_default_mesh(mesh), variant=variant)
+                           mesh=_default_mesh(mesh), variant=variant,
+                           compaction=compaction)
 
 
 def _solve_sharded(graph: Graph, num_nodes: int, *, variant: str = "cas",
-                   mesh=None) -> MSTResult:
+                   mesh=None, compaction: int = 0) -> MSTResult:
     from repro.core.sharded_mst import sharded_msf
 
     return sharded_msf(graph, num_nodes=num_nodes, mesh=_default_mesh(mesh),
-                       variant=variant)
+                       variant=variant, compaction=compaction)
 
 
 class EngineSpec(NamedTuple):
@@ -83,7 +89,10 @@ class EngineSpec(NamedTuple):
 
     Attributes:
       name: registry key.
-      solve: ``(graph, num_nodes, *, variant, mesh) -> MSTResult``.
+      solve: ``(graph, num_nodes, *, variant, mesh, compaction) ->
+        MSTResult``.  Every engine accepts ``compaction`` (frontier
+        compaction cadence in rounds, 0 = off); the sequential baselines
+        ignore it by definition.
       needs_mesh: True when the engine runs real collectives (a mesh is
         constructed over all local devices if the caller passes none).
       description: one-line summary for --help texts and docs tables.
@@ -114,14 +123,16 @@ ENGINES = {
 
 
 def solve_mst(graph: Graph, num_nodes: int, *, engine: str = "single",
-              variant: str = "cas", mesh=None) -> MSTResult:
+              variant: str = "cas", mesh=None,
+              compaction: int = 0) -> MSTResult:
     """Dispatch one MST solve through the engine registry."""
     try:
         spec = ENGINES[engine]
     except KeyError:
         raise ValueError(
             f"unknown engine {engine!r}; known: {sorted(ENGINES)}") from None
-    return spec.solve(graph, num_nodes, variant=variant, mesh=mesh)
+    return spec.solve(graph, num_nodes, variant=variant, mesh=mesh,
+                      compaction=compaction)
 
 
 __all__ = [

@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import (boruvka_epoch, init_frontier,
+                               materialize_commits, scan_bucket_sizes)
 from repro.core.mst import boruvka_round, rank_edges, _init_state
 from repro.core.types import Graph
 from repro.core.union_find import count_components
@@ -109,10 +111,11 @@ def pack_padded(graphs: Sequence[Tuple[Graph, int]], *, padded_edges: int,
 @functools.partial(
     jax.jit,
     static_argnames=("num_nodes", "variant", "track_covered",
-                     "max_lock_waves"))
+                     "max_lock_waves", "compaction"))
 def batched_msf(batch: BatchedGraph, *, num_nodes: int,
                 variant: str = "cas", track_covered: bool = True,
-                max_lock_waves: int = 16) -> BatchedMSTResult:
+                max_lock_waves: int = 16,
+                compaction: int = 0) -> BatchedMSTResult:
     """Borůvka MSF over every lane of ``batch`` in one jitted while_loop.
 
     Args:
@@ -122,15 +125,25 @@ def batched_msf(batch: BatchedGraph, *, num_nodes: int,
       variant: "cas" or "lock" — same paper variants as the single engine;
         the lock-variant's retry-wave while_loop batches via lax select
         masking, so fast lanes idle while contended lanes drain.
+      compaction: 0 = off; k > 0 = every k rounds each lane stable-
+        partitions its live edges to a prefix (per-lane live counts; pad
+        and finished lanes compact to empty prefixes of sentinel lanes) and
+        the scan shrinks to one pow2 bucket of the *max* live count across
+        lanes — the bucket switch must sit outside the vmap, so the batch
+        scans at the pace of its liveliest lane.
 
     Returns per-lane results; lane i is only meaningful up to
     ``batch.num_nodes[i]`` / ``batch.num_edges[i]``.
     """
+    if compaction and not track_covered:
+        raise ValueError("compaction requires track_covered=True "
+                         "(the covered bit IS the live/dead partition key)")
     e_pad = batch.src.shape[1]
     rank, order = jax.vmap(rank_edges)(batch.weight)
 
     def one_lane_init(_):
-        return _init_state(num_nodes, e_pad, e_pad)
+        return _init_state(num_nodes, e_pad, e_pad,
+                           commit_slots=variant == "cas")
 
     init = jax.vmap(one_lane_init)(batch.num_nodes)
 
@@ -139,15 +152,31 @@ def batched_msf(batch: BatchedGraph, *, num_nodes: int,
                           track_covered=track_covered, num_nodes=num_nodes,
                           max_lock_waves=max_lock_waves))
 
-    def cond(s):
-        return ~jnp.all(s.done)
+    if not compaction:
+        def cond(s):
+            return ~jnp.all(s.done)
 
-    def body(s):
-        return round_fn(s, batch.src, batch.dst, rank,
-                        batch.src, batch.dst, order)
+        def body(s):
+            return round_fn(s, batch.src, batch.dst, rank,
+                            batch.src, batch.dst, order)
 
-    final = jax.lax.while_loop(cond, body, init)
+        final = jax.lax.while_loop(cond, body, init)
+    else:
+        sizes = scan_bucket_sizes(e_pad)
 
+        def cond(carry):
+            return ~jnp.all(carry[0].done)
+
+        def body(carry):
+            s, f = carry
+            return boruvka_epoch(s, f, batch.src, batch.dst, order,
+                                 round_fn=round_fn, sizes=sizes,
+                                 compaction=compaction)
+
+        final, _ = jax.lax.while_loop(
+            cond, body, (init, init_frontier(batch.src, batch.dst, rank)))
+
+    final = jax.vmap(materialize_commits)(final)
     total = jnp.sum(jnp.where(final.mst_mask, batch.weight, 0.0), axis=1)
     comp = jax.vmap(count_components)(final.parent)
     pad_singletons = jnp.int32(num_nodes) - batch.num_nodes

@@ -31,13 +31,17 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core.types import Graph, MSTResult, INT_SENTINEL
 from repro.core.engine import (
     BoruvkaState,
-    candidate_min_edges,
-    commit_edges,
     hook_cas,
     hook_lock_waves,
+    init_frontier,
     init_state,
-    rank_edges,
+    make_scan_branches,
+    materialize_commits,
+    maybe_pack_frontier,
+    rank_edges_host,
     resolve_candidates,
+    scan_bucket_index,
+    scan_bucket_sizes,
     shard_map_compat,
 )
 from repro.core.union_find import pointer_jump, count_components
@@ -52,15 +56,23 @@ def _pad_to(x, n, fill):
 
 def distributed_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
                     axis: str = "data", variant: str = "cas",
-                    max_lock_waves: int = 16) -> MSTResult:
+                    max_lock_waves: int = 16,
+                    compaction: int = 0) -> MSTResult:
     """Minimum spanning forest with edge scanning sharded over ``mesh[axis]``.
+
+    ``compaction``: 0 = off; k > 0 = every k rounds each device stable-
+    partitions its own scan shard's live edges to a prefix and scans a
+    pow2-bucketed prefix afterwards.  Compaction is entirely shard-local
+    (per-device live counts, no collective); the bucket switch holds no
+    collectives either, so devices can sit in different buckets while the
+    (V,)-sized ``pmin`` merges stay outside.
 
     Returns replicated outputs identical to the single-device engine.
     """
     n_shards = mesh.shape[axis]
     e = graph.num_edges
     e_pad = -(-e // n_shards) * n_shards
-    rank, order = rank_edges(graph.weight)
+    rank, order = rank_edges_host(graph.weight)
     scan_src = _pad_to(graph.src, e_pad, 0)
     scan_dst = _pad_to(graph.dst, e_pad, 0)
     scan_rank = _pad_to(rank, e_pad, INT_SENTINEL)
@@ -70,26 +82,32 @@ def distributed_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
     repl = P()
 
     def run(s_src, s_dst, s_rank, f_src, f_dst, f_order, weight):
-        init = init_state(num_nodes, e, s_rank.shape[0])
+        e_scan = s_rank.shape[0]
+        init = init_state(num_nodes, e, e_scan,
+                          commit_slots=variant == "cas")
+        sizes = scan_bucket_sizes(e_scan) if compaction else (e_scan,)
 
-        def cond(s):
-            return ~s.done
+        branches = make_scan_branches(sizes, num_nodes)
 
-        def body(state):
-            cu_e = state.parent[s_src]
-            cv_e = state.parent[s_dst]
-            self_edge = cu_e == cv_e
-            new_covered = state.covered | self_edge
-            key = jnp.where(new_covered, INT_SENTINEL, s_rank)
-            local_best = candidate_min_edges(key, cu_e, cv_e, num_nodes)
+        def cond(carry):
+            return ~carry[0].done
+
+        def body(carry):
+            state, f = carry
+            idx = scan_bucket_index(sizes, f.live)
+            new_covered, local_best = jax.lax.switch(
+                idx, branches, (state.parent, state.covered, f))
             # The paper's cross-thread merge of minimum[]: one collective.
             best = jax.lax.pmin(local_best, axis)
             has, cand_edge, end_u, end_v, other, iota = resolve_candidates(
                 best, f_order, f_src, f_dst, state.parent)
+            committed = state.committed
             if variant == "cas":
                 new_parent, commit = hook_cas(state.parent, has, cand_edge,
                                               other, iota)
-                mst_mask = commit_edges(state.mst_mask, cand_edge, commit)
+                # Write-once (V,) commit slots (see engine.BoruvkaState).
+                mst_mask = state.mst_mask
+                committed = jnp.where(commit, cand_edge, committed)
                 new_parent = pointer_jump(new_parent)
                 waves = jnp.ones((), jnp.int32)
             else:
@@ -97,12 +115,20 @@ def distributed_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
                     state.parent, state.mst_mask, has, cand_edge,
                     end_u, end_v, max_waves=max_lock_waves)
             done = ~jnp.any(has)
-            return BoruvkaState(
+            state = BoruvkaState(
                 new_parent, mst_mask, new_covered,
                 state.num_rounds + jnp.where(done, 0, 1),
-                state.num_waves + jnp.where(done, 0, waves), done)
+                state.num_waves + jnp.where(done, 0, waves), done,
+                committed)
+            if compaction:
+                # Shard-local gated pack; devices may diverge on the gate
+                # (no collectives inside).
+                state, f = maybe_pack_frontier(state, f, sizes, compaction)
+            return state, f
 
-        final = jax.lax.while_loop(cond, body, init)
+        final, _ = jax.lax.while_loop(
+            cond, body, (init, init_frontier(s_src, s_dst, s_rank)))
+        final = materialize_commits(final)
         total = jnp.sum(jnp.where(final.mst_mask, weight, 0.0))
         ncomp = count_components(final.parent)
         return (final.parent, final.mst_mask, final.num_rounds,

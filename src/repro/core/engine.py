@@ -23,13 +23,22 @@ The blocks are layout-agnostic on purpose:
 
 ``rank_edges`` lives here too: the (weight, edge_id) dense rank is the
 distinct-weights *construction* every engine builds on (see DESIGN.md §2).
+
+Frontier compaction (DESIGN.md §2b) also lives here: after round 1 the
+covered/self edges grow to dominate the scan, so every compaction-capable
+engine periodically stable-partitions the live lanes to a prefix
+(``compact_frontier``) and then scans only a power-of-two *bucketed prefix*
+(``boruvka_epoch`` / ``scan_bucket_sizes``).  The pow2 bucketing is the
+same recompile-bounding idea as ``graphs/batching.py``, applied inside a
+single jitted ``while_loop`` via ``lax.switch`` over statically-sized slices.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import Graph, MSTResult, INT_SENTINEL
 from repro.core.union_find import pointer_jump, count_components
@@ -73,6 +82,23 @@ def rank_edges(weight: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return rank, order
 
 
+def rank_edges_host(weight) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """``rank_edges`` on the host: numpy's stable argsort.
+
+    Bit-identical ranks/order to the jnp version (both are stable ascending
+    sorts, so ties break by edge id either way) but ~5-10x faster than the
+    XLA CPU sort — a fixed per-solve cost worth dodging for every engine
+    whose rank is computed at the host level (single, sequential,
+    distributed, sharded; the batched engine ranks in-jit under vmap).
+    """
+    w = np.asarray(weight)
+    e = w.shape[0]
+    order = np.argsort(w, kind="stable").astype(np.int32)
+    rank = np.empty((e,), np.int32)
+    rank[order] = np.arange(e, dtype=np.int32)
+    return jnp.asarray(rank), jnp.asarray(order)
+
+
 class BoruvkaState(NamedTuple):
     parent: jnp.ndarray    # (V,) component array, fully compressed
     mst_mask: jnp.ndarray  # (E_full,) bool, committed MST edges ("M")
@@ -80,9 +106,19 @@ class BoruvkaState(NamedTuple):
     num_rounds: jnp.ndarray
     num_waves: jnp.ndarray  # lock-variant retry waves (== rounds for CAS)
     done: jnp.ndarray
+    # CAS-only commit accumulator: committed[c] = edge id component c
+    # committed, or E_full.  A committing root is absorbed the same round
+    # and never roots again, so each slot is written AT MOST ONCE — the
+    # per-round commit becomes one (V,) `where` instead of a (V,)-index
+    # scatter into the (E,) mask (the scatter was the single largest
+    # fixed per-round cost), and `materialize_commits` scatters once at
+    # the end.  None = scatter-per-round (the lock variant re-commits
+    # from surviving roots, so it keeps the in-round scatter).
+    committed: Optional[jnp.ndarray] = None  # (V,) int32 edge ids or None
 
 
-def init_state(num_nodes: int, e_full: int, e_scan: int) -> BoruvkaState:
+def init_state(num_nodes: int, e_full: int, e_scan: int,
+               *, commit_slots: bool = False) -> BoruvkaState:
     return BoruvkaState(
         parent=jnp.arange(num_nodes, dtype=jnp.int32),
         mst_mask=jnp.zeros((e_full,), bool),
@@ -90,7 +126,18 @@ def init_state(num_nodes: int, e_full: int, e_scan: int) -> BoruvkaState:
         num_rounds=jnp.zeros((), jnp.int32),
         num_waves=jnp.zeros((), jnp.int32),
         done=jnp.zeros((), bool),
+        committed=(jnp.full((num_nodes,), e_full, jnp.int32)
+                   if commit_slots else None),
     )
+
+
+def materialize_commits(state: BoruvkaState) -> BoruvkaState:
+    """Flush the (V,) CAS commit slots into the (E,) mask — one scatter
+    per solve.  No-op for states without commit slots."""
+    if state.committed is None:
+        return state
+    mask = state.mst_mask.at[state.committed].set(True, mode="drop")
+    return state._replace(mst_mask=mask)
 
 
 def finish_result(graph: Graph, state: BoruvkaState, rounds) -> MSTResult:
@@ -103,6 +150,239 @@ def finish_result(graph: Graph, state: BoruvkaState, rounds) -> MSTResult:
         total_weight=total,
         num_components=count_components(state.parent),
     )
+
+
+# ---------------------------------------------------------------------------
+# Frontier compaction: live-edge prefix + pow2 scan buckets.
+# ---------------------------------------------------------------------------
+
+MIN_SCAN_BUCKET = 64  # below this, all prefixes collapse into one tiny bucket
+
+
+class Frontier(NamedTuple):
+    """Permuted scan arrays with the live lanes packed into a prefix.
+
+    ``live`` counts the non-covered lanes as of the last compaction: lanes
+    ``[0, live)`` are (or were) live, everything after is covered with a
+    sentinel rank, so a scan over any prefix >= ``live`` sees every live
+    edge.  ``edge_id`` rides along for engines whose scan lanes are not
+    identified by position (the shard-local engine's owner-decode); ``None``
+    elsewhere.
+    """
+
+    src: jnp.ndarray   # (..., E_scan) int32
+    dst: jnp.ndarray   # (..., E_scan) int32
+    rank: jnp.ndarray  # (..., E_scan) int32, suffix lanes INT_SENTINEL
+    live: jnp.ndarray  # (...,) int32 live-lane count of the packed prefix
+    edge_id: Optional[jnp.ndarray] = None  # (..., E_scan) int32 or None
+
+
+def init_frontier(scan_src, scan_dst, scan_rank, edge_id=None) -> Frontier:
+    """Uncompacted frontier: every lane counts as live."""
+    e = scan_src.shape[-1]
+    live = jnp.full(scan_src.shape[:-1], e, jnp.int32)
+    return Frontier(scan_src, scan_dst, scan_rank, live, edge_id)
+
+
+def live_prefix_permutation(covered) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable partition of lane ids on the covered bit.
+
+    Returns ``(perm, live)``: ``perm`` is a permutation of ``arange(E)``
+    with the live (non-covered) lane ids first — both halves keep their
+    original relative order, i.e. a stable sort on the covered bit — and
+    ``live`` is the number of live lanes.  O(E) cumsums + one scatter, no
+    argsort.  The Pallas stream-compaction kernel
+    (``kernels/compact_edges``) computes the same permutation on-device.
+    """
+    e = covered.shape[0]
+    lane = jnp.arange(e, dtype=jnp.int32)
+    live = jnp.sum(~covered).astype(jnp.int32)
+    pos = jnp.where(covered,
+                    live + jnp.cumsum(covered) - 1,
+                    jnp.cumsum(~covered) - 1).astype(jnp.int32)
+    perm = jnp.zeros((e,), jnp.int32).at[pos].set(lane)
+    return perm, live
+
+
+def compact_frontier(frontier: Frontier, covered,
+                     *, use_kernel: bool = False
+                     ) -> Tuple[Frontier, jnp.ndarray]:
+    """Pack the live lanes of ``frontier`` into a prefix (full width).
+
+    Returns the permuted frontier and its new covered array (False on the
+    live prefix, True after).  Suffix ranks are forced to INT_SENTINEL so a
+    bucketed scan that overshoots ``live`` still can't elect a dead edge.
+    ``use_kernel`` routes the permutation through the Pallas
+    stream-compaction kernel instead of the jnp cumsum path.
+    """
+    if use_kernel:
+        from repro.kernels.compact_edges.ops import compact_edges
+        perm, live = compact_edges(covered)
+    else:
+        perm, live = live_prefix_permutation(covered)
+    e = covered.shape[0]
+    pad = jnp.arange(e, dtype=jnp.int32) >= live
+    return Frontier(
+        src=frontier.src[perm],
+        dst=frontier.dst[perm],
+        rank=jnp.where(pad, INT_SENTINEL, frontier.rank[perm]),
+        live=live,
+        edge_id=None if frontier.edge_id is None else frontier.edge_id[perm],
+    ), pad
+
+
+def _pack_prefix(frontier: Frontier, covered, sz: int, use_kernel: bool):
+    """Pack live lanes within the first ``sz`` slots; suffix is untouched
+    (the frontier invariant guarantees it is already all-dead).
+
+    Fast path: only the LIVE lanes are scattered to their prefix slots
+    (one cumsum + 3-4 drop-mode scatters).  Dead lanes keep stale values —
+    harmless, because their ranks are forced to INT_SENTINEL and their
+    covered bits to True, which is all the scan ever looks at.  The
+    ``use_kernel`` path routes through the Pallas stream-compaction
+    kernel's full stable permutation instead.
+    """
+    def one(src, dst, rank, eid, cov):
+        sub = Frontier(src[:sz], dst[:sz], rank[:sz], jnp.int32(sz),
+                       None if eid is None else eid[:sz])
+        if use_kernel:
+            packed, pad = compact_frontier(sub, cov[:sz], use_kernel=True)
+        else:
+            alive = ~cov[:sz]
+            live = jnp.sum(alive).astype(jnp.int32)
+            # Stable: live lanes keep their relative order in the prefix.
+            pos = jnp.where(alive, jnp.cumsum(alive) - 1, sz).astype(
+                jnp.int32)
+            pad = jnp.arange(sz, dtype=jnp.int32) >= live
+
+            def scatter(x):
+                # Dead lanes aim at pos == sz: out of bounds for the
+                # prefix-sized buffer, so drop-mode discards them.
+                xp = x[:sz]
+                return xp.at[pos].set(xp, mode="drop")
+
+            packed = Frontier(
+                src=scatter(src), dst=scatter(dst),
+                rank=jnp.where(pad, INT_SENTINEL, scatter(rank)),
+                live=live,
+                edge_id=None if eid is None else scatter(eid))
+        return (src.at[:sz].set(packed.src),
+                dst.at[:sz].set(packed.dst),
+                rank.at[:sz].set(packed.rank),
+                None if eid is None else eid.at[:sz].set(packed.edge_id),
+                cov.at[:sz].set(pad),
+                packed.live)
+
+    if covered.ndim == 1:
+        src, dst, rank, eid, cov, live = one(
+            frontier.src, frontier.dst, frontier.rank, frontier.edge_id,
+            covered)
+    else:
+        # Batched (B, E_pad) layout: per-lane pack under one static sz.
+        one_v = jax.vmap(one, in_axes=(0, 0, 0,
+                                       None if frontier.edge_id is None
+                                       else 0, 0))
+        src, dst, rank, eid, cov, live = one_v(
+            frontier.src, frontier.dst, frontier.rank, frontier.edge_id,
+            covered)
+    return Frontier(src, dst, rank, live, eid), cov
+
+
+def compact_frontier_bucketed(frontier: Frontier, covered,
+                              sizes: Tuple[int, ...],
+                              *, use_kernel: bool = False
+                              ) -> Tuple[Frontier, jnp.ndarray]:
+    """``compact_frontier`` bounded to the current pow2 bucket.
+
+    Everything beyond the current bucket is already packed-dead, so the
+    pack pass (permutation + gathers) only needs to touch the bucket
+    prefix — compaction cost shrinks along with the scan it accelerates.
+    Same ``lax.switch``-over-static-sizes shape as the round itself.
+    """
+    def branch(sz):
+        def run(ops):
+            f, cov = ops
+            return _pack_prefix(f, cov, sz, use_kernel)
+        return run
+
+    idx = scan_bucket_index(sizes, jnp.max(frontier.live))
+    return jax.lax.switch(idx, [branch(sz) for sz in sizes],
+                          (frontier, covered))
+
+
+def make_scan_branches(sizes: Tuple[int, ...], num_nodes: int):
+    """Bucketed candidate-scan branches for the mesh engines.
+
+    Each branch takes ``(parent, covered, frontier)`` and returns the
+    spliced-back covered array plus the shard-local ``(V,)`` candidate
+    minima over its static prefix — everything shard-local, so devices in
+    different buckets diverge safely; the cross-shard ``pmin`` stays with
+    the caller (a collective inside a divergent branch would deadlock,
+    which is also why the mesh engines cannot reuse ``boruvka_epoch``'s
+    whole-round-in-branch structure).
+    """
+    def scan_branch(sz):
+        def scan(ops):
+            parent, covered, f = ops
+            cu_e = parent[f.src[:sz]]
+            cv_e = parent[f.dst[:sz]]
+            self_edge = cu_e == cv_e
+            new_cov = covered[:sz] | self_edge
+            key = jnp.where(new_cov, INT_SENTINEL, f.rank[:sz])
+            local_best = candidate_min_edges(key, cu_e, cv_e, num_nodes)
+            return covered.at[:sz].set(new_cov), local_best
+        return scan
+
+    return [scan_branch(sz) for sz in sizes]
+
+
+def maybe_pack_frontier(state: BoruvkaState, frontier: Frontier,
+                        sizes: Tuple[int, ...], compaction: int
+                        ) -> Tuple[BoruvkaState, Frontier]:
+    """Per-round gated pack for the mesh engines (shard-local, no
+    collective): pack only on the cadence AND only when the fresh live
+    count buys a smaller pow2 bucket.
+
+    The identity branch of the cond stages this device's frontier buffers
+    even on non-pack rounds — the overhead that pushed the single/batched
+    engines to the epoch structure (DESIGN.md §2b) — but here the staged
+    buffers are the O(E/S) shard, not the full edge list, and the epoch
+    alternative is off the table because the per-round ``pmin`` cannot
+    move inside a divergent switch branch.
+    """
+    live_now = jnp.sum(~state.covered).astype(jnp.int32)
+    do = (~state.done & (state.num_rounds % compaction == 0)
+          & (scan_bucket_index(sizes, live_now)
+             < scan_bucket_index(sizes, frontier.live)))
+    frontier, covered = jax.lax.cond(
+        do,
+        lambda args: compact_frontier_bucketed(*args, sizes=sizes),
+        lambda args: args, (frontier, state.covered))
+    return state._replace(covered=covered), frontier
+
+
+def scan_bucket_sizes(e_scan: int,
+                      min_bucket: int = MIN_SCAN_BUCKET) -> Tuple[int, ...]:
+    """Static power-of-two prefix lengths ``[min_bucket, ..., e_scan]``.
+
+    The ``lax.switch`` over these sizes is what bounds jit specialization to
+    log2(E) branches under JAX's static shapes — the same pow2-bucket idea
+    as ``graphs/batching.py``, applied to the scan prefix.
+    """
+    sizes = []
+    b = min(min_bucket, e_scan)
+    while b < e_scan:
+        sizes.append(b)
+        b <<= 1
+    sizes.append(e_scan)
+    return tuple(sizes)
+
+
+def scan_bucket_index(sizes: Tuple[int, ...], live) -> jnp.ndarray:
+    """Index of the smallest bucket that covers ``live`` lanes (traced)."""
+    return jnp.searchsorted(jnp.asarray(sizes, jnp.int32),
+                            live.astype(jnp.int32), side="left"
+                            ).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -129,10 +409,11 @@ def resolve_candidates(best, order, full_src, full_dst, parent):
     owner-decode collective (``sharded_mst``) and calls
     ``partner_components`` on the decoded endpoints instead.
     """
-    num_nodes = parent.shape[0]
     has = best < INT_SENTINEL
-    cand_edge = order[jnp.clip(best, 0, order.shape[0] - 1)]
-    cand_edge = jnp.where(has, cand_edge, 0)
+    # Single guarded gather: a sentinel rank is out of bounds for `order`,
+    # so fill-mode returns the same 0 the old clip-then-where produced —
+    # one gather instead of clip + gather + select.
+    cand_edge = order.at[best].get(mode="fill", fill_value=0)
     end_u = full_src[cand_edge]
     end_v = full_dst[cand_edge]
     other, iota = partner_components(parent, has, end_u, end_v)
@@ -277,10 +558,16 @@ def boruvka_round(state: BoruvkaState, scan_src, scan_dst, scan_rank,
     best = candidate_min_edges(key, cu_e, cv_e, num_nodes)
     has, cand_edge, end_u, end_v, other, iota = resolve_candidates(
         best, order, full_src, full_dst, state.parent)
+    committed = state.committed
     if variant == "cas":
         new_parent, commit = hook_cas(state.parent, has, cand_edge, other,
                                       iota)
-        mst_mask = commit_edges(state.mst_mask, cand_edge, commit)
+        if committed is None:
+            mst_mask = commit_edges(state.mst_mask, cand_edge, commit)
+        else:
+            # Write-once commit slots: (V,) elementwise, no scatter.
+            mst_mask = state.mst_mask
+            committed = jnp.where(commit, cand_edge, committed)
         new_parent = pointer_jump(new_parent)
         waves = jnp.ones((), jnp.int32)
     elif variant == "lock":
@@ -294,4 +581,77 @@ def boruvka_round(state: BoruvkaState, scan_src, scan_dst, scan_rank,
     done = ~jnp.any(has)
     return BoruvkaState(new_parent, mst_mask, covered,
                         state.num_rounds + jnp.where(done, 0, 1),
-                        state.num_waves + jnp.where(done, 0, waves), done)
+                        state.num_waves + jnp.where(done, 0, waves), done,
+                        committed)
+
+
+def boruvka_epoch(state: BoruvkaState, frontier: Frontier,
+                  full_src, full_dst, order, *, round_fn,
+                  sizes: Tuple[int, ...], compaction: int,
+                  use_kernel: bool = False
+                  ) -> Tuple[BoruvkaState, Frontier]:
+    """One *bucket epoch*: rounds at a fixed pow2 prefix, then one pack.
+
+    ``round_fn(state, scan_src, scan_dst, scan_rank, full_src, full_dst,
+    order)`` is the round body — ``boruvka_round`` with its static kwargs
+    bound for the single engine, its ``jax.vmap`` for the batched engine.
+
+    The ``lax.switch`` over the static ``sizes`` picks the bucket covering
+    the current live count; the chosen branch runs an inner ``while_loop``
+    of rounds over that statically-sliced prefix until either the forest
+    completes or — checked every ``compaction`` rounds — the live count
+    has dropped to a smaller bucket.  The exit check reads the round's own
+    covered update (a coverage snapshot fresh as of round start, so it
+    costs nothing); the only extra coverage work is ONE refresh under the
+    post-hook parent at pack time, so the pack sees the self edges the
+    closing epoch's merges created.  The pack runs exactly once per epoch,
+    bounded to the old bucket.  Hoisting the bucket switch, the refresh,
+    and the pack out of the round loop keeps the per-round cost at a pure
+    O(bucket) scan: a per-round conditional pack stages identity-branch
+    buffers every round, and fully unrolling the epochs (no switch) makes
+    every level pay its pack — both measured dead ends, recorded in
+    EXPERIMENTS.md §Compaction.
+
+    Slicing is on the *last* axis, so the same helper serves the batched
+    engine's (B, E_pad) layout; every cross-lane decision (bucket index,
+    cadence, exit) reduces with ``jnp.max`` OUTSIDE any vmap — a vmapped
+    switch would execute every branch and erase the saving.
+    """
+    idx = scan_bucket_index(sizes, jnp.max(frontier.live))
+
+    def branch(i, sz):
+        def run(ops):
+            st, f = ops
+            src = f.src[..., :sz]
+            dst = f.dst[..., :sz]
+            rank = f.rank[..., :sz]
+
+            def inner_cond(c):
+                st_i, live = c
+                shrinkable = scan_bucket_index(sizes, jnp.max(live)) < i
+                cadence = (jnp.max(st_i.num_rounds) % compaction) == 0
+                return ~jnp.all(st_i.done) & ~(cadence & shrinkable)
+
+            def inner_body(c):
+                st_i, _ = c
+                st_i = round_fn(st_i, src, dst, rank,
+                                full_src, full_dst, order)
+                live = jnp.sum(~st_i.covered, axis=-1).astype(jnp.int32)
+                return st_i, live
+
+            sub0 = st._replace(covered=st.covered[..., :sz])
+            sub, _ = jax.lax.while_loop(inner_cond, inner_body,
+                                        (sub0, f.live))
+            # Pack-time coverage refresh: one pair of prefix-width gathers
+            # under the post-hook parent (the in-round covered bit lags
+            # hooking by one round).
+            cov_sz = sub.covered | (
+                jnp.take_along_axis(sub.parent, src, axis=-1)
+                == jnp.take_along_axis(sub.parent, dst, axis=-1))
+            covered = st.covered.at[..., :sz].set(cov_sz)
+            f2, covered = _pack_prefix(f, covered, sz, use_kernel)
+            return sub._replace(covered=covered), f2
+        return run
+
+    return jax.lax.switch(idx, [branch(i, sz) for i, sz in enumerate(sizes)],
+                          (state, frontier))

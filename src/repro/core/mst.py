@@ -45,16 +45,23 @@ import jax.numpy as jnp
 from repro.core.types import Graph, MSTResult, INT_SENTINEL
 from repro.core.engine import (  # noqa: F401  (re-exported API)
     BoruvkaState,
+    Frontier,
+    boruvka_epoch,
     boruvka_round,
     candidate_min_edges,
     commit_edges,
+    compact_frontier,
     finish_result,
     hook_cas,
     hook_lock_waves,
+    init_frontier,
     init_state,
+    materialize_commits,
     partner_components,
     rank_edges,
+    rank_edges_host,
     resolve_candidates,
+    scan_bucket_sizes,
 )
 
 # Backward-compatible aliases (pre-engine-extraction names).
@@ -66,15 +73,17 @@ _finish = finish_result
 # Single-device engines.
 # ---------------------------------------------------------------------------
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("num_nodes", "variant", "track_covered",
-                     "max_lock_waves"))
 def minimum_spanning_forest(graph: Graph, *, num_nodes: int,
                             variant: str = "cas",
                             track_covered: bool = True,
-                            max_lock_waves: int = 16) -> MSTResult:
+                            max_lock_waves: int = 16,
+                            compaction: int = 0,
+                            compaction_kernel: bool = False) -> MSTResult:
     """Full Borůvka MSF as a single jitted ``lax.while_loop``.
+
+    The (weight, edge_id) rank is computed host-side (numpy stable
+    argsort — the XLA CPU sort is several times slower and was the largest
+    fixed per-solve cost); everything after is one jitted call.
 
     Args:
       graph: edge-list graph (static shapes).
@@ -84,33 +93,109 @@ def minimum_spanning_forest(graph: Graph, *, num_nodes: int,
       track_covered: keep the paper's ``covered`` bit so later rounds mask
                finished edges (§2.1 optimization); False = unoptimized
                baseline that re-derives everything per round.
+      compaction: 0 = off; k > 0 = every k rounds, stable-partition the
+               live edges to a prefix and scan only a pow2-bucketed prefix
+               from then on (frontier compaction, DESIGN.md §2b).  The
+               candidate/hook/commit decisions are bit-identical to the
+               uncompacted engine — only the scan cost changes.
+      compaction_kernel: route the live-prefix permutation through the
+               Pallas stream-compaction kernel (``kernels/compact_edges``)
+               instead of the jnp cumsum path.
     """
-    e = graph.num_edges
-    rank, order = rank_edges(graph.weight)
-    init = init_state(num_nodes, e, e)
-
-    def cond(s):
-        return ~s.done
-
-    def body(s):
-        return boruvka_round(s, graph.src, graph.dst, rank,
-                             graph.src, graph.dst, order,
-                             variant=variant, track_covered=track_covered,
-                             num_nodes=num_nodes,
-                             max_lock_waves=max_lock_waves)
-
-    final = jax.lax.while_loop(cond, body, init)
-    return finish_result(graph, final, final.num_rounds)
+    rank, order = rank_edges_host(graph.weight)
+    return _msf_jit(graph, rank, order, num_nodes=num_nodes,
+                    variant=variant, track_covered=track_covered,
+                    max_lock_waves=max_lock_waves, compaction=compaction,
+                    compaction_kernel=compaction_kernel)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("num_nodes", "variant", "track_covered"))
+    jax.jit,
+    static_argnames=("num_nodes", "variant", "track_covered",
+                     "max_lock_waves", "compaction", "compaction_kernel"))
+def _msf_jit(graph: Graph, rank, order, *, num_nodes: int, variant: str,
+             track_covered: bool, max_lock_waves: int, compaction: int,
+             compaction_kernel: bool) -> MSTResult:
+    e = graph.num_edges
+    init = init_state(num_nodes, e, e, commit_slots=variant == "cas")
+
+    if not compaction:
+        def cond(s):
+            return ~s.done
+
+        def body(s):
+            return boruvka_round(s, graph.src, graph.dst, rank,
+                                 graph.src, graph.dst, order,
+                                 variant=variant,
+                                 track_covered=track_covered,
+                                 num_nodes=num_nodes,
+                                 max_lock_waves=max_lock_waves)
+
+        final = materialize_commits(jax.lax.while_loop(cond, body, init))
+        return finish_result(graph, final, final.num_rounds)
+
+    if not track_covered:
+        raise ValueError("compaction requires track_covered=True "
+                         "(the covered bit IS the live/dead partition key)")
+    sizes = scan_bucket_sizes(e)
+    round_fn = functools.partial(boruvka_round, variant=variant,
+                                 track_covered=True, num_nodes=num_nodes,
+                                 max_lock_waves=max_lock_waves)
+
+    def cond(carry):
+        return ~carry[0].done
+
+    def body(carry):
+        s, f = carry
+        return boruvka_epoch(s, f, graph.src, graph.dst, order,
+                             round_fn=round_fn, sizes=sizes,
+                             compaction=compaction,
+                             use_kernel=compaction_kernel)
+
+    final, _ = jax.lax.while_loop(
+        cond, body, (init, init_frontier(graph.src, graph.dst, rank)))
+    final = materialize_commits(final)
+    return finish_result(graph, final, final.num_rounds)
+
+
+# The previous round's state buffers are dead the moment the next round
+# returns — donating them lets XLA update parent/mask/covered in place
+# across the host-side round loop (the in-jit engines get the same reuse
+# for free from the while_loop carry).
+@functools.partial(
+    jax.jit, donate_argnums=(0,),
+    static_argnames=("num_nodes", "variant", "track_covered"))
 def _one_round_jit(state, scan_src, scan_dst, scan_rank, full_src, full_dst,
                    order, *, num_nodes, variant, track_covered):
     return boruvka_round(state, scan_src, scan_dst, scan_rank,
                          full_src, full_dst, order, variant=variant,
                          track_covered=track_covered, num_nodes=num_nodes)
 
+
+def live_edge_trace(graph: Graph, num_nodes: int, *,
+                    variant: str = "cas") -> list:
+    """Per-round live (non-covered) edge counts — the frontier-decay signal.
+
+    Host-side instrumented round loop (full-width scans; only the counts
+    are read out).  The counts are what a compacting engine's bucketed
+    prefix tracks, so this is both the EXPERIMENTS.md decay table and the
+    monotonicity oracle for the hypothesis property test.
+    """
+    rank, order = rank_edges_host(graph.weight)
+    e = graph.num_edges
+    state = init_state(num_nodes, e, e)
+    counts = []
+    while True:
+        state = _one_round_jit(state, graph.src, graph.dst, rank,
+                               graph.src, graph.dst, order,
+                               num_nodes=num_nodes, variant=variant,
+                               track_covered=True)
+        if bool(state.done):
+            break
+        counts.append(int(jnp.sum(~state.covered)))
+        if len(counts) > num_nodes:
+            raise RuntimeError("Borůvka failed to converge")
+    return counts
 
 
 def mst_unoptimized(graph: Graph, num_nodes: int,
@@ -129,7 +214,7 @@ def mst_optimized(graph: Graph, num_nodes: int,
 
 def _python_loop(graph: Graph, num_nodes: int, *, variant: str,
                  compact: bool) -> MSTResult:
-    rank, order = rank_edges(graph.weight)
+    rank, order = rank_edges_host(graph.weight)
     e_full = graph.num_edges
     state = init_state(num_nodes, e_full, e_full)
     scan_src, scan_dst, scan_rank = graph.src, graph.dst, rank

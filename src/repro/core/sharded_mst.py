@@ -43,10 +43,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.types import Graph, MSTResult, INT_SENTINEL
 from repro.core.engine import (
     BoruvkaState,
-    candidate_min_edges,
+    Frontier,
     hook_cas,
     hook_lock_waves,
+    make_scan_branches,
+    maybe_pack_frontier,
     partner_components,
+    scan_bucket_index,
+    scan_bucket_sizes,
     shard_map_compat,
 )
 from repro.core.union_find import pointer_jump, count_components
@@ -76,7 +80,8 @@ def shard_topology(part: EdgePartition, mesh: Mesh, axis: str = "data"):
 def sharded_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
                 axis: str = "data", variant: str = "cas",
                 max_lock_waves: int = 16,
-                partition: Optional[EdgePartition] = None) -> MSTResult:
+                partition: Optional[EdgePartition] = None,
+                compaction: int = 0) -> MSTResult:
     """Minimum spanning forest with topology sharded over ``mesh[axis]``.
 
     Args:
@@ -87,6 +92,13 @@ def sharded_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
       variant: "cas" or "lock" — the paper's hooking schemes.
       partition: optional precomputed ``partition_edges(graph, n_shards)``
         (e.g. when the caller already asserted its sharding layout).
+      compaction: 0 = off; k > 0 = shard-local frontier compaction every k
+        rounds.  Each device stable-partitions its own shard's live edges
+        (the global edge id rides along in the frontier so owner-decode and
+        the contiguous-block commit survive the permutation) and both
+        shard-local scans — candidate search AND owner-decode — run over a
+        pow2-bucketed prefix, so per-device scan cost drops to
+        O(E_live/S).  The (V,)-sized collectives are untouched.
 
     Returns replicated outputs identical to the single-device engine.
     """
@@ -125,40 +137,70 @@ def sharded_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
             num_rounds=jnp.zeros((), jnp.int32),
             num_waves=jnp.zeros((), jnp.int32),
             done=jnp.zeros((), bool),
+            # CAS commit slots hold GLOBAL edge ids; INT_SENTINEL is the
+            # null (outside every shard's contiguous block, unlike E,
+            # which pads into the LAST shard's range).
+            committed=(jnp.full((num_nodes,), INT_SENTINEL, jnp.int32)
+                       if variant == "cas" else None),
         )
+        # The frontier carries the global edge id alongside src/dst/rank:
+        # scan slots stop being identified by position once compaction
+        # permutes them, and owner-decode + the contiguous-block commit
+        # both speak global ids.
+        init_f = Frontier(s_src, s_dst, s_rank,
+                          jnp.full((), e_shard, jnp.int32), s_gid)
+        sizes = scan_bucket_sizes(e_shard) if compaction else (e_shard,)
 
-        def cond(s):
-            return ~s.done
+        def decode_branch(sz):
+            def decode(ops):
+                # Owner-decode over the same prefix: the cheap gathers are
+                # recomputed (branch outputs must be shape-identical, so a
+                # prefix-sized key can't cross the pmin between switches).
+                parent, covered, f, best = ops
+                cu_e = parent[f.src[:sz]]
+                cv_e = parent[f.dst[:sz]]
+                key = jnp.where(covered[:sz], INT_SENTINEL, f.rank[:sz])
+                eidx = jnp.arange(sz, dtype=jnp.int32)
+                live = key < INT_SENTINEL
+                win_u = jnp.where(live & (key == best[cu_e]), eidx,
+                                  INT_SENTINEL)
+                win_v = jnp.where(live & (key == best[cv_e]), eidx,
+                                  INT_SENTINEL)
+                return jnp.minimum(
+                    jax.ops.segment_min(win_u, cu_e,
+                                        num_segments=num_nodes),
+                    jax.ops.segment_min(win_v, cv_e,
+                                        num_segments=num_nodes))
+            return decode
 
-        def body(state):
-            cu_e = state.parent[s_src]
-            cv_e = state.parent[s_dst]
-            self_edge = cu_e == cv_e
-            new_covered = state.covered | self_edge
-            key = jnp.where(new_covered, INT_SENTINEL, s_rank)
+        scan_branches = make_scan_branches(sizes, num_nodes)
+        decode_branches = [decode_branch(sz) for sz in sizes]
+
+        def cond(carry):
+            return ~carry[0].done
+
+        def body(carry):
+            state, f = carry
+            idx = scan_bucket_index(sizes, f.live)
             # Shard-local candidate search + (V,) min-all-reduce: identical
             # collective shape to distributed_msf.
-            local_best = candidate_min_edges(key, cu_e, cv_e, num_nodes)
+            new_covered, local_best = jax.lax.switch(
+                idx, scan_branches, (state.parent, state.covered, f))
             best = jax.lax.pmin(local_best, axis)
             has = best < INT_SENTINEL
 
             # Owner-decode: the shard holding the rank-winning edge (ranks
             # are globally unique; each edge lives on ONE shard) recovers
-            # its local index by segment-min over slots that match best[].
-            eidx = jnp.arange(e_shard, dtype=jnp.int32)
-            live = key < INT_SENTINEL
-            win_u = jnp.where(live & (key == best[cu_e]), eidx, INT_SENTINEL)
-            win_v = jnp.where(live & (key == best[cv_e]), eidx, INT_SENTINEL)
-            loc = jnp.minimum(
-                jax.ops.segment_min(win_u, cu_e, num_segments=num_nodes),
-                jax.ops.segment_min(win_v, cv_e, num_segments=num_nodes))
+            # its local slot by segment-min over slots that match best[].
+            loc = jax.lax.switch(
+                idx, decode_branches, (state.parent, new_covered, f, best))
             owned = loc < INT_SENTINEL
             le = jnp.clip(loc, 0, e_shard - 1)
             # (3, V) payload pmin: the second, still (V,)-sized collective
             # broadcasting (edge_id, src, dst) from the owner to everyone.
             payload = jnp.where(
                 owned[None, :],
-                jnp.stack([s_gid[le], s_src[le], s_dst[le]]),
+                jnp.stack([f.edge_id[le], f.src[le], f.dst[le]]),
                 INT_SENTINEL)
             cand_edge, end_u, end_v = jax.lax.pmin(payload, axis)
             cand_edge = jnp.where(has, cand_edge, 0)
@@ -166,10 +208,14 @@ def sharded_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
             end_v = jnp.where(has, end_v, 0)
 
             other, iota = partner_components(state.parent, has, end_u, end_v)
+            committed = state.committed
             if variant == "cas":
                 new_parent, commit = hook_cas(state.parent, has, cand_edge,
                                               other, iota)
-                mst_mask = local_commit(state.mst_mask, cand_edge, commit)
+                # Write-once (V,) commit slots of GLOBAL ids; the local
+                # mask is materialized once after the loop.
+                mst_mask = state.mst_mask
+                committed = jnp.where(commit, cand_edge, committed)
                 new_parent = pointer_jump(new_parent)
                 waves = jnp.ones((), jnp.int32)
             else:
@@ -178,12 +224,25 @@ def sharded_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
                     end_u, end_v, max_waves=max_lock_waves,
                     commit_fn=local_commit)
             done = ~jnp.any(has)
-            return BoruvkaState(
+            state = BoruvkaState(
                 new_parent, mst_mask, new_covered,
                 state.num_rounds + jnp.where(done, 0, 1),
-                state.num_waves + jnp.where(done, 0, waves), done)
+                state.num_waves + jnp.where(done, 0, waves), done,
+                committed)
+            if compaction:
+                # Shard-local gated pack; devices may diverge on the gate
+                # (no collectives inside).
+                state, f = maybe_pack_frontier(state, f, sizes, compaction)
+            return state, f
 
-        final = jax.lax.while_loop(cond, body, init)
+        final, _ = jax.lax.while_loop(cond, body, (init, init_f))
+        if final.committed is not None:
+            # One scatter per solve: every slot holding a global id inside
+            # this shard's contiguous block lands in the local mask
+            # (INT_SENTINEL nulls fall outside every block and drop).
+            final = final._replace(mst_mask=local_commit(
+                final.mst_mask, final.committed,
+                jnp.ones((num_nodes,), bool)))
         ncomp = count_components(final.parent)
         return (final.parent, final.mst_mask, final.num_rounds,
                 final.num_waves, ncomp)

@@ -29,7 +29,7 @@ from typing import NamedTuple, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import rank_edges
+from repro.core.engine import rank_edges_host
 from repro.core.types import Graph, INT_SENTINEL
 
 
@@ -75,7 +75,7 @@ def partition_edges(graph: Graph, num_shards: int) -> EdgePartition:
         raise ValueError(f"num_shards must be >= 1, got {num_shards}")
     e = graph.num_edges
     e_pad = -(-max(e, 1) // num_shards) * num_shards
-    rank, _ = rank_edges(graph.weight)
+    rank, _ = rank_edges_host(graph.weight)
 
     def pad(x, fill):
         out = np.full((e_pad,), fill, np.int32)

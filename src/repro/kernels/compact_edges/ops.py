@@ -1,0 +1,40 @@
+"""Public wrapper: padding, block selection, interpret switch.
+
+``interpret`` defaults to auto-detection, like the other kernel packages:
+compiled on TPU backends, interpreter mode everywhere else.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compact_edges.kernel import compact_edges_pallas
+
+
+def _resolve_interpret(interpret) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_edges", "interpret"))
+def compact_edges(covered, *, block_edges: int = 4096,
+                  interpret: bool | None = None):
+    """covered: (E,) bool -> (perm (E,) int32, live () int32).
+
+    Stable live-prefix permutation of the lane ids (see ref.py for the
+    exact contract).  Padding with covered=1 is safe: pad lanes carry the
+    largest ids, so stability parks them in the last slots and ``perm[:E]``
+    stays a permutation of the real lanes.
+    """
+    e = covered.shape[0]
+    block = min(block_edges, max(256, e))
+    cov = covered.astype(jnp.int32)
+    pad = (-e) % block
+    if pad:
+        cov = jnp.concatenate([cov, jnp.ones((pad,), jnp.int32)])
+    perm, counts = compact_edges_pallas(
+        cov, block_edges=block, interpret=_resolve_interpret(interpret))
+    return perm[:e], counts[0]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the stream-compaction kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def compact_edges_ref(covered):
+    """covered: (E,) bool -> (perm (E,) int32, live () int32).
+
+    Stable partition on the covered bit: live lane ids ascending in the
+    prefix, covered lane ids ascending after — a stable sort on a binary
+    key, realized as two cumsums and one scatter.
+    """
+    e = covered.shape[0]
+    covered = covered.astype(bool)
+    lane = jnp.arange(e, dtype=jnp.int32)
+    live = jnp.sum(~covered).astype(jnp.int32)
+    pos = jnp.where(covered,
+                    live + jnp.cumsum(covered) - 1,
+                    jnp.cumsum(~covered) - 1).astype(jnp.int32)
+    perm = jnp.zeros((e,), jnp.int32).at[pos].set(lane)
+    return perm, live

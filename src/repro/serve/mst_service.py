@@ -79,15 +79,20 @@ class MSTService:
       max_batch: lane cap per engine call; a bucket with more members
         overflows into multiple solves (bounds padded-batch memory).
       cache_size: LRU capacity in *results*; 0 disables caching.
+      compaction: frontier-compaction cadence in rounds (0 = off), passed
+        straight through to the engine — serving results are identical
+        either way (the conformance surface), only scan cost changes.
     """
 
     def __init__(self, *, variant: str = "cas", engine: str = "batched",
-                 max_batch: int = 64, cache_size: int = 256):
+                 max_batch: int = 64, cache_size: int = 256,
+                 compaction: int = 0):
         if engine not in ENGINES:
             raise ValueError(
                 f"unknown engine {engine!r}; known: {sorted(ENGINES)}")
         self.variant = variant
         self.engine = engine
+        self.compaction = int(compaction)
         self.max_batch = int(max_batch)
         self.cache_size = int(cache_size)
         self.stats = ServiceStats()
@@ -184,13 +189,15 @@ class MSTService:
                     + len(b.indices))
                 self.stats.engine_solves += len(b.indices)
                 results.append(batched_msf(b.graph, num_nodes=b.padded_nodes,
-                                           variant=self.variant))
+                                           variant=self.variant,
+                                           compaction=self.compaction))
             return unpack_results(buckets, results)
         # Non-batched registry engines: one dispatch per request.
         out = []
         for _, _, g, v in solve_list:
             self.stats.engine_solves += 1
-            r = solve_mst(g, v, engine=self.engine, variant=self.variant)
+            r = solve_mst(g, v, engine=self.engine, variant=self.variant,
+                          compaction=self.compaction)
             out.append((np.asarray(r.mst_mask), np.asarray(r.parent),
                         float(r.total_weight), int(r.num_components),
                         int(r.num_rounds)))

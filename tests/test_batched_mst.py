@@ -50,6 +50,38 @@ def test_batched_mixed_sizes_match_oracle_per_lane(variant):
         assert mask.sum() == v - 1
 
 
+@pytest.mark.parametrize("compaction", [1, 2])
+def test_batched_compaction_mixed_lanes_match_oracle(compaction):
+    """Frontier compaction with PER-LANE live counts: mixed sizes, pad
+    lanes (sentinel self-loops) and finished lanes all compact to empty
+    prefixes while the batch scans at its liveliest lane's bucket — every
+    lane must stay oracle-exact."""
+    reqs = [generate_graph(n, d, seed=s) for n, d, s in MIXED]
+    buckets = pack_graphs(reqs)
+    results = [batched_msf(b.graph, num_nodes=b.padded_nodes,
+                           compaction=compaction) for b in buckets]
+    per = unpack_results(buckets, results)
+    for i, (g, v) in enumerate(reqs):
+        om, ow, _ = _oracle(g, v)
+        mask, parent, tw, nc, _ = per[i]
+        assert (mask == om).all()
+        assert np.isclose(tw, ow, rtol=1e-5)
+
+
+def test_mst_service_compaction_passthrough():
+    """A compacting service must serve bit-identical responses (the cache
+    and dedup layers sit above the engine, so this pins the whole path)."""
+    svc0 = MSTService(cache_size=0)
+    svc1 = MSTService(cache_size=0, compaction=1)
+    for n, d, s in MIXED[:4]:
+        g, v = generate_graph(n, d, seed=s)
+        r0 = svc0.solve(g, v)
+        r1 = svc1.solve(g, v)
+        assert (r0.mst_mask == r1.mst_mask).all()
+        assert r0.num_rounds == r1.num_rounds
+        assert r0.total_weight == r1.total_weight
+
+
 @pytest.mark.parametrize("variant", ["cas", "lock"])
 def test_batched_duplicate_weights(variant):
     """Ties everywhere: the (weight, edge_id) rank must keep lanes exact."""

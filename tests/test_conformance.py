@@ -105,6 +105,52 @@ def test_conformance_matrix(engine, variant, family, mesh):
     assert_matches_oracle(r, graph, v)
 
 
+# Engines with an in-engine frontier-compaction path (the sequential
+# baselines either never compact or always do, by definition).
+COMPACTION_ENGINES = ("single", "batched", "distributed", "sharded")
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("engine", COMPACTION_ENGINES)
+@pytest.mark.parametrize("variant", VARIANTS)
+@pytest.mark.parametrize("compaction", (1, 2))
+def test_compaction_conformance(engine, variant, family, compaction, mesh):
+    """Frontier compaction must be invisible in the results: exact Kruskal
+    edge-set identity at every cadence (off is the matrix above)."""
+    graph, v = FAMILIES[family]()
+    r = solve_mst(graph, v, engine=engine, variant=variant,
+                  compaction=compaction,
+                  mesh=mesh if ENGINES[engine].needs_mesh else None)
+    assert_matches_oracle(r, graph, v)
+
+
+@pytest.mark.parametrize("engine", COMPACTION_ENGINES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_compaction_preserves_round_structure(engine, variant, mesh):
+    """Compaction only drops dead scan lanes, so the hooking decisions —
+    and with them rounds and lock waves — must be identical to the
+    uncompacted engine, not merely the final mask."""
+    graph, v = generate_graph(220, 5, seed=11)
+    m = mesh if ENGINES[engine].needs_mesh else None
+    r0 = solve_mst(graph, v, engine=engine, variant=variant, mesh=m)
+    r1 = solve_mst(graph, v, engine=engine, variant=variant, mesh=m,
+                   compaction=1)
+    assert (np.asarray(r0.mst_mask) == np.asarray(r1.mst_mask)).all()
+    assert int(r0.num_rounds) == int(r1.num_rounds)
+    assert int(r0.num_waves) == int(r1.num_waves)
+
+
+def test_compaction_kernel_path_matches_oracle():
+    """The Pallas stream-compaction permutation plugs into the single
+    engine and must leave the solve oracle-identical."""
+    from repro.core.mst import minimum_spanning_forest
+
+    graph, v = generate_graph(300, 5, seed=3)
+    r = minimum_spanning_forest(graph, num_nodes=v, compaction=1,
+                                compaction_kernel=True)
+    assert_matches_oracle(r, graph, v)
+
+
 def test_registry_covers_matrix():
     """The matrix must not silently drop an engine when the registry grows:
     every registered engine appears in ENGINE_NAMES."""

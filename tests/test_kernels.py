@@ -15,6 +15,8 @@ from repro.kernels.segment_min_edges.ops import (batched_segment_min_edges,
 from repro.kernels.segment_min_edges.ref import (
     batched_segment_min_edges_ref, segment_min_edges_ref,
     sharded_segment_min_edges_ref)
+from repro.kernels.compact_edges.ops import compact_edges
+from repro.kernels.compact_edges.ref import compact_edges_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.fm_interaction.ops import fm_interaction_kernel
@@ -33,6 +35,22 @@ def test_segment_min_sweep(v, e, block):
     out = segment_min_edges(keys, cu, cv, num_nodes=v, block_edges=block)
     ref = segment_min_edges_ref(keys, cu, cv, v)
     assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+@pytest.mark.parametrize("e,block,frac", [(96, 32, 0.3), (512, 128, 0.7),
+                                          (1000, 256, 0.5), (8, 256, 0.0),
+                                          (300, 64, 1.0)])
+def test_compact_edges_sweep(e, block, frac):
+    """Stream-compaction kernel == jnp oracle: exact permutation + live
+    count, across block splits, padding remainders, and covered densities
+    (0.0 = nothing covered, 1.0 = everything)."""
+    rng = np.random.default_rng(e + block)
+    covered = jnp.asarray(rng.random(e) < frac)
+    perm, live = compact_edges(covered, block_edges=block)
+    rperm, rlive = compact_edges_ref(covered)
+    np.testing.assert_array_equal(np.asarray(perm), np.asarray(rperm))
+    assert int(live) == int(rlive)
+    assert sorted(np.asarray(perm).tolist()) == list(range(e))
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -27,6 +27,52 @@ from repro.models.recsys import fm_interaction
 from repro.train import data as data_lib
 
 
+@given(st.lists(st.booleans(), min_size=1, max_size=128),
+       st.integers(0, 10_000))
+@settings(max_examples=40)
+def test_property_live_prefix_permutation(covered_bits, seed):
+    """The frontier-compaction permutation really is a permutation, for ANY
+    covered mask: live lane ids first (original order preserved — a stable
+    sort on the covered bit), covered lane ids after, live count exact.
+    The Pallas stream-compaction kernel must agree bit-for-bit."""
+    from repro.core.engine import live_prefix_permutation
+    from repro.kernels.compact_edges.ops import compact_edges
+
+    covered = jnp.asarray(np.asarray(covered_bits, bool))
+    e = covered.shape[0]
+    perm, live = live_prefix_permutation(covered)
+    perm = np.asarray(perm)
+    cov = np.asarray(covered)
+    assert sorted(perm.tolist()) == list(range(e))
+    assert int(live) == int((~cov).sum())
+    assert not cov[perm[:int(live)]].any()
+    assert cov[perm[int(live):]].all()
+    # Stability: both partitions keep their original relative order.
+    assert (np.diff(perm[:int(live)]) > 0).all()
+    assert (np.diff(perm[int(live):]) > 0).all()
+    kperm, klive = compact_edges(covered)
+    np.testing.assert_array_equal(np.asarray(kperm), perm)
+    assert int(klive) == int(live)
+
+
+@given(st.integers(12, 100), st.integers(2, 6), st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_property_live_counts_monotone(n, deg, seed):
+    """Per-round live-edge counts never increase (covered bits are sticky),
+    and compacted solves agree exactly with the uncompacted engine."""
+    from repro.core.mst import live_edge_trace, minimum_spanning_forest
+
+    g, v = generate_graph(n, deg, seed=seed)
+    trace = live_edge_trace(g, v)
+    assert all(a >= b for a, b in zip(trace, trace[1:]))
+    assert trace[0] <= g.num_edges
+    r0 = minimum_spanning_forest(g, num_nodes=v)
+    r1 = minimum_spanning_forest(g, num_nodes=v, compaction=1)
+    np.testing.assert_array_equal(np.asarray(r0.mst_mask),
+                                  np.asarray(r1.mst_mask))
+    assert int(r0.num_rounds) == int(r1.num_rounds)
+
+
 @given(st.integers(10, 120), st.integers(2, 6), st.integers(0, 10_000))
 @settings(max_examples=20)
 def test_property_spanning_tree(n, deg, seed):
