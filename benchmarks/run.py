@@ -83,6 +83,15 @@ def main() -> None:
     # Batched multi-graph engine: serving throughput at batch {1, 8, 64}.
     from benchmarks import batched_bench
     rows += batched_bench.batched_throughput_rows(repeats=args.repeats)
+    # Euclidean-MST clustering pipeline vs brute-force all-pairs (paired).
+    # Smoke runs skip it: the CI bench-regression job runs the standalone
+    # `benchmarks.cluster_bench --smoke --json` step, which merges its keys
+    # into BENCH_mst.json — including it here too would time the same cell
+    # twice per CI run.
+    if not args.smoke:
+        from benchmarks import cluster_bench
+        rows += cluster_bench.cluster_rows(cluster_bench.DEFAULT_SHAPES,
+                                           repeats=max(args.repeats, 5))
     if not (args.no_weak or args.smoke):
         # Sharded-engine weak scaling (forced 8-host-device subprocess):
         # per-device topology bytes land in BENCH_mst.json's derived column.

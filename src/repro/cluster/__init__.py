@@ -1,0 +1,39 @@
+"""Euclidean-MST clustering subsystem (DESIGN.md §3a).
+
+End-to-end single-linkage clustering of point clouds on top of the MST
+engine registry:
+
+    points (n, dim)
+      -> kernels/knn_graph     blocked pairwise distances, top-k per row
+      -> cluster/emst          canonical candidate edges -> any ENGINES
+                               entry via solve_mst_many, k-doubling +
+                               exact-bridge escalation until spanning
+      -> cluster/linkage       single-linkage dendrogram (weight-sorted
+                               union-find), cut_k / cut_distance labels
+
+``serve/mst_service.MSTService.cluster`` serves the same pipeline through
+mstserve's micro-batching queue and content-hash LRU caches;
+``cluster/reference.py`` is the brute-force all-pairs oracle the
+conformance matrix (``tests/test_cluster.py``) pins every engine cell to.
+"""
+from repro.cluster.emst import (EMSTResult, candidate_edges, euclidean_mst,
+                                euclidean_mst_many)
+from repro.cluster.linkage import (Dendrogram, canonical_labels,
+                                   cut_distance, cut_k, single_linkage)
+from repro.cluster.reference import (brute_force_dendrogram,
+                                     brute_force_emst, brute_force_labels)
+
+__all__ = [
+    "EMSTResult",
+    "euclidean_mst",
+    "euclidean_mst_many",
+    "candidate_edges",
+    "Dendrogram",
+    "single_linkage",
+    "cut_k",
+    "cut_distance",
+    "canonical_labels",
+    "brute_force_emst",
+    "brute_force_dendrogram",
+    "brute_force_labels",
+]

@@ -1,0 +1,221 @@
+"""Euclidean MST via kNN candidate graphs + any registry engine.
+
+The pipeline (DESIGN.md §3a): ``knn_graph`` Pallas kernel builds a sparse
+candidate edge list from the point cloud, any registered Borůvka engine
+solves it through ``solve_mst_many``, and if the candidate forest does not
+span, the request *escalates* — first by k-doubling (recompute the kNN
+graph with twice the neighbors), then, once doubling is exhausted, by
+appending each component's exact nearest cross-component pair (a Borůvka
+step on the complete graph, so components at least halve per fallback
+round).  That is the standard kNN-EMST completion loop: spanning is
+guaranteed; the result is the exact EMST whenever the candidate set
+contains it (always true once the fallback has run the graph connected,
+and in practice at the default k for clustered data — measured in
+EXPERIMENTS.md §Clustering).
+
+Determinism / conformance: candidate edges are canonicalized host-side —
+endpoints flipped to ``u < v``, sorted by ``(weight, u, v)``, exact
+duplicates dropped — so the engines' ``(weight, edge_id)`` rank *is* the
+``(weight, u, v)`` total order, under which the MST of the candidate set is
+unique.  Every engine therefore returns the identical edge set, and the
+single-linkage dendrogram downstream is engine-invariant even under
+duplicate points (all-zero-distance ties).
+
+Weights: candidate graphs carry *squared* distances (straight off the
+kernel, no sqrt rounding in the rank); ``EMSTResult.distance`` converts to
+Euclidean lengths for the dendrogram heights.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import solve_mst_many
+from repro.core.types import Graph
+from repro.kernels.knn_graph.ops import knn_graph
+from repro.kernels.knn_graph.ref import pairwise_sq_dists
+
+DEFAULT_K = 8
+
+
+class EMSTResult(NamedTuple):
+    """One solved Euclidean MST (a forest only if the cloud has < 2 points).
+
+    Attributes:
+      src, dst:   (M,) int32 edge endpoints, ``src < dst`` canonical.
+      distance:   (M,) float32 Euclidean edge lengths (sqrt of the solved
+                  squared-distance weights).
+      num_points: n.
+      num_components: trees in the forest (1 once escalation spans).
+      knn_k:      final neighbor count that produced the spanning graph.
+      escalations: k-doubling rounds taken (0 = first k sufficed).
+      bridges:    exact cross-component edges appended by the fallback.
+    """
+
+    src: np.ndarray
+    dst: np.ndarray
+    distance: np.ndarray
+    num_points: int
+    num_components: int
+    knn_k: int
+    escalations: int
+    bridges: int
+
+
+def candidate_edges(points: np.ndarray, k: int,
+                    extra: Optional[Tuple[np.ndarray, ...]] = None):
+    """kNN candidate edge list, canonicalized.
+
+    Returns ``(u, v, w)`` numpy arrays with ``u < v``, sorted by
+    ``(w, u, v)``, duplicates removed; ``w`` is the squared distance.
+    ``extra`` appends fallback bridge edges before canonicalization.
+    """
+    idx, sqd = knn_graph(jnp.asarray(points), k=k)
+    n = points.shape[0]
+    src = np.repeat(np.arange(n, dtype=np.int32), k)
+    dst = np.asarray(idx, np.int32).reshape(-1)
+    w = np.asarray(sqd, np.float32).reshape(-1)
+    if extra is not None:
+        src = np.concatenate([src, extra[0].astype(np.int32)])
+        dst = np.concatenate([dst, extra[1].astype(np.int32)])
+        w = np.concatenate([w, extra[2].astype(np.float32)])
+    u = np.minimum(src, dst)
+    v = np.maximum(src, dst)
+    order = np.lexsort((v, u, w))
+    u, v, w = u[order], v[order], w[order]
+    # The symmetric pair (j->i) of an (i->j) edge carries the bit-identical
+    # weight, so duplicates are adjacent after the sort.
+    keep = np.ones(u.shape[0], bool)
+    keep[1:] = (u[1:] != u[:-1]) | (v[1:] != v[:-1])
+    return u[keep], v[keep], w[keep]
+
+
+_sq_dists_jit = jax.jit(pairwise_sq_dists)
+
+
+def nearest_cross_component_edges(points: np.ndarray, parent: np.ndarray):
+    """Each component's exact minimum outgoing edge (one Borůvka step on
+    the complete graph) — the escalation fallback.
+
+    O(n^2) host work, reached only when k-doubling is exhausted.
+    Distances come from the same jitted f32 expression the kernel tiles
+    and the brute-force reference use (bit-identical values), and ties
+    break on the smallest canonical ``(u, v)`` pair among the min-weight
+    cross edges — the ``(weight, u, v)`` total order — so the appended
+    bridges are exactly the EMST's cut edges.
+    """
+    comp = np.asarray(parent)
+    # np.array copies: the device buffer view is read-only.
+    sq = np.array(_sq_dists_jit(points))  # (n, n) f32, diagonal = +inf
+    sq[comp[:, None] == comp[None, :]] = np.inf
+    us, vs = [], []
+    for c in np.unique(comp):
+        rows = np.nonzero(comp == c)[0]
+        sub = sq[rows]
+        # All min-weight cross pairs, then the smallest CANONICAL (u, v):
+        # a plain row-major argmin would order by pre-swap endpoints and
+        # could diverge from the reference MST on ties.
+        ii, jj = np.nonzero(sub == sub.min())
+        cand_u = np.minimum(rows[ii], jj)
+        cand_v = np.maximum(rows[ii], jj)
+        best = np.lexsort((cand_v, cand_u))[0]
+        us.append(cand_u[best])
+        vs.append(cand_v[best])
+    u = np.asarray(us, np.int32)
+    v = np.asarray(vs, np.int32)
+    return u, v, sq[u, v].astype(np.float32)
+
+
+def euclidean_mst_many(
+        clouds: Sequence[np.ndarray], *, k: int = DEFAULT_K,
+        max_doublings: int = 4,
+        solve_many_fn: Optional[Callable] = None,
+        engine: str = "single", variant: str = "cas", mesh=None,
+        compaction: int = 0) -> List[EMSTResult]:
+    """Solve many point clouds, batching each escalation round's solves.
+
+    ``solve_many_fn([(graph, num_nodes), ...])`` must return per-request
+    results exposing ``mst_mask`` / ``parent`` / ``num_components`` —
+    ``solve_mst_many`` (default) and ``MSTService.solve_many`` both
+    qualify, which is how mstserve routes clustering through its
+    micro-batching queue.  Clouds still escalating are re-solved together
+    in the next round, so a batch of cold requests shares engine lanes all
+    the way down.
+    """
+    if solve_many_fn is None:
+        solve_many_fn = functools.partial(solve_mst_many, engine=engine,
+                                          variant=variant, mesh=mesh,
+                                          compaction=compaction)
+    clouds = [np.asarray(c, np.float32) for c in clouds]
+    out: List[Optional[EMSTResult]] = [None] * len(clouds)
+    # Per-active-cloud escalation state.
+    state = {}
+    for i, pts in enumerate(clouds):
+        n = pts.shape[0]
+        if n < 2:
+            out[i] = EMSTResult(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                                np.zeros(0, np.float32), n, n, 0, 0, 0)
+            continue
+        state[i] = dict(k=min(max(1, k), n - 1), doublings=0, bridges=0,
+                        extra=None, prev_nc=None, bridged=False)
+    while state:
+        active = sorted(state)
+        edge_lists = {}
+        requests = []
+        for i in active:
+            pts, s = clouds[i], state[i]
+            u, v, w = candidate_edges(pts, s["k"], extra=s["extra"])
+            edge_lists[i] = (u, v, w)
+            requests.append((Graph(jnp.asarray(u), jnp.asarray(v),
+                                   jnp.asarray(w)), pts.shape[0]))
+        results = solve_many_fn(requests)
+        for i, r in zip(active, results):
+            s = state[i]
+            u, v, w = edge_lists[i]
+            n = clouds[i].shape[0]
+            nc = int(r.num_components)
+            if nc > 1:
+                # Double k only while DOUBLING is making progress (component
+                # count still dropping): well-separated clusters stay
+                # disconnected at ANY small k, and the exact bridge fallback
+                # is both cheaper and guaranteed to converge (components at
+                # least halve per round).  Once bridging starts, never
+                # double again — a bridge round's own progress must not be
+                # credited to k.
+                prev, s["prev_nc"] = s["prev_nc"], nc
+                if (not s["bridged"] and s["k"] < n - 1
+                        and s["doublings"] < max_doublings
+                        and (prev is None or nc < prev)):
+                    s["k"] = min(n - 1, s["k"] * 2)
+                    s["doublings"] += 1
+                    continue
+                bu, bv, bw = nearest_cross_component_edges(
+                    clouds[i], np.asarray(r.parent))
+                ex = s["extra"]
+                s["extra"] = (
+                    (bu, bv, bw) if ex is None else
+                    (np.concatenate([ex[0], bu]),
+                     np.concatenate([ex[1], bv]),
+                     np.concatenate([ex[2], bw])))
+                s["bridges"] += bu.shape[0]
+                s["bridged"] = True
+                continue
+            mask = np.asarray(r.mst_mask)
+            out[i] = EMSTResult(u[mask], v[mask],
+                                np.sqrt(w[mask], dtype=np.float32), n, nc,
+                                s["k"], s["doublings"], s["bridges"])
+            del state[i]
+    return out  # type: ignore[return-value]
+
+
+def euclidean_mst(points, **kwargs) -> EMSTResult:
+    """Single-cloud convenience wrapper around ``euclidean_mst_many``."""
+    return euclidean_mst_many([points], **kwargs)[0]
+
+
+__all__ = ["EMSTResult", "euclidean_mst", "euclidean_mst_many",
+           "candidate_edges", "nearest_cross_component_edges", "DEFAULT_K"]

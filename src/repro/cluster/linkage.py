@@ -1,0 +1,172 @@
+"""Single-linkage dendrogram from MST edges (DESIGN.md §3a, step 3).
+
+Single-linkage agglomerative clustering *is* Kruskal replayed: merging the
+two closest clusters repeatedly consumes exactly the MST edges in weight
+order, so once the EMST is solved the dendrogram costs one sort plus one
+union-find sweep.  That sweep is inherently sequential (each merge depends
+on the component state left by the previous one), so it runs host-side in
+numpy — the heavy, parallel work (kNN kernel + Borůvka) already happened on
+device by the time edges reach this module.
+
+Determinism: edges are processed in ``(weight, src, dst)`` lexicographic
+order.  Fed the canonical EMST edge list (``cluster/emst.py`` keeps
+endpoints as ``src < dst`` and the edge *set* unique under that total
+order), every engine producing the same edge set produces the same
+dendrogram, merge for merge — what the cross-engine clustering conformance
+matrix pins.
+
+Cuts: ``cut_k`` applies the first ``n - k`` merges (k clusters on a
+connected input); ``cut_distance`` applies every merge with height
+``<= d``.  Both return *canonical* labels — clusters numbered by first
+point occurrence — so label arrays compare exactly across engines and
+against the brute-force reference.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+
+class Dendrogram(NamedTuple):
+    """Single-linkage merge tree over ``num_points`` leaves.
+
+    Attributes:
+      num_points: leaf count n.
+      merges:   (M, 2) int32 scipy-convention cluster ids per merge —
+                ids < n are leaves, id n + t is the cluster born at merge t.
+      heights:  (M,) float32 merge distances, nondecreasing.
+      sizes:    (M,) int32 size of the cluster born at each merge.
+      edge_src: (M,) int32 MST edge endpoints in merge order (the replay
+      edge_dst: (M,) int32  key for cut label extraction).
+
+    ``M == n - c`` for a forest with c components (``c == 1`` when the
+    input spans).
+    """
+
+    num_points: int
+    merges: np.ndarray
+    heights: np.ndarray
+    sizes: np.ndarray
+    edge_src: np.ndarray
+    edge_dst: np.ndarray
+
+    @property
+    def num_merges(self) -> int:
+        return int(self.heights.shape[0])
+
+    @property
+    def num_components(self) -> int:
+        return self.num_points - self.num_merges
+
+
+class _UnionFind:
+    """Path-halving union-find over point ids, tracking cluster ids."""
+
+    def __init__(self, n: int):
+        self.parent = np.arange(n, dtype=np.int64)
+
+    def find(self, x: int) -> int:
+        p = self.parent
+        while p[x] != x:
+            p[x] = p[p[x]]
+            x = p[x]
+        return int(x)
+
+    def union(self, a: int, b: int) -> bool:
+        ra, rb = self.find(a), self.find(b)
+        if ra == rb:
+            return False
+        self.parent[rb] = ra
+        return True
+
+
+def single_linkage(src, dst, weight, num_points: int) -> Dendrogram:
+    """Build the dendrogram from an edge list (the solved EMST).
+
+    Edges are replayed in ``(weight, src, dst)`` order; edges that close a
+    cycle are skipped, so any edge list works, but the intended input is an
+    MST/MSF (every edge then merges).  Heights are nondecreasing by
+    construction of the sort.
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    weight = np.asarray(weight, np.float32)
+    order = np.lexsort((dst, src, weight))
+
+    uf = _UnionFind(num_points)
+    # cluster id currently carried by each root point (scipy convention).
+    cluster_of = np.arange(num_points, dtype=np.int64)
+    size_of = np.ones(num_points, np.int64)
+    merges, heights, sizes, e_src, e_dst = [], [], [], [], []
+    for e in order:
+        a, b = int(src[e]), int(dst[e])
+        ra, rb = uf.find(a), uf.find(b)
+        if ra == rb:
+            continue
+        t = len(merges)
+        merges.append((cluster_of[ra], cluster_of[rb]))
+        heights.append(weight[e])
+        uf.union(ra, rb)
+        root = uf.find(ra)
+        size_of[root] = size_of[ra] + size_of[rb]
+        sizes.append(size_of[root])
+        cluster_of[root] = num_points + t
+        e_src.append(a)
+        e_dst.append(b)
+    return Dendrogram(
+        num_points=num_points,
+        merges=np.asarray(merges, np.int32).reshape(-1, 2),
+        heights=np.asarray(heights, np.float32),
+        sizes=np.asarray(sizes, np.int32),
+        edge_src=np.asarray(e_src, np.int32),
+        edge_dst=np.asarray(e_dst, np.int32),
+    )
+
+
+def canonical_labels(roots) -> np.ndarray:
+    """Relabel arbitrary component representatives to 0..C-1 by first
+    occurrence — the label canonicalization every cut and the brute-force
+    reference share."""
+    roots = np.asarray(roots)
+    _, first, inverse = np.unique(roots, return_index=True,
+                                  return_inverse=True)
+    # np.unique orders by root value; reorder so labels follow first point.
+    remap = np.empty(first.shape[0], np.int32)
+    remap[np.argsort(first, kind="stable")] = np.arange(first.shape[0],
+                                                        dtype=np.int32)
+    return remap[inverse]
+
+
+def _replay_labels(dend: Dendrogram, num_merges: int) -> np.ndarray:
+    uf = _UnionFind(dend.num_points)
+    for t in range(num_merges):
+        uf.union(int(dend.edge_src[t]), int(dend.edge_dst[t]))
+    roots = np.fromiter((uf.find(i) for i in range(dend.num_points)),
+                        np.int64, dend.num_points)
+    return canonical_labels(roots)
+
+
+def cut_k(dend: Dendrogram, k: int) -> np.ndarray:
+    """(n,) int32 canonical labels for exactly ``k`` clusters.
+
+    Applies the first ``n - k`` merges; valid for
+    ``num_components <= k <= n`` (a forest cannot be merged below its
+    component count).
+    """
+    if not dend.num_components <= k <= dend.num_points:
+        raise ValueError(
+            f"cut_k: need {dend.num_components} <= k <= {dend.num_points}, "
+            f"got {k}")
+    return _replay_labels(dend, dend.num_points - k)
+
+
+def cut_distance(dend: Dendrogram, d: float) -> np.ndarray:
+    """(n,) int32 canonical labels after applying every merge with height
+    ``<= d`` — the components of the distance-threshold graph."""
+    return _replay_labels(dend, int(np.searchsorted(dend.heights, d,
+                                                    side="right")))
+
+
+__all__ = ["Dendrogram", "single_linkage", "cut_k", "cut_distance",
+           "canonical_labels"]

@@ -1,0 +1,73 @@
+"""Brute-force clustering reference: all-pairs MST + union-find.
+
+The independent oracle the clustering conformance matrix compares every
+(engine, variant, family) cell against — no scipy, no kNN, no Pallas: the
+complete graph in ``(u, v)`` lexicographic order, ``kruskal_numpy`` (the
+repo's existing union-find oracle), and the shared linkage cuts.
+
+Weight discipline mirrors ``cluster/emst.py`` exactly: edges carry squared
+distances computed by the *same jitted expression* the kernel tiles use
+(``kernels/knn_graph/ref.pairwise_sq_dists``), Kruskal's stable weight sort
+over the lex-ordered list realizes the same ``(w, u, v)`` total order the
+engines' rank construction does, so the reference MST is the identical
+unique edge set — making label comparison exact, not approximate.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.core.oracle import kruskal_numpy
+from repro.cluster.emst import EMSTResult
+from repro.cluster.linkage import (Dendrogram, cut_distance, cut_k,
+                                   single_linkage)
+from repro.kernels.knn_graph.ref import pairwise_sq_dists
+
+_sq_dists = jax.jit(pairwise_sq_dists)
+
+
+def all_pairs_edges(points):
+    """Complete-graph edge list: ``(u, v, w)`` numpy arrays in ``(u, v)``
+    lexicographic order with squared-distance weights — shared by this
+    reference and the brute-force side of ``benchmarks/cluster_bench``."""
+    n = points.shape[0]
+    sq = np.asarray(_sq_dists(points))
+    u, v = np.triu_indices(n, 1)  # (u, v) lexicographic, u < v
+    return u.astype(np.int32), v.astype(np.int32), sq[u, v].astype(np.float32)
+
+
+def brute_force_emst(points) -> EMSTResult:
+    """Exact EMST from the complete graph (O(n^2) edges) via Kruskal."""
+    points = np.asarray(points, np.float32)
+    n = points.shape[0]
+    if n < 2:
+        return EMSTResult(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                          np.zeros(0, np.float32), n, n, 0, 0, 0)
+    u, v, w = all_pairs_edges(points)
+    mask, _, nc = kruskal_numpy(u, v, w, n)
+    return EMSTResult(u[mask].astype(np.int32), v[mask].astype(np.int32),
+                      np.sqrt(w[mask], dtype=np.float32), n, nc,
+                      n - 1, 0, 0)
+
+
+def brute_force_dendrogram(points) -> Dendrogram:
+    r = brute_force_emst(points)
+    return single_linkage(r.src, r.dst, r.distance, r.num_points)
+
+
+def brute_force_labels(points, *, num_clusters: Optional[int] = None,
+                       distance: Optional[float] = None) -> np.ndarray:
+    """(n,) int32 canonical labels from the brute-force pipeline; pass
+    exactly one of ``num_clusters`` / ``distance``."""
+    if (num_clusters is None) == (distance is None):
+        raise ValueError("pass exactly one of num_clusters / distance")
+    dend = brute_force_dendrogram(points)
+    if num_clusters is not None:
+        return cut_k(dend, num_clusters)
+    return cut_distance(dend, distance)
+
+
+__all__ = ["all_pairs_edges", "brute_force_emst", "brute_force_dendrogram",
+           "brute_force_labels"]

@@ -135,6 +135,46 @@ def solve_mst(graph: Graph, num_nodes: int, *, engine: str = "single",
                       compaction=compaction)
 
 
+def solve_mst_many(requests, *, engine: str = "single", variant: str = "cas",
+                   mesh=None, compaction: int = 0) -> list:
+    """Dispatch a list of ``(graph, num_nodes)`` solves through the registry.
+
+    The registry-level sibling of ``solve_mst`` for multi-graph callers
+    (the EMST clustering pipeline's escalation rounds, scripts): with
+    ``engine="batched"`` the requests are shape-bucketed and solved
+    lane-parallel through ``batched_msf``; every other engine solves per
+    request.  Returns per-request :class:`MSTResult` in input order, each
+    trimmed to its graph's true sizes.
+    """
+    requests = list(requests)
+    if engine != "batched":
+        return [solve_mst(g, v, engine=engine, variant=variant, mesh=mesh,
+                          compaction=compaction) for g, v in requests]
+    import jax
+    import numpy as np
+    from repro.core.batched_mst import batched_msf
+    from repro.graphs.batching import pack_graphs
+
+    out: list = [None] * len(requests)
+    for bucket in pack_graphs(requests):
+        res = batched_msf(bucket.graph, num_nodes=bucket.padded_nodes,
+                          variant=variant, compaction=compaction)
+        # One device->host transfer per bucket (not per lane per field) —
+        # the same contract as graphs/batching.unpack_results.
+        res_np = jax.device_get(res)
+        nn = np.asarray(bucket.graph.num_nodes)
+        ne = np.asarray(bucket.graph.num_edges)
+        for lane, orig in enumerate(bucket.indices):
+            v, e = int(nn[lane]), int(ne[lane])
+            out[orig] = MSTResult(parent=res_np.parent[lane, :v],
+                                  mst_mask=res_np.mst_mask[lane, :e],
+                                  num_rounds=res_np.num_rounds[lane],
+                                  num_waves=res_np.num_waves[lane],
+                                  total_weight=res_np.total_weight[lane],
+                                  num_components=res_np.num_components[lane])
+    return out
+
+
 __all__ = [
     "Graph",
     "MSTResult",
@@ -142,6 +182,7 @@ __all__ = [
     "ENGINES",
     "EngineSpec",
     "solve_mst",
+    "solve_mst_many",
     "minimum_spanning_forest",
     "mst_optimized",
     "mst_unoptimized",

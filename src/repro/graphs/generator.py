@@ -73,3 +73,39 @@ def paper_graph(name: str, seed: int = 0) -> Tuple[Graph, int]:
     """Instantiate one of the paper's Table 1 graphs by name."""
     n, deg = PAPER_GRAPHS[name]
     return generate_graph(n, deg, seed=seed)
+
+
+# Point-cloud families for the Euclidean-MST clustering subsystem
+# (cluster/, DESIGN.md §3a): deterministic per (kind, n, dim, seed).
+POINT_CLOUDS = ("blobs", "uniform", "ring")
+
+
+def generate_points(kind: str, num_points: int, dim: int = 2,
+                    seed: int = 0, *, num_blobs: int = 3,
+                    noise: float = 0.08) -> np.ndarray:
+    """(num_points, dim) float32 point cloud of the named family.
+
+    * ``blobs``  — ``num_blobs`` Gaussian clusters with well-separated
+      centers (the single-linkage "easy" case: cut_k recovers the blobs);
+    * ``uniform``— iid uniform in the unit cube (no cluster structure);
+    * ``ring``   — points on the unit circle in the first two dims plus
+      Gaussian noise (a chain-shaped manifold: single linkage follows it,
+      centroid methods would not).
+    """
+    rng = np.random.default_rng(seed)
+    n, d = int(num_points), int(dim)
+    if kind == "blobs":
+        centers = rng.uniform(-4.0, 4.0, size=(num_blobs, d))
+        which = rng.integers(0, num_blobs, size=n)
+        pts = centers[which] + rng.normal(0.0, 0.25, size=(n, d))
+    elif kind == "uniform":
+        pts = rng.random((n, d))
+    elif kind == "ring":
+        theta = rng.random(n) * 2 * np.pi
+        pts = rng.normal(0.0, noise, size=(n, d))
+        pts[:, 0] += np.cos(theta)
+        pts[:, 1 % d] += np.sin(theta)
+    else:
+        raise ValueError(f"unknown point-cloud kind {kind!r}; "
+                         f"known: {POINT_CLOUDS}")
+    return pts.astype(np.float32)

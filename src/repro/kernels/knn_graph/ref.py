@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the knn_graph kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists(points):
+    """(n, dim) -> (n, n) float32 squared distances, diagonal = +inf.
+
+    Same difference-form arithmetic as the kernel tiles (``sum((x-y)**2)``)
+    so blocked and one-shot evaluation agree bit-exactly; shared with the
+    brute-force clustering reference (``cluster/reference.py``) so the
+    conformance tests compare like against like.
+    """
+    points = jnp.asarray(points, jnp.float32)
+    sq = jnp.sum((points[:, None, :] - points[None, :, :]) ** 2, axis=-1)
+    n = points.shape[0]
+    return jnp.where(jnp.eye(n, dtype=bool), jnp.inf, sq)
+
+
+def knn_graph_ref(points, k: int):
+    """(n, dim) -> (idx (n, k) int32, sqd (n, k) f32), rows sorted ascending
+    by (squared distance, point id) — the kernel's exact output contract.
+
+    Bit-exactness vs the kernel holds under ``jax.jit`` (how both the ops
+    wrapper and the test sweep run it): op-by-op eager dispatch skips XLA's
+    fused multiply-add contraction and can differ by 1 ulp.
+    """
+    sq = pairwise_sq_dists(points)
+    n = sq.shape[0]
+    ids = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (n, n))
+    d_sorted, i_sorted = jax.lax.sort((sq, ids), dimension=1,
+                                      is_stable=True, num_keys=1)
+    return i_sorted[:, :k], d_sorted[:, :k]

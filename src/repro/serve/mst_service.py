@@ -43,6 +43,26 @@ class MSTResponse:
     cached: bool = False
 
 
+@dataclass(frozen=True)
+class ClusterResponse:
+    """One served clustering request (DESIGN.md §3a).
+
+    ``labels`` are canonical (clusters numbered by first point occurrence),
+    so identical point clouds produce bit-identical label arrays across
+    engines and cache hits.  ``heights`` exposes the dendrogram merge
+    distances for callers that re-cut client-side.
+    """
+
+    request_id: int
+    labels: np.ndarray        # (n,) int32
+    num_clusters: int
+    heights: np.ndarray       # (n - c,) float32, nondecreasing
+    knn_k: int                # final k that spanned
+    escalations: int          # k-doubling rounds taken
+    bridges: int              # exact fallback edges appended
+    cached: bool = False
+
+
 def graph_key(graph: Graph, num_nodes: int) -> str:
     """Content hash of a request — identical graphs dedupe in the cache."""
     h = hashlib.sha1()
@@ -54,6 +74,21 @@ def graph_key(graph: Graph, num_nodes: int) -> str:
     return h.hexdigest()
 
 
+def points_key(points: np.ndarray, knn_k: int) -> str:
+    """Content hash of a clustering request (points + starting k).
+
+    The cached object is the *dendrogram*, which depends on the cloud and
+    the escalation start point but not on the cut, so one entry serves
+    every ``cut_k`` / ``cut_distance`` the caller asks for.
+    """
+    a = np.ascontiguousarray(np.asarray(points, np.float32))
+    h = hashlib.sha1()
+    h.update(np.int64(knn_k).tobytes())
+    h.update(np.int64(a.shape[0]).tobytes())
+    h.update(a.tobytes())
+    return "pts:" + h.hexdigest()
+
+
 @dataclass
 class ServiceStats:
     submitted: int = 0
@@ -63,6 +98,9 @@ class ServiceStats:
     flushes: int = 0
     buckets: int = 0
     bucket_shapes: Dict[Tuple[int, int], int] = field(default_factory=dict)
+    cluster_requests: int = 0
+    cluster_cache_hits: int = 0
+    cluster_escalations: int = 0  # k-doubling rounds across cold requests
 
 
 class MSTService:
@@ -97,6 +135,11 @@ class MSTService:
         self.cache_size = int(cache_size)
         self.stats = ServiceStats()
         self._cache: "OrderedDict[str, MSTResponse]" = OrderedDict()
+        # Clustering entries (dendrogram + escalation stats) live in their
+        # own LRU of the same capacity: one clustering request can imply
+        # several graph solves, so the two working sets shouldn't thrash
+        # each other.
+        self._cluster_cache: "OrderedDict[str, tuple]" = OrderedDict()
         # pending: (request_id, key, graph, num_nodes)
         self._pending: List[Tuple[int, str, Graph, int]] = []
         # solved but not yet handed to any caller (a solve()/solve_many()
@@ -132,7 +175,7 @@ class MSTService:
         responses: Dict[int, MSTResponse] = {}
         misses: List[Tuple[int, str, Graph, int]] = []
         for rid, key, g, v in pending:
-            hit = self._cache_get(key)
+            hit = self._cache_get(self._cache, key)
             if hit is not None:
                 self.stats.cache_hits += 1
                 responses[rid] = MSTResponse(rid, hit.mst_mask, hit.parent,
@@ -159,7 +202,7 @@ class MSTService:
                 parent.setflags(write=False)
                 resp = MSTResponse(rid, mask, parent, tw, nc, nr)
                 by_key[key] = resp
-                self._cache_put(key, resp)
+                self._cache_put(self._cache, key, resp)
             for rid, key, _, _ in misses:
                 base = by_key[key]
                 responses[rid] = (base if rid == base.request_id else
@@ -227,27 +270,106 @@ class MSTService:
                 self._unclaimed.append(r)
         return [mine[i] for i in sorted(ids)]
 
-    # -- cache --------------------------------------------------------------
+    # -- clustering ---------------------------------------------------------
 
-    def _cache_get(self, key: str) -> Optional[MSTResponse]:
+    def cluster(self, points, *, num_clusters: Optional[int] = None,
+                distance: Optional[float] = None,
+                knn_k: Optional[int] = None) -> ClusterResponse:
+        """Single-cloud convenience wrapper around ``cluster_many``."""
+        return self.cluster_many([points], num_clusters=num_clusters,
+                                 distance=distance, knn_k=knn_k)[0]
+
+    def cluster_many(self, clouds: Sequence, *,
+                     num_clusters: Optional[int] = None,
+                     distance: Optional[float] = None,
+                     knn_k: Optional[int] = None) -> List[ClusterResponse]:
+        """Serve single-linkage clustering requests end-to-end.
+
+        Pass exactly one of ``num_clusters`` (``cut_k``) / ``distance``
+        (``cut_distance``).  Cache-missing clouds run the kNN-EMST pipeline
+        (``cluster/emst.py``) with every escalation round's candidate
+        graphs routed through ``solve_many`` — i.e. through this service's
+        micro-batching queue, shape buckets, intra-flush dedup and graph
+        LRU — then the dendrogram is cached under the points' content hash,
+        so later requests for the *same cloud with a different cut* are
+        pure cache hits.
+        """
+        from repro.cluster.emst import DEFAULT_K, euclidean_mst_many
+        from repro.cluster.linkage import cut_distance, cut_k, single_linkage
+
+        if (num_clusters is None) == (distance is None):
+            raise ValueError("pass exactly one of num_clusters / distance")
+        if knn_k is None:
+            knn_k = DEFAULT_K  # single source for the exactness boundary
+
+        entries: List[Optional[tuple]] = [None] * len(clouds)
+        misses: List[Tuple[int, str, np.ndarray]] = []
+        for i, pts in enumerate(clouds):
+            pts = np.asarray(pts, np.float32)
+            self.stats.cluster_requests += 1
+            key = points_key(pts, knn_k)
+            hit = self._cache_get(self._cluster_cache, key)
+            if hit is not None:
+                self.stats.cluster_cache_hits += 1
+                entries[i] = hit + (True,)
+            else:
+                misses.append((i, key, pts))
+
+        if misses:
+            # Candidate graphs (every escalation round) route through this
+            # service's own queue: micro-batching, shape buckets,
+            # intra-flush dedup and the graph-level LRU all apply.
+            results = euclidean_mst_many([pts for _, _, pts in misses],
+                                         k=knn_k,
+                                         solve_many_fn=self.solve_many)
+            for (i, key, pts), r in zip(misses, results):
+                dend = single_linkage(r.src, r.dst, r.distance,
+                                      r.num_points)
+                dend.heights.setflags(write=False)
+                self.stats.cluster_escalations += r.escalations
+                entry = (dend, r.knn_k, r.escalations, r.bridges)
+                self._cache_put(self._cluster_cache, key, entry)
+                entries[i] = entry + (False,)
+
+        out = []
+        for rid, entry in enumerate(entries):
+            dend, kk, esc, bridges, cached = entry
+            labels = (cut_k(dend, num_clusters) if num_clusters is not None
+                      else cut_distance(dend, distance))
+            labels.setflags(write=False)
+            out.append(ClusterResponse(rid, labels,
+                                       int(labels.max()) + 1
+                                       if labels.size else 0,
+                                       dend.heights, kk, esc, bridges,
+                                       cached=cached))
+        return out
+
+    # -- caches -------------------------------------------------------------
+
+    def _cache_get(self, cache: OrderedDict, key: str):
         if self.cache_size <= 0:
             return None
-        resp = self._cache.get(key)
+        resp = cache.get(key)
         if resp is not None:
-            self._cache.move_to_end(key)  # LRU touch
+            cache.move_to_end(key)  # LRU touch
         return resp
 
-    def _cache_put(self, key: str, resp: MSTResponse) -> None:
+    def _cache_put(self, cache: OrderedDict, key: str, resp) -> None:
         if self.cache_size <= 0:
             return
-        self._cache[key] = resp
-        self._cache.move_to_end(key)
-        while len(self._cache) > self.cache_size:
-            self._cache.popitem(last=False)
+        cache[key] = resp
+        cache.move_to_end(key)
+        while len(cache) > self.cache_size:
+            cache.popitem(last=False)
 
     @property
     def cache_len(self) -> int:
         return len(self._cache)
 
+    @property
+    def cluster_cache_len(self) -> int:
+        return len(self._cluster_cache)
 
-__all__ = ["MSTService", "MSTResponse", "ServiceStats", "graph_key"]
+
+__all__ = ["MSTService", "MSTResponse", "ClusterResponse", "ServiceStats",
+           "graph_key", "points_key"]

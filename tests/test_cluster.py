@@ -1,0 +1,256 @@
+"""Clustering conformance: kNN-EMST pipeline vs the brute-force reference.
+
+The acceptance matrix: {blobs, uniform, ring, duplicate-point} x
+{cas, lock} x {single, batched} — ``cut_k`` and ``cut_distance`` labels
+(and the EMST edge set itself) must equal the all-pairs-MST + union-find
+reference exactly, plus escalation, linkage, and mstserve entry-point
+behavior.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (brute_force_emst, brute_force_labels,
+                           canonical_labels, cut_distance, cut_k,
+                           euclidean_mst, euclidean_mst_many,
+                           single_linkage)
+from repro.graphs.generator import generate_points
+from repro.serve.mst_service import MSTService
+
+
+def _duplicate_cloud(seed=3):
+    """Every point appears twice: zero-distance ties everywhere."""
+    return np.repeat(generate_points("blobs", 30, 2, seed=seed), 2, axis=0)
+
+
+FAMILIES = {
+    "blobs": lambda: generate_points("blobs", 60, 2, seed=0),
+    "uniform": lambda: generate_points("uniform", 50, 2, seed=1),
+    "ring": lambda: generate_points("ring", 48, 2, seed=2),
+    "duplicate-point": _duplicate_cloud,
+}
+
+
+def _edge_set(r):
+    return set(zip(r.src.tolist(), r.dst.tolist()))
+
+
+def _dendrogram(r):
+    return single_linkage(r.src, r.dst, r.distance, r.num_points)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("engine", ["single", "batched"])
+@pytest.mark.parametrize("variant", ["cas", "lock"])
+def test_cluster_conformance_matrix(family, engine, variant):
+    """THE clustering conformance cell: exact EMST edge-set identity with
+    the all-pairs reference AND identical cut_k / cut_distance labels."""
+    pts = FAMILIES[family]()
+    r = euclidean_mst(pts, k=6, engine=engine, variant=variant)
+    ref = brute_force_emst(pts)
+    assert r.num_components == 1
+    assert _edge_set(r) == _edge_set(ref)
+
+    dend = _dendrogram(r)
+    for k in (1, 3, pts.shape[0] // 2):
+        np.testing.assert_array_equal(
+            cut_k(dend, k), brute_force_labels(pts, num_clusters=k))
+    for q in (0.25, 0.9):
+        d = float(np.quantile(dend.heights, q))
+        np.testing.assert_array_equal(
+            cut_distance(dend, d), brute_force_labels(pts, distance=d))
+
+
+@pytest.mark.parametrize("compaction", [0, 1])
+def test_cluster_compaction_passthrough(compaction):
+    """Frontier compaction must be invisible through the whole pipeline."""
+    pts = generate_points("blobs", 80, 2, seed=7)
+    r = euclidean_mst(pts, k=6, compaction=compaction)
+    ref = brute_force_emst(pts)
+    assert _edge_set(r) == _edge_set(ref)
+
+
+def test_escalation_k_doubling_then_bridges():
+    """Two far-apart blobs at tiny k: the kNN graph cannot span, so the
+    pipeline must double (once — no progress after that) and then append
+    exact cross-component bridges, ending exact vs brute force."""
+    a = generate_points("blobs", 20, 2, seed=5, num_blobs=1)
+    b = generate_points("blobs", 20, 2, seed=6, num_blobs=1) + 100.0
+    pts = np.concatenate([a, b]).astype(np.float32)
+    r = euclidean_mst(pts, k=2)
+    assert r.num_components == 1
+    assert r.escalations >= 1
+    assert r.bridges >= 1
+    assert _edge_set(r) == _edge_set(brute_force_emst(pts))
+
+
+def test_escalation_fallback_only_spans():
+    """max_doublings=0 forces the exact-bridge path immediately; the result
+    must span and the heaviest cut must still separate the two blobs."""
+    a = generate_points("blobs", 20, 2, seed=5, num_blobs=1)
+    b = generate_points("blobs", 20, 2, seed=6, num_blobs=1) + 100.0
+    pts = np.concatenate([a, b]).astype(np.float32)
+    r = euclidean_mst(pts, k=2, max_doublings=0)
+    assert r.num_components == 1
+    assert r.escalations == 0
+    assert r.bridges >= 1
+    labels = cut_k(_dendrogram(r), 2)
+    np.testing.assert_array_equal(labels, brute_force_labels(
+        pts, num_clusters=2))
+
+
+def test_escalation_stops_doubling_without_progress():
+    """Adaptive policy: when a doubling does not reduce the component
+    count, the next escalation must bridge instead of doubling again."""
+    a = generate_points("blobs", 30, 2, seed=8, num_blobs=1)
+    b = generate_points("blobs", 30, 2, seed=9, num_blobs=1) + 50.0
+    pts = np.concatenate([a, b]).astype(np.float32)
+    r = euclidean_mst(pts, k=4, max_doublings=8)
+    assert r.escalations <= 2  # not driven to k ~ n-1
+    assert r.knn_k < pts.shape[0] - 1
+    assert r.num_components == 1
+
+
+def test_escalation_bridge_progress_not_credited_to_doubling():
+    """Four far-apart blobs: every bridge round halves the component count,
+    but that progress must not re-enable k-doubling (which can never
+    connect the blobs) — k stays put once bridging starts."""
+    blobs = [generate_points("blobs", 16, 2, seed=s, num_blobs=1)
+             + 200.0 * s for s in range(4)]
+    pts = np.concatenate(blobs).astype(np.float32)
+    r = euclidean_mst(pts, k=2, max_doublings=8)
+    assert r.num_components == 1
+    assert r.escalations <= 1  # at most the initial no-progress probe
+    assert r.knn_k <= 4
+    assert r.bridges >= 3
+    labels = cut_k(_dendrogram(r), 4)
+    np.testing.assert_array_equal(
+        labels, brute_force_labels(pts, num_clusters=4))
+
+
+def test_emst_many_batches_mixed_requests():
+    clouds = [generate_points("blobs", 40, 2, seed=s) for s in range(3)]
+    clouds.append(generate_points("uniform", 25, 3, seed=5))
+    results = euclidean_mst_many(clouds, k=6, engine="batched")
+    for pts, r in zip(clouds, results):
+        assert r.num_points == pts.shape[0]
+        assert _edge_set(r) == _edge_set(brute_force_emst(pts))
+
+
+def test_emst_trivial_sizes():
+    for n in (0, 1):
+        r = euclidean_mst(np.zeros((n, 2), np.float32))
+        assert r.num_points == n
+        assert r.src.shape == (0,)
+        assert r.num_components == n
+    r = euclidean_mst(np.asarray([[0.0, 0.0], [1.0, 0.0]], np.float32), k=5)
+    assert r.src.tolist() == [0] and r.dst.tolist() == [1]
+    np.testing.assert_allclose(r.distance, [1.0])
+
+
+# -- linkage ----------------------------------------------------------------
+
+def test_single_linkage_known_tree():
+    """Hand-checked 4-point chain: merge order, heights, sizes, ids."""
+    #  0 -1.0- 1 -3.0- 2 -2.0- 3   (weights)
+    src = np.asarray([0, 1, 2])
+    dst = np.asarray([1, 2, 3])
+    w = np.asarray([1.0, 3.0, 2.0], np.float32)
+    dend = single_linkage(src, dst, w, 4)
+    np.testing.assert_allclose(dend.heights, [1.0, 2.0, 3.0])
+    assert dend.sizes.tolist() == [2, 2, 4]
+    # merge 0: leaves 0+1 -> cluster 4; merge 1: leaves 2+3 -> cluster 5;
+    # merge 2: cluster 4 + cluster 5.
+    assert dend.merges.tolist() == [[0, 1], [2, 3], [4, 5]]
+    np.testing.assert_array_equal(cut_k(dend, 2), [0, 0, 1, 1])
+    np.testing.assert_array_equal(cut_k(dend, 4), [0, 1, 2, 3])
+    np.testing.assert_array_equal(cut_distance(dend, 1.5), [0, 0, 1, 2])
+    np.testing.assert_array_equal(cut_distance(dend, 3.0), [0, 0, 0, 0])
+
+
+def test_cut_k_bounds_and_forest():
+    src = np.asarray([0, 2])
+    dst = np.asarray([1, 3])
+    w = np.asarray([1.0, 2.0], np.float32)
+    dend = single_linkage(src, dst, w, 4)  # 2-component forest
+    assert dend.num_components == 2
+    np.testing.assert_array_equal(cut_k(dend, 2), [0, 0, 1, 1])
+    with pytest.raises(ValueError):
+        cut_k(dend, 1)  # below the component count
+    with pytest.raises(ValueError):
+        cut_k(dend, 5)  # above the leaf count
+
+
+def test_canonical_labels_first_occurrence():
+    np.testing.assert_array_equal(
+        canonical_labels(np.asarray([7, 3, 7, 9, 3])), [0, 1, 0, 2, 1])
+
+
+# -- mstserve clustering entry point ---------------------------------------
+
+def test_service_cluster_matches_reference_and_caches():
+    svc = MSTService()
+    pts = generate_points("blobs", 60, 2, seed=0)
+    r = svc.cluster(pts, num_clusters=3, knn_k=6)
+    np.testing.assert_array_equal(
+        r.labels, brute_force_labels(pts, num_clusters=3))
+    assert not r.cached
+    assert svc.stats.flushes >= 1  # candidate solves went through the queue
+
+    again = svc.cluster(pts, num_clusters=3, knn_k=6)
+    assert again.cached
+    np.testing.assert_array_equal(again.labels, r.labels)
+    # A different CUT on the same cloud is still a dendrogram cache hit.
+    d = float(np.quantile(r.heights, 0.9))
+    recut = svc.cluster(pts, distance=d, knn_k=6)
+    assert recut.cached
+    np.testing.assert_array_equal(
+        recut.labels, brute_force_labels(pts, distance=d))
+    assert svc.stats.cluster_requests == 3
+    assert svc.stats.cluster_cache_hits == 2
+
+
+def test_service_cluster_many_mixed_hits():
+    svc = MSTService()
+    a = generate_points("blobs", 40, 2, seed=1)
+    b = generate_points("ring", 30, 2, seed=2)
+    svc.cluster(a, num_clusters=2)
+    out = svc.cluster_many([b, a], num_clusters=2)
+    assert [r.cached for r in out] == [False, True]
+    for pts, r in zip((b, a), out):
+        np.testing.assert_array_equal(
+            r.labels, brute_force_labels(pts, num_clusters=2))
+
+
+def test_service_cluster_cache_disabled_and_lru_bound():
+    svc = MSTService(cache_size=0)
+    pts = generate_points("uniform", 30, 2, seed=4)
+    assert not svc.cluster(pts, num_clusters=2).cached
+    assert not svc.cluster(pts, num_clusters=2).cached
+    assert svc.cluster_cache_len == 0
+
+    svc = MSTService(cache_size=2)
+    clouds = [generate_points("uniform", 20, 2, seed=s) for s in range(3)]
+    for c in clouds:
+        svc.cluster(c, num_clusters=2)
+    assert svc.cluster_cache_len == 2
+    assert not svc.cluster(clouds[0], num_clusters=2).cached  # evicted
+    assert svc.cluster(clouds[2], num_clusters=2).cached
+
+
+def test_service_cluster_requires_exactly_one_cut():
+    svc = MSTService()
+    pts = generate_points("uniform", 10, 2, seed=0)
+    with pytest.raises(ValueError, match="exactly one"):
+        svc.cluster(pts)
+    with pytest.raises(ValueError, match="exactly one"):
+        svc.cluster(pts, num_clusters=2, distance=1.0)
+
+
+def test_service_cluster_labels_frozen():
+    svc = MSTService()
+    pts = generate_points("uniform", 15, 2, seed=6)
+    r = svc.cluster(pts, num_clusters=2)
+    with pytest.raises(ValueError):
+        r.labels[0] = 5
+    with pytest.raises(ValueError):
+        r.heights[0] = 0.0

@@ -17,6 +17,8 @@ from repro.kernels.segment_min_edges.ref import (
     sharded_segment_min_edges_ref)
 from repro.kernels.compact_edges.ops import compact_edges
 from repro.kernels.compact_edges.ref import compact_edges_ref
+from repro.kernels.knn_graph.ops import knn_graph
+from repro.kernels.knn_graph.ref import knn_graph_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.fm_interaction.ops import fm_interaction_kernel
@@ -51,6 +53,56 @@ def test_compact_edges_sweep(e, block, frac):
     np.testing.assert_array_equal(np.asarray(perm), np.asarray(rperm))
     assert int(live) == int(rlive)
     assert sorted(np.asarray(perm).tolist()) == list(range(e))
+
+
+# The acceptance contract for the clustering pipeline's kernel is
+# bit-exactness vs the oracle (indices AND distances) — jit both sides so
+# XLA applies the same fused-multiply-add contraction (see ref.py).
+_knn_ref_jit = jax.jit(knn_graph_ref, static_argnums=1)
+
+
+@pytest.mark.parametrize("n,d,k,br,bc", [
+    (20, 2, 4, 8, 8),       # tiny, exact blocks
+    (65, 3, 8, 16, 32),     # non-dividing n, mixed block sizes
+    (128, 2, 5, 32, 32),    # dividing n
+    (50, 8, 12, 64, 16),    # wide dim, block_rows > n
+    (7, 2, 6, 8, 8),        # k == n - 1 (complete graph)
+])
+def test_knn_graph_sweep(n, d, k, br, bc):
+    rng = np.random.default_rng(n * d + k)
+    pts = rng.random((n, d)).astype(np.float32)
+    idx, sqd = knn_graph(jnp.asarray(pts), k=k, block_rows=br, block_cols=bc)
+    ridx, rsqd = _knn_ref_jit(jnp.asarray(pts), k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_array_equal(np.asarray(sqd), np.asarray(rsqd))
+    # Output contract: rows ascend by (distance, id), ids never self/pad.
+    assert (np.diff(np.asarray(sqd), axis=1) >= 0).all()
+    own = np.arange(n)[:, None]
+    assert (np.asarray(idx) != own).all()
+    assert (np.asarray(idx) < n).all()
+
+
+def test_knn_graph_duplicate_points_tie_break():
+    """Duplicate points tie at distance 0: the kernel must break ties by
+    smallest point id, bit-identically to the oracle's stable sort."""
+    base = np.random.default_rng(0).random((24, 2)).astype(np.float32)
+    pts = np.repeat(base, 2, axis=0)  # every point twice
+    idx, sqd = knn_graph(jnp.asarray(pts), k=4, block_rows=16, block_cols=16)
+    ridx, rsqd = _knn_ref_jit(jnp.asarray(pts), 4)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_array_equal(np.asarray(sqd), np.asarray(rsqd))
+    # Each point's nearest neighbor is its duplicate partner at distance 0.
+    pair = np.arange(48) ^ 1
+    np.testing.assert_array_equal(np.asarray(idx)[:, 0], pair)
+    assert (np.asarray(sqd)[:, 0] == 0).all()
+
+
+def test_knn_graph_rejects_bad_k():
+    pts = jnp.zeros((5, 2), jnp.float32)
+    with pytest.raises(ValueError, match="1 <= k <= n-1"):
+        knn_graph(pts, k=5)
+    with pytest.raises(ValueError, match="1 <= k <= n-1"):
+        knn_graph(pts, k=0)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

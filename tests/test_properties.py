@@ -178,3 +178,70 @@ def test_property_interaction_identity(b, f, seed):
     s = vn.sum(1)
     slow = 0.5 * ((s * s).sum(-1) - (vn * vn).sum(2).sum(1))
     np.testing.assert_allclose(fast, slow, rtol=1e-3, atol=1e-3)
+
+
+# -- Euclidean-MST clustering subsystem (cluster/, kernels/knn_graph) ------
+
+def _random_cloud(n, dim, seed, dup_fraction):
+    """Point cloud with an adversarial share of exact duplicates."""
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, dim)).astype(np.float32)
+    n_dup = int(n * dup_fraction)
+    if n_dup:
+        pts[n - n_dup:] = pts[:n_dup]
+    return pts
+
+
+@given(st.integers(4, 48), st.integers(1, 4), st.integers(0, 10_000),
+       st.integers(1, 8), st.sampled_from([0.0, 0.25, 0.5]))
+@settings(max_examples=25, deadline=None)
+def test_property_knn_kernel_matches_ref(n, dim, seed, k, dup_fraction):
+    """kNN kernel == oracle bit-exactly (indices AND squared distances) for
+    ANY cloud shape, block split, and duplicate-point density — both sides
+    jitted so XLA's FMA contraction is applied identically."""
+    from repro.kernels.knn_graph.ops import knn_graph
+    from repro.kernels.knn_graph.ref import knn_graph_ref
+
+    pts = _random_cloud(n, dim, seed, dup_fraction)
+    k = min(k, n - 1)
+    idx, sqd = knn_graph(jnp.asarray(pts), k=k, block_rows=16,
+                         block_cols=8)
+    ridx, rsqd = jax.jit(knn_graph_ref, static_argnums=1)(
+        jnp.asarray(pts), k)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ridx))
+    np.testing.assert_array_equal(np.asarray(sqd), np.asarray(rsqd))
+
+
+@given(st.integers(4, 40), st.integers(1, 3), st.integers(0, 10_000),
+       st.sampled_from([0.0, 0.5]))
+@settings(max_examples=10, deadline=None)
+def test_property_dendrogram_heights_monotone(n, dim, seed, dup_fraction):
+    """Single-linkage merge heights never decrease, for any cloud —
+    including heavy duplicate ties (zero-height merges first)."""
+    from repro.cluster import euclidean_mst, single_linkage
+
+    pts = _random_cloud(n, dim, seed, dup_fraction)
+    r = euclidean_mst(pts, k=4)
+    dend = single_linkage(r.src, r.dst, r.distance, n)
+    assert (np.diff(dend.heights) >= 0).all()
+    assert dend.num_components == r.num_components == 1
+    assert dend.heights.shape == (n - 1,)
+
+
+@given(st.integers(4, 40), st.integers(0, 10_000), st.data())
+@settings(max_examples=10, deadline=None)
+def test_property_cut_k_yields_exactly_k(n, seed, data):
+    """On a connected input, cut_k returns exactly k distinct canonical
+    labels for every 1 <= k <= n."""
+    from repro.cluster import cut_k, euclidean_mst, single_linkage
+
+    pts = _random_cloud(n, 2, seed, 0.0)
+    r = euclidean_mst(pts, k=4)
+    dend = single_linkage(r.src, r.dst, r.distance, n)
+    k = data.draw(st.integers(1, n))
+    labels = cut_k(dend, k)
+    assert labels.shape == (n,)
+    assert len(np.unique(labels)) == k
+    # Canonical: labels appear in first-occurrence order 0, 1, 2, ...
+    first = labels[np.sort(np.unique(labels, return_index=True)[1])]
+    np.testing.assert_array_equal(first, np.arange(k))
