@@ -50,12 +50,12 @@ out = []
 for n_dev in %(device_counts)r:
     e = EDGES_PER_DEV * n_dev
     v = max(16, e // 3)  # ~degree-6 graphs, growing with the mesh
-    g, v = generate_graph(v, 6, seed=n_dev)
+    g = generate_graph(v, 6, seed=n_dev)
     mesh = make_flat_mesh(n_dev)
     part = partition_edges(g, n_dev)
 
     def run():
-        return sharded_msf(g, num_nodes=v, mesh=mesh, partition=part
+        return sharded_msf(g, mesh=mesh, partition=part
                            ).total_weight.block_until_ready()
 
     run()  # compile
@@ -124,7 +124,7 @@ def batched_throughput_rows(batch_sizes=BATCH_SIZES, *,
     for b in batch_sizes:
         graphs = [generate_graph(num_nodes, degree, seed=s)
                   for s in range(b)]
-        e_pad, v_pad = bucket_shape(graphs[0][0].num_edges, num_nodes)
+        e_pad, v_pad = bucket_shape(graphs[0].num_edges, num_nodes)
         packed = pack_padded(graphs, padded_edges=e_pad, padded_nodes=v_pad)
 
         def run():

@@ -51,8 +51,8 @@ def _brute_graph(points):
     from repro.core.types import Graph
 
     u, v, w = all_pairs_edges(points)
-    return Graph(jnp.asarray(u), jnp.asarray(v), jnp.asarray(w)), \
-        points.shape[0]
+    return Graph(jnp.asarray(u), jnp.asarray(v), jnp.asarray(w),
+                 num_nodes=points.shape[0])
 
 
 def cluster_rows(shapes: Sequence[Tuple[str, int, int, int]] = DEFAULT_SHAPES,
@@ -62,16 +62,18 @@ def cluster_rows(shapes: Sequence[Tuple[str, int, int, int]] = DEFAULT_SHAPES,
     from benchmarks.compaction_bench import paired_time
     from repro.cluster.emst import euclidean_mst
     from repro.cluster.linkage import single_linkage
-    from repro.core import solve_mst
+    from repro.core import SolveOptions, make_solver
     from repro.graphs.generator import generate_points
 
+    brute_solver = make_solver(SolveOptions(variant=variant))
     rows = []
     for kind, n, dim, k in shapes:
         pts = generate_points(kind, n, dim=dim, seed=0)
-        bg, bn = _brute_graph(pts)
+        bg = _brute_graph(pts)
+        bn = bg.num_nodes
 
         def brute():
-            r = solve_mst(bg, bn, variant=variant)
+            r = brute_solver.solve(bg)
             mask = np.asarray(r.mst_mask)
             u = np.asarray(bg.src)[mask]
             v = np.asarray(bg.dst)[mask]

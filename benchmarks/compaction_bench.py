@@ -76,16 +76,16 @@ def compaction_rows(cells: Sequence[Tuple[str, int]] = DEFAULT_CELLS,
 
     rows = []
     for graph_name, k in cells:
-        g, v = _resolve(graph_name)
+        g = _resolve(graph_name)
 
         def base():
             return minimum_spanning_forest(
-                g, num_nodes=v, variant=variant
+                g, variant=variant
             ).total_weight.block_until_ready()
 
         def comp():
             return minimum_spanning_forest(
-                g, num_nodes=v, variant=variant, compaction=k
+                g, variant=variant, compaction=k
             ).total_weight.block_until_ready()
 
         base_us, comp_us, speedup = paired_time(base, comp, repeats)
@@ -93,7 +93,7 @@ def compaction_rows(cells: Sequence[Tuple[str, int]] = DEFAULT_CELLS,
                      base_us, ""))
         rows.append((f"compaction_single_{graph_name}_{variant}_k{k}",
                      comp_us, f"speedup_vs_off={speedup:.3f}"))
-        trace = live_edge_trace(g, v, variant=variant)
+        trace = live_edge_trace(g, variant=variant)
         rows.append((f"compaction_live_{graph_name}_{variant}", 0.0,
                      "live_per_round=" + "-".join(str(c) for c in trace)))
     return rows

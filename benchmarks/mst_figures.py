@@ -61,10 +61,10 @@ def fig1_sequential_optimization(graphs=DEFAULT_GRAPHS, repeats: int = 3):
 
     rows = []
     for name in graphs:
-        g, v = paper_graph(name, seed=0)
+        g = paper_graph(name, seed=0)
         t_unopt, t_opt, ratio = paired_time(
-            lambda: mst_unoptimized(g, v).total_weight.block_until_ready(),
-            lambda: mst_optimized(g, v).total_weight.block_until_ready(),
+            lambda: mst_unoptimized(g).total_weight.block_until_ready(),
+            lambda: mst_optimized(g).total_weight.block_until_ready(),
             repeats)
         improve = (1.0 - 1.0 / ratio) * 100.0
         rows.append((f"fig1_{name}_unopt", t_unopt, ""))
@@ -79,10 +79,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
 import jax
 from repro.graphs.generator import paper_graph
 from repro.core.distributed_mst import distributed_msf, make_flat_mesh
-g, v = paper_graph("%s", seed=0)
+g = paper_graph("%s", seed=0)
 mesh = make_flat_mesh(%d)
 def run():
-    r = distributed_msf(g, num_nodes=v, mesh=mesh, variant="%s")
+    r = distributed_msf(g, mesh=mesh, variant="%s")
     r.total_weight.block_until_ready()
     return r
 r = run()
@@ -113,10 +113,10 @@ def fig23_parallel_scaling(variant: str, graph: str = "Graph100K_6",
     from repro.core.mst import mst_optimized, mst_unoptimized
     from repro.graphs.generator import paper_graph
 
-    g, v = paper_graph(graph, seed=0)
-    t_unopt = _time(lambda: mst_unoptimized(g, v)
+    g = paper_graph(graph, seed=0)
+    t_unopt = _time(lambda: mst_unoptimized(g)
                     .total_weight.block_until_ready(), reps=2)
-    t_opt = _time(lambda: mst_optimized(g, v)
+    t_opt = _time(lambda: mst_optimized(g)
                   .total_weight.block_until_ready(), reps=2)
     rows = [(f"fig_{variant}_{graph}_seq_unopt", t_unopt, ""),
             (f"fig_{variant}_{graph}_seq_opt", t_opt, "")]

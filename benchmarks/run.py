@@ -18,16 +18,58 @@ JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
                          "BENCH_mst.json")
 
 
+def solver_cache_rows(graph_name: str, repeats: int):
+    """Plan-cache telemetry rows: trace count vs solve count on repeated
+    same-shape solves, per engine.
+
+    ``warm_hit_rate`` (plan hits / dispatches) is the retrace-regression
+    tripwire: a warm solver re-solving a seen shape must hit its plan
+    cache, so the rate is deterministic (N solves, 1 trace -> (N-1)/N) and
+    any engine change that starts re-tracing warm shapes drops it through
+    ``scripts/check_bench_regression.py``'s tolerance.
+    """
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.core import SolveOptions, make_solver
+    from repro.graphs.generator import PAPER_GRAPHS, generate_graph
+
+    n, deg = PAPER_GRAPHS[graph_name]
+    rows = []
+    for engine in ("single", "batched"):
+        solver = make_solver(SolveOptions(engine=engine))
+        solver.solve(generate_graph(n, deg, seed=0))  # cold: compiles
+        times = []
+        for s in range(1, repeats + 1):  # same shape, fresh weights
+            g = generate_graph(n, deg, seed=s)
+            t0 = time.perf_counter()
+            jax.block_until_ready(solver.solve(g))
+            times.append(time.perf_counter() - t0)
+        st = solver.stats
+        rows.append((
+            f"solver_cache_{engine}_{graph_name}",
+            float(np.median(times)) * 1e6,
+            f"traces={st.traces};solves={st.solves};"
+            f"warm_hit_rate={st.warm_hit_rate:.3f}"))
+    return rows
+
+
 def main() -> None:
+    from repro.core import ENGINES
+
+    engine_help = "; ".join(f"{name}: {spec.description}"
+                            for name, spec in sorted(ENGINES.items()))
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="include the 1M-vertex Table 1 classes")
     ap.add_argument("--scaling", action="store_true",
                     help="run fig2/3/4 multi-device scaling (subprocesses)")
     ap.add_argument("--graph", default="Graph100K_6")
-    ap.add_argument("--engine", default="single",
-                    help="MST engine registry name for the single-process "
-                         "comparison (repro.core.ENGINES)")
+    ap.add_argument("--engine", default="single", choices=sorted(ENGINES),
+                    help="MST engine for the single-process comparison — "
+                         + engine_help)
     ap.add_argument("--no-weak", action="store_true",
                     help="skip the sharded weak-scaling subprocess section")
     ap.add_argument("--json", action="store_true",
@@ -59,21 +101,30 @@ def main() -> None:
         rows += mst_figures.fig4_cas_vs_lock(args.graph)
     else:
         # single-process variant comparison (structural metrics + wall time)
-        # dispatched through the engine registry (--engine picks the path).
-        from repro.core import solve_mst
+        # through one planned solver per variant (--engine picks the path).
+        import jax
+
+        from repro.core import SolveOptions, make_solver
         from repro.graphs.generator import paper_graph
         gname = "Graph10K_6" if args.smoke else args.graph
-        g, v = paper_graph(gname, seed=0)
+        g = paper_graph(gname, seed=0)
         for variant in ("cas", "lock"):
-            fn = lambda: solve_mst(
-                g, v, engine=args.engine, variant=variant
-            ).total_weight.block_until_ready()
+            solver = make_solver(SolveOptions(engine=args.engine,
+                                              variant=variant))
+            # jax.block_until_ready handles both result flavours: device
+            # arrays (per-graph engines) and the lane-packed path's
+            # already-synced host arrays.
+            fn = lambda: jax.block_until_ready(solver.solve(g))
             us = mst_figures._time(fn, reps=args.repeats)
-            r = solve_mst(g, v, engine=args.engine, variant=variant)
+            r = solver.solve(g)
             rows.append((f"fig23_{gname}_{variant}_{args.engine}_1proc",
                          us,
                          f"rounds={int(r.num_rounds)};"
                          f"waves={int(r.num_waves)}"))
+    # Planned-solver plan-cache telemetry: deterministic retrace tripwire.
+    # Same graph class in smoke and full runs so the CI regression job
+    # always has a committed baseline key to compare.
+    rows += solver_cache_rows("Graph10K_6", repeats=max(args.repeats, 5))
     # Frontier compaction vs uncompacted, same engine (paired ratios), plus
     # the per-round live-edge decay traces.
     rows += compaction_bench.compaction_rows(

@@ -16,7 +16,7 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 
-from repro.core import solve_mst  # noqa: E402
+from repro.core import SolveOptions, make_solver  # noqa: E402
 from repro.core.distributed_mst import make_flat_mesh  # noqa: E402
 from repro.core.oracle import kruskal_numpy  # noqa: E402
 from repro.graphs.generator import generate_graph  # noqa: E402
@@ -27,9 +27,9 @@ def main():
     n_dev = 8
     print(f"devices: {len(jax.devices())}")
     mesh = make_flat_mesh(n_dev)
-    graph, v = generate_graph(50_000, 6, seed=0)
+    graph = generate_graph(50_000, 6, seed=0)
     oracle_mask, oracle_w, _ = kruskal_numpy(graph.src, graph.dst,
-                                             graph.weight, v)
+                                             graph.weight, graph.num_nodes)
     part = partition_edges(graph, n_dev)
     # distributed_msf replicates src+dst+order+weight (4 x 4 B/edge) on
     # every device, on top of its 3-array scan shard.
@@ -39,8 +39,9 @@ def main():
           f"({replicated / part.bytes_per_shard:.1f}x smaller)")
     for engine in ("distributed", "sharded"):
         for variant in ("cas", "lock"):
-            r = solve_mst(graph, v, engine=engine, variant=variant,
-                          mesh=mesh)
+            solver = make_solver(SolveOptions(engine=engine,
+                                              variant=variant, mesh=mesh))
+            r = solver.solve(graph)
             match = bool((np.asarray(r.mst_mask) == oracle_mask).all())
             print(f"{engine:12s} {variant:5s}: "
                   f"weight={float(r.total_weight):.1f} "

@@ -46,8 +46,8 @@ def main():
     dt = time.perf_counter() - t0
 
     # Spot-check one response against the Kruskal oracle.
-    g, v = reqs[0]
-    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, v)
+    g = reqs[0]
+    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, g.num_nodes)
     assert (responses[0].mst_mask == om).all()
     print(f"[mstserve] {len(responses)} requests in {dt * 1e3:.1f} ms "
           f"({len(responses) / dt:.1f} graphs/s cold) "
@@ -63,6 +63,9 @@ def main():
           f"{dt * 1e3:.2f} ms — cache hits {svc.stats.cache_hits}, "
           f"engine solves {svc.stats.engine_solves}, "
           f"cache size {svc.cache_len}")
+    st = svc.solver.stats
+    print(f"[mstserve] solver plan cache: {st.traces} traces for "
+          f"{st.batches} engine calls ({st.plan_hits} warm hits)")
 
 
 if __name__ == "__main__":

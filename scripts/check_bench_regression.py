@@ -24,9 +24,12 @@ import sys
 # Metrics where larger is better and the value is hardware-portable: all
 # are SAME-RUN ratios (A/B on one machine).  graphs_per_sec / points_per_sec
 # are absolute throughput and deliberately NOT here — a slower runner would
-# trip the threshold without any real regression.
+# trip the threshold without any real regression.  warm_hit_rate is the
+# planned solver's plan-cache hit fraction on repeated same-shape solves
+# (benchmarks/run.solver_cache_rows): deterministic, so any engine change
+# that starts re-tracing warm shapes drops it straight through tolerance.
 SPEEDUP_METRICS = ("speedup_vs_off", "speedup_vs_unopt", "speedup_vs_opt",
-                   "cas_speedup", "speedup_vs_bruteforce")
+                   "cas_speedup", "speedup_vs_bruteforce", "warm_hit_rate")
 
 _PAIR = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)=([-+0-9.eE]+)")
 

@@ -25,32 +25,32 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="Graph1M_9")
     args = ap.parse_args()
-    g, v = paper_graph(args.graph, seed=0)
-    print(f"graph {args.graph}: V={v} E={g.num_edges}")
+    g = paper_graph(args.graph, seed=0)
+    print(f"graph {args.graph}: V={g.num_nodes} E={g.num_edges}")
 
-    r = minimum_spanning_forest(g, num_nodes=v, variant="cas")
+    r = minimum_spanning_forest(g, variant="cas")
     print(f"cas engine: rounds={int(r.num_rounds)}")
 
     rows = {}
     rows["engine_cas(jit while, masked)"] = t(
-        lambda: minimum_spanning_forest(g, num_nodes=v, variant="cas")
+        lambda: minimum_spanning_forest(g, variant="cas")
         .total_weight.block_until_ready())
     rows["engine_cas(no covered mask)"] = t(
-        lambda: minimum_spanning_forest(g, num_nodes=v, variant="cas",
+        lambda: minimum_spanning_forest(g, variant="cas",
                                         track_covered=False)
         .total_weight.block_until_ready())
     rows["python_unopt (paper unoptimized)"] = t(
-        lambda: mst_unoptimized(g, v).total_weight.block_until_ready(),
+        lambda: mst_unoptimized(g).total_weight.block_until_ready(),
         reps=1)
     rows["python_opt (paper covered+compaction)"] = t(
-        lambda: mst_optimized(g, v).total_weight.block_until_ready(),
+        lambda: mst_optimized(g).total_weight.block_until_ready(),
         reps=1)
     for waves in (4, 16, 64):
-        rl = minimum_spanning_forest(g, num_nodes=v, variant="lock",
+        rl = minimum_spanning_forest(g, variant="lock",
                                      max_lock_waves=waves)
         rows[f"engine_lock(waves<={waves})"] = t(
             lambda: minimum_spanning_forest(
-                g, num_nodes=v, variant="lock", max_lock_waves=waves)
+                g, variant="lock", max_lock_waves=waves)
             .total_weight.block_until_ready())
         rows[f"engine_lock(waves<={waves})_meta"] = (
             int(rl.num_rounds), int(rl.num_waves))

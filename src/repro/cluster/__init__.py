@@ -5,8 +5,8 @@ engine registry:
 
     points (n, dim)
       -> kernels/knn_graph     blocked pairwise distances, top-k per row
-      -> cluster/emst          canonical candidate edges -> any ENGINES
-                               entry via solve_mst_many, k-doubling +
+      -> cluster/emst          canonical candidate edges -> one planned
+                               MSTSolver (any ENGINES entry), k-doubling +
                                exact-bridge escalation until spanning
       -> cluster/linkage       single-linkage dendrogram (weight-sorted
                                union-find), cut_k / cut_distance labels

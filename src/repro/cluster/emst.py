@@ -1,8 +1,8 @@
 """Euclidean MST via kNN candidate graphs + any registry engine.
 
 The pipeline (DESIGN.md §3a): ``knn_graph`` Pallas kernel builds a sparse
-candidate edge list from the point cloud, any registered Borůvka engine
-solves it through ``solve_mst_many``, and if the candidate forest does not
+candidate edge list from the point cloud, one planned ``MSTSolver`` (any
+registered engine) solves it, and if the candidate forest does not
 span, the request *escalates* — first by k-doubling (recompute the kNN
 graph with twice the neighbors), then, once doubling is exhausted, by
 appending each component's exact nearest cross-component pair (a Borůvka
@@ -27,14 +27,14 @@ Euclidean lengths for the dendrogram heights.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import solve_mst_many
+from repro.core import SolveOptions, make_solver
+from repro.core.solver import legacy_options
 from repro.core.types import Graph
 from repro.kernels.knn_graph.ops import knn_graph
 from repro.kernels.knn_graph.ref import pairwise_sq_dists
@@ -134,22 +134,35 @@ def euclidean_mst_many(
         clouds: Sequence[np.ndarray], *, k: int = DEFAULT_K,
         max_doublings: int = 4,
         solve_many_fn: Optional[Callable] = None,
-        engine: str = "single", variant: str = "cas", mesh=None,
-        compaction: int = 0) -> List[EMSTResult]:
+        options: Optional[SolveOptions] = None,
+        engine: Optional[str] = None, variant: Optional[str] = None,
+        mesh=None, compaction: Optional[int] = None) -> List[EMSTResult]:
     """Solve many point clouds, batching each escalation round's solves.
 
-    ``solve_many_fn([(graph, num_nodes), ...])`` must return per-request
+    ``solve_many_fn([graph, ...])`` (sized graphs) must return per-request
     results exposing ``mst_mask`` / ``parent`` / ``num_components`` —
-    ``solve_mst_many`` (default) and ``MSTService.solve_many`` both
-    qualify, which is how mstserve routes clustering through its
-    micro-batching queue.  Clouds still escalating are re-solved together
-    in the next round, so a batch of cold requests shares engine lanes all
-    the way down.
+    ``MSTSolver.solve_many`` and ``MSTService.solve_many`` both qualify,
+    which is how mstserve routes clustering through its micro-batching
+    queue.  When no hook is given, ONE planned solver is built from
+    ``options`` (or the legacy engine/variant keywords) and reused across
+    every escalation round — repeated candidate shapes hit its plan cache
+    instead of re-deriving dispatch per round.  Clouds still escalating
+    are re-solved together in the next round, so a batch of cold requests
+    shares engine lanes all the way down.
     """
+    legacy_kwargs = (engine, variant, mesh, compaction)
+    if (options is not None or solve_many_fn is not None) and any(
+            v is not None for v in legacy_kwargs):
+        # Same contract as make_solver/MSTService: a mixed call would
+        # silently drop the caller's explicit keywords.
+        raise TypeError("pass either options=/solve_many_fn= or the legacy "
+                        "engine/variant/mesh/compaction keywords, not both")
     if solve_many_fn is None:
-        solve_many_fn = functools.partial(solve_mst_many, engine=engine,
-                                          variant=variant, mesh=mesh,
-                                          compaction=compaction)
+        if options is None:
+            # Legacy keyword bag: same leniencies as the solve_mst shims.
+            options = legacy_options(engine or "single", variant or "cas",
+                                     mesh=mesh, compaction=compaction or 0)
+        solve_many_fn = make_solver(options).solve_many
     clouds = [np.asarray(c, np.float32) for c in clouds]
     out: List[Optional[EMSTResult]] = [None] * len(clouds)
     # Per-active-cloud escalation state.
@@ -170,8 +183,9 @@ def euclidean_mst_many(
             pts, s = clouds[i], state[i]
             u, v, w = candidate_edges(pts, s["k"], extra=s["extra"])
             edge_lists[i] = (u, v, w)
-            requests.append((Graph(jnp.asarray(u), jnp.asarray(v),
-                                   jnp.asarray(w)), pts.shape[0]))
+            requests.append(Graph(jnp.asarray(u), jnp.asarray(v),
+                                  jnp.asarray(w),
+                                  num_nodes=pts.shape[0]))
         results = solve_many_fn(requests)
         for i, r in zip(active, results):
             s = state[i]

@@ -1,188 +1,59 @@
 """Core library: the paper's parallel Borůvka MST, TPU-native.
 
-Six engines solve the same problem with one call shape; ``ENGINES`` is the
-registry every dispatcher (mstserve, benchmarks, examples, the conformance
-matrix) goes through:
+Public surface (the planned-solver API, DESIGN.md §1a):
 
-    ENGINES[name].solve(graph, num_nodes, variant="cas", mesh=None)
+    from repro.core import SolveOptions, make_solver
 
-``mesh`` is accepted by every engine (ignored by the single-device ones) so
-callers can dispatch uniformly; mesh-backed engines default to a 1-D mesh
-over all local devices when none is given.
+    solver = make_solver(SolveOptions(engine="single", variant="cas"))
+    result = solver.solve(graph)          # graph is sized: carries num_nodes
+    results = solver.solve_many(graphs)   # lane-packed on batched engines
+
+``SolveOptions`` validates eagerly against each engine's declared
+capabilities (``ENGINES`` registry, :class:`EngineSpec`); the solver owns
+per-shape-bucket plan caches with hit/trace counters, so warm re-solves of
+a seen shape provably skip retracing.  ``solve_mst`` / ``solve_mst_many``
+remain as thin compatibility shims over cached default solvers.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional, Tuple
-
-from repro.core.types import Graph, MSTResult, INT_SENTINEL
-from repro.core.engine import rank_edges
+from repro.core.types import (Graph, GraphLike, MSTResult, INT_SENTINEL,
+                              as_request, ensure_sized)
+from repro.core.engine import VARIANTS, rank_edges, validate_variant
 from repro.core.mst import (
     minimum_spanning_forest,
     mst_optimized,
     mst_unoptimized,
 )
 from repro.core.union_find import pointer_jump, count_components
-
-
-def _solve_single(graph: Graph, num_nodes: int, *, variant: str = "cas",
-                  mesh=None, compaction: int = 0) -> MSTResult:
-    return minimum_spanning_forest(graph, num_nodes=num_nodes,
-                                   variant=variant, compaction=compaction)
-
-
-def _solve_unopt_seq(graph: Graph, num_nodes: int, *, variant: str = "cas",
-                     mesh=None, compaction: int = 0) -> MSTResult:
-    # The §2.1 baseline rescans every edge by definition: compaction is a
-    # no-op here (accepted so the dispatch surface stays uniform).
-    return mst_unoptimized(graph, num_nodes, variant=variant)
-
-
-def _solve_opt_seq(graph: Graph, num_nodes: int, *, variant: str = "cas",
-                   mesh=None, compaction: int = 0) -> MSTResult:
-    # Host-side compaction every round is this engine's definition; the
-    # knob is accepted for dispatch uniformity.
-    return mst_optimized(graph, num_nodes, variant=variant)
-
-
-def _solve_batched(graph: Graph, num_nodes: int, *, variant: str = "cas",
-                   mesh=None, compaction: int = 0) -> MSTResult:
-    """One-lane batch through the vmapped engine, trimmed back to MSTResult."""
-    from repro.core.batched_mst import batched_msf, pack_padded
-
-    packed = pack_padded([(graph, num_nodes)],
-                         padded_edges=graph.num_edges,
-                         padded_nodes=num_nodes)
-    r = batched_msf(packed, num_nodes=num_nodes, variant=variant,
-                    compaction=compaction)
-    return MSTResult(parent=r.parent[0], mst_mask=r.mst_mask[0],
-                     num_rounds=r.num_rounds[0], num_waves=r.num_waves[0],
-                     total_weight=r.total_weight[0],
-                     num_components=r.num_components[0])
-
-
-def _default_mesh(mesh):
-    if mesh is not None:
-        return mesh
-    from repro.core.distributed_mst import make_flat_mesh
-    return make_flat_mesh()
-
-
-def _solve_distributed(graph: Graph, num_nodes: int, *, variant: str = "cas",
-                       mesh=None, compaction: int = 0) -> MSTResult:
-    from repro.core.distributed_mst import distributed_msf
-
-    return distributed_msf(graph, num_nodes=num_nodes,
-                           mesh=_default_mesh(mesh), variant=variant,
-                           compaction=compaction)
-
-
-def _solve_sharded(graph: Graph, num_nodes: int, *, variant: str = "cas",
-                   mesh=None, compaction: int = 0) -> MSTResult:
-    from repro.core.sharded_mst import sharded_msf
-
-    return sharded_msf(graph, num_nodes=num_nodes, mesh=_default_mesh(mesh),
-                       variant=variant, compaction=compaction)
-
-
-class EngineSpec(NamedTuple):
-    """One registered MST engine.
-
-    Attributes:
-      name: registry key.
-      solve: ``(graph, num_nodes, *, variant, mesh, compaction) ->
-        MSTResult``.  Every engine accepts ``compaction`` (frontier
-        compaction cadence in rounds, 0 = off); the sequential baselines
-        ignore it by definition.
-      needs_mesh: True when the engine runs real collectives (a mesh is
-        constructed over all local devices if the caller passes none).
-      description: one-line summary for --help texts and docs tables.
-    """
-
-    name: str
-    solve: Callable[..., MSTResult]
-    needs_mesh: bool
-    description: str
-
-
-ENGINES = {
-    spec.name: spec for spec in (
-        EngineSpec("single", _solve_single, False,
-                   "one jitted while_loop, cas/lock hooking (paper §2.2)"),
-        EngineSpec("unopt-seq", _solve_unopt_seq, False,
-                   "paper §2.1 baseline: rescans every edge per round"),
-        EngineSpec("opt-seq", _solve_opt_seq, False,
-                   "paper §2.1 optimized: covered-edge compaction"),
-        EngineSpec("batched", _solve_batched, False,
-                   "vmapped multi-graph engine, one-lane adapter"),
-        EngineSpec("distributed", _solve_distributed, True,
-                   "edge scan sharded, topology replicated, pmin merge"),
-        EngineSpec("sharded", _solve_sharded, True,
-                   "shard-local topology + owner-decode collective"),
-    )
-}
-
-
-def solve_mst(graph: Graph, num_nodes: int, *, engine: str = "single",
-              variant: str = "cas", mesh=None,
-              compaction: int = 0) -> MSTResult:
-    """Dispatch one MST solve through the engine registry."""
-    try:
-        spec = ENGINES[engine]
-    except KeyError:
-        raise ValueError(
-            f"unknown engine {engine!r}; known: {sorted(ENGINES)}") from None
-    return spec.solve(graph, num_nodes, variant=variant, mesh=mesh,
-                      compaction=compaction)
-
-
-def solve_mst_many(requests, *, engine: str = "single", variant: str = "cas",
-                   mesh=None, compaction: int = 0) -> list:
-    """Dispatch a list of ``(graph, num_nodes)`` solves through the registry.
-
-    The registry-level sibling of ``solve_mst`` for multi-graph callers
-    (the EMST clustering pipeline's escalation rounds, scripts): with
-    ``engine="batched"`` the requests are shape-bucketed and solved
-    lane-parallel through ``batched_msf``; every other engine solves per
-    request.  Returns per-request :class:`MSTResult` in input order, each
-    trimmed to its graph's true sizes.
-    """
-    requests = list(requests)
-    if engine != "batched":
-        return [solve_mst(g, v, engine=engine, variant=variant, mesh=mesh,
-                          compaction=compaction) for g, v in requests]
-    import jax
-    import numpy as np
-    from repro.core.batched_mst import batched_msf
-    from repro.graphs.batching import pack_graphs
-
-    out: list = [None] * len(requests)
-    for bucket in pack_graphs(requests):
-        res = batched_msf(bucket.graph, num_nodes=bucket.padded_nodes,
-                          variant=variant, compaction=compaction)
-        # One device->host transfer per bucket (not per lane per field) —
-        # the same contract as graphs/batching.unpack_results.
-        res_np = jax.device_get(res)
-        nn = np.asarray(bucket.graph.num_nodes)
-        ne = np.asarray(bucket.graph.num_edges)
-        for lane, orig in enumerate(bucket.indices):
-            v, e = int(nn[lane]), int(ne[lane])
-            out[orig] = MSTResult(parent=res_np.parent[lane, :v],
-                                  mst_mask=res_np.mst_mask[lane, :e],
-                                  num_rounds=res_np.num_rounds[lane],
-                                  num_waves=res_np.num_waves[lane],
-                                  total_weight=res_np.total_weight[lane],
-                                  num_components=res_np.num_components[lane])
-    return out
-
+from repro.core.registry import ENGINES, EngineSpec, validate_engine
+from repro.core.options import MESH_AUTO, SolveOptions
+from repro.core.solver import (MSTSolver, SolverStats, default_solver,
+                               make_solver, solve_mst, solve_mst_many)
 
 __all__ = [
+    # types
     "Graph",
+    "GraphLike",
     "MSTResult",
     "INT_SENTINEL",
+    "as_request",
+    "ensure_sized",
+    # registry + options
     "ENGINES",
     "EngineSpec",
+    "VARIANTS",
+    "MESH_AUTO",
+    "SolveOptions",
+    "validate_engine",
+    "validate_variant",
+    # planned solver + shims
+    "MSTSolver",
+    "SolverStats",
+    "make_solver",
+    "default_solver",
     "solve_mst",
     "solve_mst_many",
+    # engine entry points + shared blocks
     "minimum_spanning_forest",
     "mst_optimized",
     "mst_unoptimized",

@@ -24,16 +24,17 @@ to bound recompiles lives in ``graphs/batching.py``.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Sequence, Tuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import (boruvka_epoch, init_frontier,
-                               materialize_commits, scan_bucket_sizes)
+                               materialize_commits, scan_bucket_sizes,
+                               validate_variant)
 from repro.core.mst import boruvka_round, rank_edges, _init_state
-from repro.core.types import Graph
+from repro.core.types import GraphLike, as_request
 from repro.core.union_find import count_components
 
 PAD_WEIGHT = jnp.float32(jnp.inf)  # sorts after every real weight
@@ -80,9 +81,10 @@ class BatchedMSTResult(NamedTuple):
     num_components: jnp.ndarray  # (B,) pad-singleton corrected
 
 
-def pack_padded(graphs: Sequence[Tuple[Graph, int]], *, padded_edges: int,
+def pack_padded(graphs: Sequence[GraphLike], *, padded_edges: int,
                 padded_nodes: int) -> BatchedGraph:
-    """Stack ``(graph, num_nodes)`` pairs into one padded BatchedGraph.
+    """Stack sized graphs (or legacy ``(graph, num_nodes)`` pairs) into one
+    padded BatchedGraph.
 
     Host-side (numpy) construction; callers wanting automatic power-of-two
     bucketing should go through ``graphs.batching.pack_graphs``.
@@ -93,7 +95,9 @@ def pack_padded(graphs: Sequence[Tuple[Graph, int]], *, padded_edges: int,
     weight = np.full((b, padded_edges), np.inf, np.float32)
     nn = np.zeros((b,), np.int32)
     ne = np.zeros((b,), np.int32)
-    for i, (g, v) in enumerate(graphs):
+    for i, item in enumerate(graphs):
+        g = as_request(item)
+        v = g.num_nodes
         e = g.num_edges
         if e > padded_edges or v > padded_nodes:
             raise ValueError(f"graph {i} ({v}V/{e}E) exceeds bucket "
@@ -135,6 +139,7 @@ def batched_msf(batch: BatchedGraph, *, num_nodes: int,
     Returns per-lane results; lane i is only meaningful up to
     ``batch.num_nodes[i]`` / ``batch.num_edges[i]``.
     """
+    validate_variant(variant)
     if compaction and not track_covered:
         raise ValueError("compaction requires track_covered=True "
                          "(the covered bit IS the live/dead partition key)")

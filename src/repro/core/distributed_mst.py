@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.types import Graph, MSTResult, INT_SENTINEL
+from repro.core.types import Graph, MSTResult, INT_SENTINEL, ensure_sized
 from repro.core.engine import (
     BoruvkaState,
     hook_cas,
@@ -43,6 +43,7 @@ from repro.core.engine import (
     scan_bucket_index,
     scan_bucket_sizes,
     shard_map_compat,
+    validate_variant,
 )
 from repro.core.union_find import pointer_jump, count_components
 
@@ -54,7 +55,7 @@ def _pad_to(x, n, fill):
     return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
 
 
-def distributed_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
+def distributed_msf(graph: Graph, *, num_nodes: int = None, mesh: Mesh,
                     axis: str = "data", variant: str = "cas",
                     max_lock_waves: int = 16,
                     compaction: int = 0) -> MSTResult:
@@ -69,6 +70,9 @@ def distributed_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
 
     Returns replicated outputs identical to the single-device engine.
     """
+    graph = ensure_sized(graph, num_nodes)
+    num_nodes = graph.num_nodes
+    validate_variant(variant)
     n_shards = mesh.shape[axis]
     e = graph.num_edges
     e_pad = -(-e // n_shards) * n_shards

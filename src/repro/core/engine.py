@@ -43,6 +43,20 @@ import numpy as np
 from repro.core.types import Graph, MSTResult, INT_SENTINEL
 from repro.core.union_find import pointer_jump, count_components
 
+# The paper's two synchronization schemes — the only hooking variants any
+# engine implements.  Every dispatch entry validates against this tuple
+# eagerly (a typo'd variant used to fail opaquely inside the round
+# machinery, mid-trace).
+VARIANTS = ("cas", "lock")
+
+
+def validate_variant(variant: str) -> str:
+    """Eagerly reject unknown hooking variants with the known set listed."""
+    if variant not in VARIANTS:
+        raise ValueError(
+            f"unknown variant {variant!r}; known: {list(VARIANTS)}")
+    return variant
+
 
 # ---------------------------------------------------------------------------
 # shard_map compatibility (jax 0.4.x exposes it under jax.experimental).

@@ -42,7 +42,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import Graph, MSTResult, INT_SENTINEL
+from repro.core.types import Graph, MSTResult, INT_SENTINEL, ensure_sized
 from repro.core.engine import (  # noqa: F401  (re-exported API)
     BoruvkaState,
     Frontier,
@@ -62,6 +62,7 @@ from repro.core.engine import (  # noqa: F401  (re-exported API)
     rank_edges_host,
     resolve_candidates,
     scan_bucket_sizes,
+    validate_variant,
 )
 
 # Backward-compatible aliases (pre-engine-extraction names).
@@ -73,7 +74,7 @@ _finish = finish_result
 # Single-device engines.
 # ---------------------------------------------------------------------------
 
-def minimum_spanning_forest(graph: Graph, *, num_nodes: int,
+def minimum_spanning_forest(graph: Graph, *, num_nodes: int = None,
                             variant: str = "cas",
                             track_covered: bool = True,
                             max_lock_waves: int = 16,
@@ -86,8 +87,9 @@ def minimum_spanning_forest(graph: Graph, *, num_nodes: int,
     fixed per-solve cost); everything after is one jitted call.
 
     Args:
-      graph: edge-list graph (static shapes).
-      num_nodes: V (static).
+      graph: edge-list graph (static shapes), preferably sized
+        (``Graph(..., num_nodes=V)``).
+      num_nodes: V (static); only needed for legacy unsized graphs.
       variant: "cas" (one-phase scatter hooking, paper §2.2.2) or
                "lock" (two-phase propose-verify matching, paper §2.2.1).
       track_covered: keep the paper's ``covered`` bit so later rounds mask
@@ -102,8 +104,10 @@ def minimum_spanning_forest(graph: Graph, *, num_nodes: int,
                Pallas stream-compaction kernel (``kernels/compact_edges``)
                instead of the jnp cumsum path.
     """
+    graph = ensure_sized(graph, num_nodes)
+    validate_variant(variant)
     rank, order = rank_edges_host(graph.weight)
-    return _msf_jit(graph, rank, order, num_nodes=num_nodes,
+    return _msf_jit(graph, rank, order, num_nodes=graph.num_nodes,
                     variant=variant, track_covered=track_covered,
                     max_lock_waves=max_lock_waves, compaction=compaction,
                     compaction_kernel=compaction_kernel)
@@ -172,7 +176,7 @@ def _one_round_jit(state, scan_src, scan_dst, scan_rank, full_src, full_dst,
                          track_covered=track_covered, num_nodes=num_nodes)
 
 
-def live_edge_trace(graph: Graph, num_nodes: int, *,
+def live_edge_trace(graph: Graph, num_nodes: int = None, *,
                     variant: str = "cas") -> list:
     """Per-round live (non-covered) edge counts — the frontier-decay signal.
 
@@ -181,6 +185,9 @@ def live_edge_trace(graph: Graph, num_nodes: int, *,
     prefix tracks, so this is both the EXPERIMENTS.md decay table and the
     monotonicity oracle for the hypothesis property test.
     """
+    graph = ensure_sized(graph, num_nodes)
+    num_nodes = graph.num_nodes
+    validate_variant(variant)
     rank, order = rank_edges_host(graph.weight)
     e = graph.num_edges
     state = init_state(num_nodes, e, e)
@@ -198,13 +205,13 @@ def live_edge_trace(graph: Graph, num_nodes: int, *,
     return counts
 
 
-def mst_unoptimized(graph: Graph, num_nodes: int,
+def mst_unoptimized(graph: Graph, num_nodes: int = None,
                     variant: str = "cas") -> MSTResult:
     """Paper §2.1 sequential Borůvka: every round rescans *all* edges."""
     return _python_loop(graph, num_nodes, variant=variant, compact=False)
 
 
-def mst_optimized(graph: Graph, num_nodes: int,
+def mst_optimized(graph: Graph, num_nodes: int = None,
                   variant: str = "cas") -> MSTResult:
     """Paper §2.1 optimized sequential: covered edges are skipped, realized
     vectorized as compaction - masking alone saves no vector work; dropping
@@ -212,8 +219,11 @@ def mst_optimized(graph: Graph, num_nodes: int,
     return _python_loop(graph, num_nodes, variant=variant, compact=True)
 
 
-def _python_loop(graph: Graph, num_nodes: int, *, variant: str,
+def _python_loop(graph: Graph, num_nodes, *, variant: str,
                  compact: bool) -> MSTResult:
+    graph = ensure_sized(graph, num_nodes)
+    num_nodes = graph.num_nodes
+    validate_variant(variant)
     rank, order = rank_edges_host(graph.weight)
     e_full = graph.num_edges
     state = init_state(num_nodes, e_full, e_full)

@@ -1,0 +1,118 @@
+"""Validated solve configuration — the planned-solver API's option record.
+
+The paper's whole contribution is comparing *configurations* of one Borůvka
+solve (lock vs CAS hooking, unoptimized vs optimized scan).  Before this
+module that configuration was a loose keyword bag re-declared by every
+engine closure, the serving layer, the clustering pipeline, and every
+benchmark; a typo'd variant failed opaquely inside the round machinery and
+a mesh mismatch surfaced mid-trace.  :class:`SolveOptions` freezes the
+configuration once and validates it *eagerly* against the registry's
+declared :class:`~repro.core.registry.EngineSpec` capabilities: unknown
+engine/variant, an impossible mesh policy, or a compaction request the
+engine cannot honor all raise ``ValueError`` at construction.
+
+``SolveOptions`` is hashable (it keys the module-level default-solver cache
+behind the ``solve_mst`` shims) and is the single argument of
+``make_solver``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+from jax.sharding import Mesh
+
+from repro.core.engine import validate_variant
+from repro.core.registry import ENGINES, EngineSpec, validate_engine
+
+# Mesh policy sentinel: build a 1-D mesh over all local devices at first
+# use (and reuse it for the solver's lifetime).  ``None`` means "no mesh",
+# which a needs_mesh engine rejects at construction.
+MESH_AUTO = "auto"
+
+MeshPolicy = Union[str, None, Mesh]
+
+
+@dataclasses.dataclass(frozen=True)
+class SolveOptions:
+    """Frozen, validated MST solve configuration (configure once, run many).
+
+    Attributes:
+      engine: registry name (``repro.core.ENGINES``).
+      variant: Borůvka hooking scheme, "cas" or "lock" (paper §2.2).
+      compaction: frontier-compaction cadence in rounds, 0 = off.  Only
+        engines declaring ``honors_compaction`` accept a nonzero cadence —
+        the sequential baselines never/always compact by definition, and a
+        cadence there is a configuration bug, not a no-op.
+      compaction_kernel: route the live-prefix permutation through the
+        Pallas stream-compaction kernel; requires ``compaction > 0`` and an
+        engine declaring ``supports_compaction_kernel``.
+      mesh: mesh policy — :data:`MESH_AUTO` (default; mesh engines build a
+        1-D mesh over all local devices once, at first solve), a concrete
+        ``jax.sharding.Mesh``, or ``None`` (explicitly no mesh — rejected
+        at construction for engines that need one, ignored otherwise).
+      max_batch: lane cap per packed engine call for lane-parallel engines
+        (None = unbounded); bounds padded-batch memory under bursty load.
+    """
+
+    engine: str = "single"
+    variant: str = "cas"
+    compaction: int = 0
+    compaction_kernel: bool = False
+    mesh: MeshPolicy = MESH_AUTO
+    max_batch: Optional[int] = None
+
+    def __post_init__(self):
+        spec = validate_engine(self.engine)
+        validate_variant(self.variant)
+        object.__setattr__(self, "compaction", int(self.compaction))
+        if self.compaction < 0:
+            raise ValueError(
+                f"compaction must be >= 0 (rounds between packs; 0 = off), "
+                f"got {self.compaction}")
+        if self.compaction and not spec.honors_compaction:
+            honoring = sorted(n for n, s in ENGINES.items()
+                              if s.honors_compaction)
+            raise ValueError(
+                f"engine {self.engine!r} does not honor a compaction "
+                f"cadence (the sequential baselines never/always compact "
+                f"by definition); engines that do: {honoring}")
+        if self.compaction_kernel:
+            if not self.compaction:
+                raise ValueError(
+                    "compaction_kernel=True requires compaction > 0 "
+                    "(the kernel replaces the live-prefix permutation, "
+                    "which only runs when a cadence is set)")
+            if not spec.supports_compaction_kernel:
+                supporting = sorted(n for n, s in ENGINES.items()
+                                    if s.supports_compaction_kernel)
+                raise ValueError(
+                    f"engine {self.engine!r} has no Pallas stream-compaction "
+                    f"path; engines that do: {supporting}")
+        if not (self.mesh is None or self.mesh == MESH_AUTO
+                or isinstance(self.mesh, Mesh)):
+            raise ValueError(
+                f"mesh must be 'auto', None, or a jax.sharding.Mesh, "
+                f"got {self.mesh!r}")
+        if spec.needs_mesh and self.mesh is None:
+            raise ValueError(
+                f"engine {self.engine!r} needs a mesh but mesh=None was "
+                f"passed; use mesh='auto' (1-D mesh over all local "
+                f"devices) or pass a jax.sharding.Mesh")
+        if self.max_batch is not None:
+            object.__setattr__(self, "max_batch", int(self.max_batch))
+            if self.max_batch < 1:
+                raise ValueError(f"max_batch must be >= 1 or None, "
+                                 f"got {self.max_batch}")
+
+    @property
+    def spec(self) -> EngineSpec:
+        """The registry entry this configuration dispatches to."""
+        return ENGINES[self.engine]
+
+    def replace(self, **changes) -> "SolveOptions":
+        """Validated copy-with-changes (re-runs the capability checks)."""
+        return dataclasses.replace(self, **changes)
+
+
+__all__ = ["SolveOptions", "MESH_AUTO", "MeshPolicy"]

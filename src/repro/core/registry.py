@@ -1,0 +1,161 @@
+"""MST engine registry: one call shape, six engines, declared capabilities.
+
+Every engine solves the same problem through the uniform entry
+
+    ENGINES[name].solve(graph, variant=..., mesh=..., compaction=...,
+                        compaction_kernel=...)
+
+where ``graph`` is a *sized* :class:`repro.core.types.Graph` (it carries
+``num_nodes``).  ``mesh`` is accepted by every engine (ignored by the
+single-device ones) so callers can dispatch uniformly; mesh-backed engines
+default to a 1-D mesh over all local devices when none is given.
+
+:class:`EngineSpec` additionally *declares* what each engine can do
+(``needs_mesh`` / ``supports_batched_lanes`` / ``honors_compaction`` /
+``supports_compaction_kernel``) so :class:`repro.core.options.SolveOptions`
+can validate a configuration eagerly — at construction, not deep inside a
+jit trace.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+from repro.core.engine import validate_variant
+from repro.core.types import Graph, MSTResult
+from repro.core.mst import (
+    minimum_spanning_forest,
+    mst_optimized,
+    mst_unoptimized,
+)
+
+
+def _solve_single(graph: Graph, *, variant: str = "cas", mesh=None,
+                  compaction: int = 0,
+                  compaction_kernel: bool = False) -> MSTResult:
+    return minimum_spanning_forest(graph, variant=variant,
+                                   compaction=compaction,
+                                   compaction_kernel=compaction_kernel)
+
+
+def _solve_unopt_seq(graph: Graph, *, variant: str = "cas", mesh=None,
+                     compaction: int = 0,
+                     compaction_kernel: bool = False) -> MSTResult:
+    # The §2.1 baseline rescans every edge by definition: compaction is a
+    # no-op here (``honors_compaction=False`` lets validation say so).
+    return mst_unoptimized(graph, variant=variant)
+
+
+def _solve_opt_seq(graph: Graph, *, variant: str = "cas", mesh=None,
+                   compaction: int = 0,
+                   compaction_kernel: bool = False) -> MSTResult:
+    # Host-side compaction every round is this engine's definition.
+    return mst_optimized(graph, variant=variant)
+
+
+def _solve_batched(graph: Graph, *, variant: str = "cas", mesh=None,
+                   compaction: int = 0,
+                   compaction_kernel: bool = False) -> MSTResult:
+    """One-lane batch through the vmapped engine, trimmed back to MSTResult.
+
+    The registry-level adapter pads to the exact request shape; the planned
+    solver (``core/solver.py``) instead lane-packs through the pow2 shape
+    buckets, which is the path serving traffic takes.
+    """
+    from repro.core.batched_mst import batched_msf, pack_padded
+
+    v = graph.num_nodes
+    packed = pack_padded([graph], padded_edges=graph.num_edges,
+                         padded_nodes=v)
+    r = batched_msf(packed, num_nodes=v, variant=variant,
+                    compaction=compaction)
+    return MSTResult(parent=r.parent[0], mst_mask=r.mst_mask[0],
+                     num_rounds=r.num_rounds[0], num_waves=r.num_waves[0],
+                     total_weight=r.total_weight[0],
+                     num_components=r.num_components[0])
+
+
+def _default_mesh(mesh):
+    if mesh is not None:
+        return mesh
+    from repro.core.distributed_mst import make_flat_mesh
+    return make_flat_mesh()
+
+
+def _solve_distributed(graph: Graph, *, variant: str = "cas", mesh=None,
+                       compaction: int = 0,
+                       compaction_kernel: bool = False) -> MSTResult:
+    from repro.core.distributed_mst import distributed_msf
+
+    return distributed_msf(graph, mesh=_default_mesh(mesh), variant=variant,
+                           compaction=compaction)
+
+
+def _solve_sharded(graph: Graph, *, variant: str = "cas", mesh=None,
+                   compaction: int = 0,
+                   compaction_kernel: bool = False) -> MSTResult:
+    from repro.core.sharded_mst import sharded_msf
+
+    return sharded_msf(graph, mesh=_default_mesh(mesh), variant=variant,
+                       compaction=compaction)
+
+
+class EngineSpec(NamedTuple):
+    """One registered MST engine, with declared capabilities.
+
+    Attributes:
+      name: registry key.
+      solve: ``(graph, *, variant, mesh, compaction, compaction_kernel) ->
+        MSTResult`` over a sized Graph.
+      needs_mesh: True when the engine runs real collectives (a mesh is
+        constructed over all local devices if the caller passes none).
+      description: one-line summary for --help texts and docs tables.
+      supports_batched_lanes: the engine can solve many graphs lane-parallel
+        (``solve_many`` shape-buckets and packs instead of looping).
+      honors_compaction: the ``compaction`` cadence changes the scan path
+        (the sequential baselines either never or always compact, by
+        definition, so a caller asking them for a cadence is a config bug).
+      supports_compaction_kernel: the Pallas stream-compaction kernel can
+        replace the jnp live-prefix permutation.
+    """
+
+    name: str
+    solve: Callable[..., MSTResult]
+    needs_mesh: bool
+    description: str
+    supports_batched_lanes: bool = False
+    honors_compaction: bool = False
+    supports_compaction_kernel: bool = False
+
+
+ENGINES = {
+    spec.name: spec for spec in (
+        EngineSpec("single", _solve_single, False,
+                   "one jitted while_loop, cas/lock hooking (paper §2.2)",
+                   honors_compaction=True, supports_compaction_kernel=True),
+        EngineSpec("unopt-seq", _solve_unopt_seq, False,
+                   "paper §2.1 baseline: rescans every edge per round"),
+        EngineSpec("opt-seq", _solve_opt_seq, False,
+                   "paper §2.1 optimized: covered-edge compaction"),
+        EngineSpec("batched", _solve_batched, False,
+                   "vmapped multi-graph engine, lane-packed solves",
+                   supports_batched_lanes=True, honors_compaction=True),
+        EngineSpec("distributed", _solve_distributed, True,
+                   "edge scan sharded, topology replicated, pmin merge",
+                   honors_compaction=True),
+        EngineSpec("sharded", _solve_sharded, True,
+                   "shard-local topology + owner-decode collective",
+                   honors_compaction=True),
+    )
+}
+
+
+def validate_engine(engine: str) -> EngineSpec:
+    """Eagerly resolve a registry name, listing the known set on failure."""
+    try:
+        return ENGINES[engine]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {engine!r}; known: {sorted(ENGINES)}") from None
+
+
+__all__ = ["ENGINES", "EngineSpec", "validate_engine", "validate_variant"]

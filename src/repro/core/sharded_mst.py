@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.types import Graph, MSTResult, INT_SENTINEL
+from repro.core.types import Graph, MSTResult, INT_SENTINEL, ensure_sized
 from repro.core.engine import (
     BoruvkaState,
     Frontier,
@@ -52,6 +52,7 @@ from repro.core.engine import (
     scan_bucket_index,
     scan_bucket_sizes,
     shard_map_compat,
+    validate_variant,
 )
 from repro.core.union_find import pointer_jump, count_components
 from repro.graphs.partition_edges import (EdgePartition, flatten_partition,
@@ -77,7 +78,7 @@ def shard_topology(part: EdgePartition, mesh: Mesh, axis: str = "data"):
                  flatten_partition(part))
 
 
-def sharded_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
+def sharded_msf(graph: Graph, *, num_nodes: int = None, mesh: Mesh,
                 axis: str = "data", variant: str = "cas",
                 max_lock_waves: int = 16,
                 partition: Optional[EdgePartition] = None,
@@ -102,6 +103,9 @@ def sharded_msf(graph: Graph, *, num_nodes: int, mesh: Mesh,
 
     Returns replicated outputs identical to the single-device engine.
     """
+    graph = ensure_sized(graph, num_nodes)
+    num_nodes = graph.num_nodes
+    validate_variant(variant)
     n_shards = mesh.shape[axis]
     e = graph.num_edges
     part = partition if partition is not None else partition_edges(

@@ -1,0 +1,285 @@
+"""Planned MST solver: configure once, solve many, never re-trace warm.
+
+``make_solver(SolveOptions(...)) -> MSTSolver`` is the public solve surface
+(Sanders & Schimek's engineering papers and the serving north-star converge
+on the same shape: a solver object configured once, then run over many
+graphs).  The solver owns
+
+  * the resolved engine dispatch — registry lookup, variant/capability
+    validation, and (for mesh engines) the mesh itself happen ONCE at
+    construction, not per call;
+  * a **per-shape-bucket plan cache**: each distinct solve shape builds one
+    ready-to-call plan closure with every static argument bound, so warm
+    re-solves of a seen shape are a dict hit straight into the engine's
+    jitted computation (the plan key mirrors the jit cache key — statics
+    are fixed per solver, so plan-cache entries and engine traces are
+    1:1);
+  * hit/trace counters (:class:`SolverStats`) that make "a warm solver
+    re-solving an identical shape records 0 new traces" an *assertable*
+    property — tests pin it, and the bench harness exports it to
+    BENCH_mst.json so retrace regressions trip CI.
+
+``solve_mst`` / ``solve_mst_many`` remain as thin compatibility shims over
+a module-level cache of default solvers keyed by options.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from jax.sharding import Mesh
+
+from repro.core.options import MESH_AUTO, SolveOptions
+from repro.core.registry import ENGINES
+from repro.core.types import Graph, GraphLike, MSTResult, as_request, \
+    ensure_sized
+
+
+@dataclasses.dataclass
+class SolverStats:
+    """Plan-cache telemetry for one :class:`MSTSolver`.
+
+    Attributes:
+      solves: graphs solved through this solver (lanes, not engine calls).
+      batches: engine invocations (== solves for per-graph engines; one per
+        packed shape bucket for lane-parallel engines).
+      traces: plan-cache misses — distinct shape buckets this solver has
+        compiled a plan for.  A warm solver re-solving a seen shape must
+        not grow this.
+      plan_hits: plan-cache hits — dispatches served by an existing plan.
+      shapes: solve count per plan key.
+    """
+
+    solves: int = 0
+    batches: int = 0
+    traces: int = 0
+    plan_hits: int = 0
+    shapes: Dict[tuple, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def warm_hit_rate(self) -> float:
+        """Fraction of engine dispatches served by an existing plan."""
+        total = self.traces + self.plan_hits
+        return self.plan_hits / total if total else 0.0
+
+
+class MSTSolver:
+    """A planned solver: one validated configuration, many solves.
+
+    Built by :func:`make_solver`; see the module docstring.  Thread-compat
+    with the engines it wraps (everything host-side is plain dict caching).
+    """
+
+    def __init__(self, options: SolveOptions):
+        if not isinstance(options, SolveOptions):
+            raise TypeError(
+                f"make_solver takes a SolveOptions, got "
+                f"{type(options).__name__}")
+        self.options = options
+        self.spec = options.spec
+        self.stats = SolverStats()
+        self._plans: Dict[tuple, object] = {}
+        # Only a concrete Mesh is kept; the 'auto' policy resolves lazily.
+        self._mesh = options.mesh if isinstance(options.mesh, Mesh) else None
+
+    # -- mesh policy --------------------------------------------------------
+
+    @property
+    def mesh(self):
+        """The mesh this solver runs collectives over (None for
+        single-device engines).
+
+        Resolved once: under ``mesh='auto'`` the first access builds a 1-D
+        mesh over all local devices and every later solve reuses it — the
+        keyword-bag API rebuilt a fresh Mesh on every call.
+        """
+        if self._mesh is None and self.spec.needs_mesh:
+            from repro.core.distributed_mst import make_flat_mesh
+            self._mesh = make_flat_mesh()
+        return self._mesh
+
+    # -- plan cache ---------------------------------------------------------
+
+    def _plan(self, key: tuple, build):
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = self._plans[key] = build()
+            self.stats.traces += 1
+        else:
+            self.stats.plan_hits += 1
+        self.stats.shapes[key] = self.stats.shapes.get(key, 0) + 1
+        return plan
+
+    def _graph_plan(self, graph: Graph):
+        """Per-(E, V) plan for the per-graph engines: all statics bound."""
+        opts = self.options
+
+        def build():
+            solve, mesh = self.spec.solve, self.mesh
+
+            def plan(g: Graph) -> MSTResult:
+                return solve(g, variant=opts.variant, mesh=mesh,
+                             compaction=opts.compaction,
+                             compaction_kernel=opts.compaction_kernel)
+            return plan
+
+        return self._plan((graph.num_edges, graph.num_nodes), build)
+
+    def _bucket_plan(self, batch_size: int, padded_edges: int,
+                     padded_nodes: int):
+        """Per-(B, E_pad, V_pad) plan for the lane-parallel engine."""
+        opts = self.options
+
+        def build():
+            from repro.core.batched_mst import batched_msf
+
+            def plan(batched_graph):
+                return batched_msf(batched_graph, num_nodes=padded_nodes,
+                                   variant=opts.variant,
+                                   compaction=opts.compaction)
+            return plan
+
+        return self._plan((batch_size, padded_edges, padded_nodes), build)
+
+    # -- solving ------------------------------------------------------------
+
+    def solve(self, graph: Graph,
+              num_nodes: Optional[int] = None) -> MSTResult:
+        """Solve one sized graph (``num_nodes`` only for legacy unsized
+        graphs)."""
+        graph = ensure_sized(graph, num_nodes)
+        if self.spec.supports_batched_lanes:
+            return self.solve_many([graph])[0]
+        self.stats.solves += 1
+        self.stats.batches += 1
+        return self._graph_plan(graph)(graph)
+
+    def solve_many(self, requests: Sequence[GraphLike]) -> List[MSTResult]:
+        """Solve a request list; per-request results in input order.
+
+        Lane-parallel engines shape-bucket the list (pow2 padding,
+        ``options.max_batch`` lane cap) and solve each bucket in one engine
+        call; every other engine solves per request through its plan cache.
+        Lane-packed results are trimmed to each graph's true sizes and are
+        therefore *host* (numpy) arrays, already synced — callers timing a
+        solve should use ``jax.block_until_ready(result)``, which handles
+        both flavours.
+        """
+        graphs = [as_request(r) for r in requests]
+        if not self.spec.supports_batched_lanes:
+            return [self.solve(g) for g in graphs]
+
+        from repro.graphs.batching import pack_graphs, unpack_results_mst
+
+        buckets = pack_graphs(graphs, max_batch=self.options.max_batch)
+        results = [self.solve_packed(b) for b in buckets]
+        return unpack_results_mst(buckets, results)
+
+    def solve_packed(self, bucket):
+        """Solve one pre-packed shape bucket (``graphs.batching
+        .PackedBucket``) through the plan cache; returns the padded
+        :class:`~repro.core.batched_mst.BatchedMSTResult`.
+
+        The serving layer packs with its own micro-batching policy and
+        calls this directly so queue/bucket accounting stays in the
+        service while compile caching stays in the solver.
+        """
+        if not self.spec.supports_batched_lanes:
+            raise ValueError(
+                f"engine {self.options.engine!r} has no lane-parallel path; "
+                f"use solve()/solve_many()")
+        self.stats.solves += len(bucket.indices)
+        self.stats.batches += 1
+        plan = self._bucket_plan(len(bucket.indices), bucket.padded_edges,
+                                 bucket.padded_nodes)
+        return plan(bucket.graph)
+
+    def __repr__(self) -> str:
+        return (f"MSTSolver({self.options!r}, traces={self.stats.traces}, "
+                f"plan_hits={self.stats.plan_hits})")
+
+
+def make_solver(options: Optional[SolveOptions] = None,
+                **kwargs) -> MSTSolver:
+    """Build a planned solver.
+
+    Pass a :class:`SolveOptions`, or its fields as keywords::
+
+        solver = make_solver(SolveOptions(engine="batched", variant="lock"))
+        solver = make_solver(engine="batched", variant="lock")
+
+    Validation (unknown engine/variant, impossible mesh policy, capability
+    mismatches) happens here, eagerly — not at the first solve.
+    """
+    if options is None:
+        options = SolveOptions(**kwargs)
+    elif kwargs:
+        raise TypeError("pass either a SolveOptions or keyword fields, "
+                        "not both")
+    return MSTSolver(options)
+
+
+# ---------------------------------------------------------------------------
+# Compatibility shims: the keyword-bag entry points, now thin wrappers over
+# a module-level cache of default solvers (one per distinct options value).
+# ---------------------------------------------------------------------------
+
+_DEFAULT_SOLVERS: Dict[SolveOptions, MSTSolver] = {}
+
+
+def default_solver(options: SolveOptions) -> MSTSolver:
+    """The shared solver for ``options`` (shims and one-off callers reuse
+    plan caches instead of rebuilding dispatch per call)."""
+    solver = _DEFAULT_SOLVERS.get(options)
+    if solver is None:
+        solver = _DEFAULT_SOLVERS[options] = MSTSolver(options)
+    return solver
+
+
+def legacy_options(engine: str, variant: str, mesh=None,
+                   compaction: int = 0,
+                   max_batch: Optional[int] = None) -> SolveOptions:
+    """Fold the legacy keyword bag into a validated ``SolveOptions``.
+
+    Keeps the old surface's documented leniencies so the deprecation path
+    (``solve_mst``, ``MSTService(engine=...)``, ``euclidean_mst_many``'s
+    engine keywords) cannot change behaviour: a compaction cadence on an
+    engine that ignores it is dropped as the no-op it always was, and
+    ``mesh=None`` means "build one" (the old default), not "no mesh".
+    """
+    spec = ENGINES.get(engine)
+    if spec is not None and not spec.honors_compaction:
+        compaction = 0
+    return SolveOptions(engine=engine, variant=variant,
+                        compaction=compaction,
+                        mesh=mesh if mesh is not None else MESH_AUTO,
+                        # Old surface: any falsy cap meant "unbounded".
+                        max_batch=max_batch or None)
+
+
+def solve_mst(graph: Graph, num_nodes: Optional[int] = None, *,
+              engine: str = "single", variant: str = "cas", mesh=None,
+              compaction: int = 0) -> MSTResult:
+    """Dispatch one MST solve through a cached default solver.
+
+    Compatibility shim over ``make_solver(...).solve(...)`` — bit-identical
+    results (asserted across the conformance families by
+    ``tests/test_api.py``).  New code should build an
+    :class:`MSTSolver` and reuse it.
+    """
+    opts = legacy_options(engine, variant, mesh, compaction)
+    return default_solver(opts).solve(graph, num_nodes)
+
+
+def solve_mst_many(requests: Sequence[GraphLike], *, engine: str = "single",
+                   variant: str = "cas", mesh=None,
+                   compaction: int = 0) -> List[MSTResult]:
+    """Dispatch a list of solves (sized graphs or legacy ``(graph, V)``
+    pairs) through a cached default solver; see :meth:`MSTSolver
+    .solve_many`."""
+    opts = legacy_options(engine, variant, mesh, compaction)
+    return default_solver(opts).solve_many(list(requests))
+
+
+__all__ = ["MSTSolver", "SolverStats", "make_solver", "default_solver",
+           "legacy_options", "solve_mst", "solve_mst_many"]

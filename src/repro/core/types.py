@@ -3,19 +3,28 @@
 Edge-list representation mirrors the paper's ``graph_edge`` array: each edge
 has ``src``, ``dest`` and ``weight`` attributes; the graph is undirected and
 ``src``/``dst`` are interchangeable (paper §2.1, data structure iii).
+
+``Graph`` is a *sized* pytree: ``num_nodes`` rides along as static aux data
+(not a traced leaf), so a graph crossing a ``jax.jit`` boundary keeps its
+vertex count as a Python int — engines read ``graph.num_nodes`` directly
+instead of threading a ``(graph, num_nodes)`` tuple through every call.
+Construction sites that predate the sized representation may still build
+``Graph(src, dst, weight)`` without a count; ``ensure_sized`` attaches one
+(and catches count mismatches) at the dispatch boundary.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 INT_SENTINEL = np.iinfo(np.int32).max  # "minimum[v] == -1" analogue
 
 
-class Graph(NamedTuple):
-    """Static-shape edge-list graph.
+class Graph:
+    """Static-shape edge-list graph (sized pytree).
 
     Attributes:
       src:    (E,) int32 source vertex of each edge.
@@ -23,15 +32,101 @@ class Graph(NamedTuple):
       weight: (E,) float32 edge weight.  The paper assumes distinct weights;
               we enforce distinctness *structurally* via a (weight, edge-id)
               lexicographic rank, so duplicate weights are also handled.
+      num_nodes: V as a Python int, or None for a legacy unsized graph.
+              Registered as pytree aux data: it stays static under jit/vmap
+              (two graphs of equal array shape but different V are distinct
+              trace keys, exactly as the engines' static ``num_nodes``
+              arguments always required).
     """
 
-    src: jnp.ndarray
-    dst: jnp.ndarray
-    weight: jnp.ndarray
+    __slots__ = ("src", "dst", "weight", "num_nodes")
+
+    def __init__(self, src, dst, weight, num_nodes: Optional[int] = None):
+        object.__setattr__(self, "src", src)
+        object.__setattr__(self, "dst", dst)
+        object.__setattr__(self, "weight", weight)
+        object.__setattr__(self, "num_nodes",
+                           None if num_nodes is None else int(num_nodes))
+
+    def __setattr__(self, name, value):
+        raise AttributeError("Graph is immutable; use with_num_nodes() or "
+                             "build a new Graph")
+
+    def __reduce__(self):
+        # Slot-based default (un)pickling restores state via setattr, which
+        # the immutability guard rejects; reconstruct through __init__ so
+        # pickle/deepcopy keep working as they did for the old NamedTuple.
+        return (Graph, (self.src, self.dst, self.weight, self.num_nodes))
 
     @property
     def num_edges(self) -> int:
         return int(self.src.shape[0])
+
+    def with_num_nodes(self, num_nodes: int) -> "Graph":
+        """Same topology, sized: attach (or re-attach) the vertex count."""
+        return Graph(self.src, self.dst, self.weight, num_nodes=num_nodes)
+
+    def __repr__(self) -> str:
+        return (f"Graph(E={self.num_edges}, num_nodes={self.num_nodes})")
+
+    def tree_flatten(self):
+        return (self.src, self.dst, self.weight), self.num_nodes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, num_nodes=aux)
+
+
+jax.tree_util.register_pytree_node(
+    Graph,
+    lambda g: g.tree_flatten(),
+    Graph.tree_unflatten,
+)
+
+# A solve request: a sized Graph, or the legacy (graph, num_nodes) pair.
+GraphLike = Union[Graph, Tuple[Graph, int]]
+
+
+def ensure_sized(graph: Graph, num_nodes: Optional[int] = None) -> Graph:
+    """Return ``graph`` with a definite ``num_nodes``, validating agreement.
+
+    * sized graph, no override      -> returned as-is;
+    * unsized graph + ``num_nodes`` -> sized copy;
+    * both present and DIFFERENT    -> ``ValueError`` (a silent override hid
+      real bugs under the tuple-threading API);
+    * neither                       -> ``ValueError`` naming the fix.
+    """
+    if num_nodes is None:
+        if graph.num_nodes is None:
+            raise ValueError(
+                "graph has no num_nodes: construct it as "
+                "Graph(src, dst, weight, num_nodes=V) or pass num_nodes "
+                "explicitly")
+        return graph
+    num_nodes = int(num_nodes)
+    if graph.num_nodes is not None and graph.num_nodes != num_nodes:
+        raise ValueError(
+            f"num_nodes mismatch: graph carries {graph.num_nodes}, caller "
+            f"passed {num_nodes}")
+    if graph.num_nodes == num_nodes:
+        return graph
+    return graph.with_num_nodes(num_nodes)
+
+
+def as_request(item: GraphLike) -> Graph:
+    """Normalize one solve request to a sized Graph.
+
+    Accepts a sized :class:`Graph` or the legacy ``(graph, num_nodes)``
+    tuple every multi-solve surface used to take.
+    """
+    if isinstance(item, Graph):
+        return ensure_sized(item)
+    if (isinstance(item, tuple) and len(item) == 2
+            and isinstance(item[0], Graph)):
+        return ensure_sized(item[0], item[1])
+    raise TypeError(
+        f"expected a sized Graph or a (Graph, num_nodes) pair, got "
+        f"{type(item).__name__}")
 
 
 class MSTResult(NamedTuple):

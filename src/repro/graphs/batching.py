@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core.batched_mst import (BatchedGraph, BatchedMSTResult,
                                     pack_padded)
-from repro.core.types import Graph
+from repro.core.types import GraphLike, as_request
 
 MIN_BUCKET = 64  # below this, shapes collapse into one tiny bucket
 
@@ -56,40 +56,46 @@ class PackedBucket(NamedTuple):
         return self.graph.padded_edges
 
 
-def pack_graphs(graphs: Sequence[Tuple[Graph, int]],
+def pack_graphs(graphs: Sequence[GraphLike],
                 *, max_batch: int | None = None) -> List[PackedBucket]:
-    """Group ``(graph, num_nodes)`` requests into power-of-two buckets.
+    """Group solve requests into power-of-two buckets.
 
     Args:
-      graphs: request list; order defines the index space that
+      graphs: request list — sized :class:`Graph` objects (or legacy
+        ``(graph, num_nodes)`` pairs); order defines the index space that
         ``unpack_results`` restores.
       max_batch: optional cap on lanes per bucket (micro-batching); buckets
         overflow into multiple PackedBuckets of the same shape.
     """
+    sized = [as_request(g) for g in graphs]
     by_shape: Dict[Tuple[int, int], List[int]] = {}
-    for i, (g, v) in enumerate(graphs):
-        by_shape.setdefault(bucket_shape(g.num_edges, v), []).append(i)
+    for i, g in enumerate(sized):
+        by_shape.setdefault(bucket_shape(g.num_edges, g.num_nodes),
+                            []).append(i)
 
     buckets: List[PackedBucket] = []
     for (e_pad, v_pad), idxs in sorted(by_shape.items()):
         for lo in range(0, len(idxs), max_batch or len(idxs)):
             chunk = idxs[lo:lo + (max_batch or len(idxs))]
-            bg = pack_padded([graphs[i] for i in chunk],
+            bg = pack_padded([sized[i] for i in chunk],
                              padded_edges=e_pad, padded_nodes=v_pad)
             buckets.append(PackedBucket(bg, v_pad, list(chunk)))
     return buckets
 
 
-def unpack_results(buckets: Sequence[PackedBucket],
-                   results: Sequence[BatchedMSTResult]) -> List[tuple]:
-    """Scatter per-lane results back to original request order.
-
-    Returns a list (len == total requests) of per-graph tuples
-    ``(mst_mask, parent, total_weight, num_components, num_rounds)`` trimmed
-    to each graph's true sizes — the identity inverse of ``pack_graphs``.
+def unpack_results_mst(buckets: Sequence[PackedBucket],
+                       results: Sequence[BatchedMSTResult]
+                       ) -> List["MSTResult"]:
+    """Scatter per-lane results back to original request order, as full
+    :class:`~repro.core.types.MSTResult` records (host numpy arrays)
+    trimmed to each graph's true sizes — the identity inverse of
+    ``pack_graphs``.  The single lane-trim implementation every bulk
+    consumer (``MSTSolver.solve_many``, mstserve) builds on.
     """
+    from repro.core.types import MSTResult
+
     n = sum(len(b.indices) for b in buckets)
-    out: List[tuple] = [None] * n  # type: ignore[list-item]
+    out: List[MSTResult] = [None] * n  # type: ignore[list-item]
     for bucket, res in zip(buckets, results):
         # One device->host transfer per bucket (not per lane per field).
         res_np = jax.device_get(res)
@@ -97,9 +103,20 @@ def unpack_results(buckets: Sequence[PackedBucket],
         ne = np.asarray(bucket.graph.num_edges)
         for lane, orig in enumerate(bucket.indices):
             v, e = int(nn[lane]), int(ne[lane])
-            out[orig] = (res_np.mst_mask[lane, :e],
-                         res_np.parent[lane, :v],
-                         float(res_np.total_weight[lane]),
-                         int(res_np.num_components[lane]),
-                         int(res_np.num_rounds[lane]))
+            out[orig] = MSTResult(
+                parent=res_np.parent[lane, :v],
+                mst_mask=res_np.mst_mask[lane, :e],
+                num_rounds=res_np.num_rounds[lane],
+                num_waves=res_np.num_waves[lane],
+                total_weight=res_np.total_weight[lane],
+                num_components=res_np.num_components[lane])
     return out
+
+
+def unpack_results(buckets: Sequence[PackedBucket],
+                   results: Sequence[BatchedMSTResult]) -> List[tuple]:
+    """Legacy tuple view of :func:`unpack_results_mst`: per-graph
+    ``(mst_mask, parent, total_weight, num_components, num_rounds)``."""
+    return [(r.mst_mask, r.parent, float(r.total_weight),
+             int(r.num_components), int(r.num_rounds))
+            for r in unpack_results_mst(buckets, results)]

@@ -13,8 +13,6 @@ setting.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import numpy as np
 
 from repro.core.types import Graph
@@ -28,11 +26,12 @@ PAPER_GRAPHS = {
 
 
 def generate_graph(num_nodes: int, avg_degree: float, seed: int = 0,
-                   as_jax: bool = True) -> Tuple[Graph, int]:
+                   as_jax: bool = True) -> Graph:
     """Connected random graph with ~avg_degree mean degree, distinct weights.
 
-    Returns (graph, num_nodes).  Average degree counts each undirected edge
-    at both endpoints: E = num_nodes * avg_degree / 2.
+    Returns a *sized* Graph (``graph.num_nodes == num_nodes``) — no more
+    ``(graph, num_nodes)`` tuple threading.  Average degree counts each
+    undirected edge at both endpoints: E = num_nodes * avg_degree / 2.
     """
     rng = np.random.default_rng(seed)
     n = int(num_nodes)
@@ -65,12 +64,12 @@ def generate_graph(num_nodes: int, avg_degree: float, seed: int = 0,
         import jax.numpy as jnp
 
         return Graph(jnp.asarray(src), jnp.asarray(dst),
-                     jnp.asarray(weight)), n
-    return Graph(src, dst, weight), n
+                     jnp.asarray(weight), num_nodes=n)
+    return Graph(src, dst, weight, num_nodes=n)
 
 
-def paper_graph(name: str, seed: int = 0) -> Tuple[Graph, int]:
-    """Instantiate one of the paper's Table 1 graphs by name."""
+def paper_graph(name: str, seed: int = 0) -> Graph:
+    """Instantiate one of the paper's Table 1 graphs by name (sized)."""
     n, deg = PAPER_GRAPHS[name]
     return generate_graph(n, deg, seed=seed)
 

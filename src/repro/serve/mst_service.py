@@ -5,12 +5,18 @@ queries instead of tokens: callers ``submit`` graphs, the service queues
 them, and ``flush`` drains the queue in micro-batches —
 
     queue -> content-hash cache probe -> bucket by padded shape
-          -> ``batched_msf`` per bucket -> scatter responses
+          -> planned solver per bucket -> scatter responses
 
 Shape bucketing (``graphs/batching.pack_graphs``) keeps the number of
 compiled engine variants bounded while mixed request sizes share lanes;
 the LRU cache turns repeated graphs (hot queries from millions of users hit
 the same road network / social subgraph again and again) into O(1) lookups.
+
+The engine configuration is a validated :class:`repro.core.SolveOptions`
+and every solve dispatches through ONE :class:`repro.core.MSTSolver` built
+at construction — the hot path never re-derives dispatch, and the solver's
+plan-cache counters (``service.solver.stats``) prove warm re-solves of a
+seen shape skip retracing.
 
 Everything is synchronous and single-host: the scheduling *structure* is
 what later PRs make async / multi-device (DESIGN.md §3).
@@ -24,9 +30,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import ENGINES, solve_mst
-from repro.core.batched_mst import batched_msf
-from repro.core.types import Graph
+from repro.core import MSTSolver, SolveOptions, make_solver
+from repro.core.solver import legacy_options
+from repro.core.types import Graph, GraphLike, as_request, ensure_sized
 from repro.graphs.batching import pack_graphs, unpack_results
 
 
@@ -63,10 +69,17 @@ class ClusterResponse:
     cached: bool = False
 
 
-def graph_key(graph: Graph, num_nodes: int) -> str:
-    """Content hash of a request — identical graphs dedupe in the cache."""
+def graph_key(graph: Graph, num_nodes: Optional[int] = None) -> str:
+    """Content hash of a request — identical graphs dedupe in the cache.
+
+    ``num_nodes`` is only needed for legacy unsized graphs (an unsized
+    graph without it gets the curated ``ensure_sized`` error, not an
+    opaque hash failure).
+    """
+    if graph.num_nodes is None or num_nodes is not None:
+        graph = ensure_sized(graph, num_nodes)
     h = hashlib.sha1()
-    h.update(np.int64(num_nodes).tobytes())
+    h.update(np.int64(graph.num_nodes).tobytes())
     for arr, dtype in ((graph.src, np.int32), (graph.dst, np.int32),
                       (graph.weight, np.float32)):
         a = np.ascontiguousarray(np.asarray(arr, dtype=dtype))
@@ -94,7 +107,7 @@ class ServiceStats:
     submitted: int = 0
     served: int = 0
     cache_hits: int = 0
-    engine_solves: int = 0   # lanes actually run through batched_msf
+    engine_solves: int = 0   # lanes actually run through the solver
     flushes: int = 0
     buckets: int = 0
     bucket_shapes: Dict[Tuple[int, int], int] = field(default_factory=dict)
@@ -107,31 +120,48 @@ class MSTService:
     """Synchronous micro-batching MST server.
 
     Args:
-      variant: Borůvka hooking variant for the engine ("cas" / "lock").
-      engine: MST engine registry name (``repro.core.ENGINES``).  The
-        default "batched" solves each flush's cache misses lane-parallel via
-        ``batched_msf``; any other registry engine (single / unopt-seq /
-        opt-seq / distributed / sharded) is dispatched per request through
-        ``solve_mst`` — the queue, dedup, and cache layers are identical, so
-        the serving path is a conformance surface for every engine.
+      options: validated :class:`repro.core.SolveOptions` the service's
+        solver is planned from.  ``supports_batched_lanes`` engines (the
+        default "batched") solve each flush's cache misses lane-parallel
+        through the shape buckets; any other registry engine is dispatched
+        per request through the same solver — the queue, dedup, and cache
+        layers are identical, so the serving path is a conformance surface
+        for every engine.
+      variant / engine / compaction: legacy keyword-bag fields, folded into
+        a ``SolveOptions`` when ``options`` is not given (deprecation path:
+        pass ``options`` in new code).
       max_batch: lane cap per engine call; a bucket with more members
         overflows into multiple solves (bounds padded-batch memory).
       cache_size: LRU capacity in *results*; 0 disables caching.
-      compaction: frontier-compaction cadence in rounds (0 = off), passed
-        straight through to the engine — serving results are identical
-        either way (the conformance surface), only scan cost changes.
     """
 
-    def __init__(self, *, variant: str = "cas", engine: str = "batched",
-                 max_batch: int = 64, cache_size: int = 256,
-                 compaction: int = 0):
-        if engine not in ENGINES:
-            raise ValueError(
-                f"unknown engine {engine!r}; known: {sorted(ENGINES)}")
-        self.variant = variant
-        self.engine = engine
-        self.compaction = int(compaction)
-        self.max_batch = int(max_batch)
+    def __init__(self, *, options: Optional[SolveOptions] = None,
+                 variant: Optional[str] = None,
+                 engine: Optional[str] = None,
+                 max_batch: Optional[int] = None, cache_size: int = 256,
+                 compaction: Optional[int] = None):
+        if options is None:
+            # Legacy keyword bag: keep its documented leniencies (e.g. a
+            # compaction cadence on a sequential baseline stays a no-op,
+            # and a falsy lane cap means "unbounded").
+            options = legacy_options(
+                engine or "batched", variant or "cas",
+                compaction=compaction or 0,
+                max_batch=64 if max_batch is None else max_batch)
+        elif any(v is not None for v in (variant, engine, max_batch,
+                                         compaction)):
+            # Same contract as make_solver: a mixed call would silently
+            # drop the caller's explicit keywords.
+            raise TypeError("pass either options= or the legacy "
+                            "engine/variant/compaction/max_batch keywords, "
+                            "not both")
+        self.options = options
+        self.solver: MSTSolver = make_solver(options)
+        # Legacy attribute surface (examples/tests read these).
+        self.variant = options.variant
+        self.engine = options.engine
+        self.compaction = options.compaction
+        self.max_batch = options.max_batch  # None = unbounded buckets
         self.cache_size = int(cache_size)
         self.stats = ServiceStats()
         self._cache: "OrderedDict[str, MSTResponse]" = OrderedDict()
@@ -140,8 +170,8 @@ class MSTService:
         # several graph solves, so the two working sets shouldn't thrash
         # each other.
         self._cluster_cache: "OrderedDict[str, tuple]" = OrderedDict()
-        # pending: (request_id, key, graph, num_nodes)
-        self._pending: List[Tuple[int, str, Graph, int]] = []
+        # pending: (request_id, key, sized_graph)
+        self._pending: List[Tuple[int, str, Graph]] = []
         # solved but not yet handed to any caller (a solve()/solve_many()
         # drained the queue for requests submitted earlier); delivered by
         # the next flush(), in submit order.
@@ -150,13 +180,14 @@ class MSTService:
 
     # -- request side -------------------------------------------------------
 
-    def submit(self, graph: Graph, num_nodes: int) -> int:
-        """Queue one request; returns its request id (flush order = submit
-        order)."""
+    def submit(self, graph: GraphLike, num_nodes: Optional[int] = None
+               ) -> int:
+        """Queue one request (sized graph, or legacy ``graph, num_nodes``);
+        returns its request id (flush order = submit order)."""
+        g = as_request(graph if num_nodes is None else (graph, num_nodes))
         rid = self._next_id
         self._next_id += 1
-        self._pending.append((rid, graph_key(graph, num_nodes), graph,
-                              num_nodes))
+        self._pending.append((rid, graph_key(g), g))
         self.stats.submitted += 1
         return rid
 
@@ -173,8 +204,8 @@ class MSTService:
         self.stats.flushes += 1
 
         responses: Dict[int, MSTResponse] = {}
-        misses: List[Tuple[int, str, Graph, int]] = []
-        for rid, key, g, v in pending:
+        misses: List[Tuple[int, str, Graph]] = []
+        for rid, key, g in pending:
             hit = self._cache_get(self._cache, key)
             if hit is not None:
                 self.stats.cache_hits += 1
@@ -183,18 +214,18 @@ class MSTService:
                                              hit.num_components,
                                              hit.num_rounds, cached=True)
             else:
-                misses.append((rid, key, g, v))
+                misses.append((rid, key, g))
 
         if misses:
             # Intra-flush dedup: identical graphs (same content key) share
             # one engine lane; duplicates fan out from the first solve.
-            unique: Dict[str, Tuple[int, str, Graph, int]] = {}
+            unique: Dict[str, Tuple[int, str, Graph]] = {}
             for m in misses:
                 unique.setdefault(m[1], m)
             solve_list = list(unique.values())
             per_request = self._solve_batch(solve_list)
             by_key: Dict[str, MSTResponse] = {}
-            for (rid, key, _, _), (mask, parent, tw, nc, nr) in zip(
+            for (rid, key, _), (mask, parent, tw, nc, nr) in zip(
                     solve_list, per_request):
                 # Responses are shared via the cache: freeze the arrays so
                 # one caller's mutation can't corrupt later hits.
@@ -203,7 +234,7 @@ class MSTService:
                 resp = MSTResponse(rid, mask, parent, tw, nc, nr)
                 by_key[key] = resp
                 self._cache_put(self._cache, key, resp)
-            for rid, key, _, _ in misses:
+            for rid, key, _ in misses:
                 base = by_key[key]
                 responses[rid] = (base if rid == base.request_id else
                                   MSTResponse(rid, base.mst_mask,
@@ -212,16 +243,16 @@ class MSTService:
                                               base.num_rounds))
 
         self.stats.served += len(pending)
-        return unclaimed + [responses[rid] for rid, _, _, _ in pending]
+        return unclaimed + [responses[rid] for rid, _, _ in pending]
 
     def _solve_batch(self, solve_list):
-        """Solve deduped cache misses via the configured registry engine.
+        """Solve deduped cache misses through the planned solver.
 
         Returns per-request ``(mask, parent, tw, nc, nr)`` tuples in
         ``solve_list`` order (the ``unpack_results`` contract).
         """
-        if self.engine == "batched":
-            buckets = pack_graphs([(g, v) for _, _, g, v in solve_list],
+        if self.solver.spec.supports_batched_lanes:
+            buckets = pack_graphs([g for _, _, g in solve_list],
                                   max_batch=self.max_batch)
             results = []
             for b in buckets:
@@ -231,37 +262,36 @@ class MSTService:
                     self.stats.bucket_shapes.get(shape, 0)
                     + len(b.indices))
                 self.stats.engine_solves += len(b.indices)
-                results.append(batched_msf(b.graph, num_nodes=b.padded_nodes,
-                                           variant=self.variant,
-                                           compaction=self.compaction))
+                results.append(self.solver.solve_packed(b))
             return unpack_results(buckets, results)
-        # Non-batched registry engines: one dispatch per request.
+        # Per-graph registry engines: one plan-cached dispatch per request.
         out = []
-        for _, _, g, v in solve_list:
+        for _, _, g in solve_list:
             self.stats.engine_solves += 1
-            r = solve_mst(g, v, engine=self.engine, variant=self.variant,
-                          compaction=self.compaction)
+            r = self.solver.solve(g)
             out.append((np.asarray(r.mst_mask), np.asarray(r.parent),
                         float(r.total_weight), int(r.num_components),
                         int(r.num_rounds)))
         return out
 
-    def solve(self, graph: Graph, num_nodes: int) -> MSTResponse:
+    def solve(self, graph: GraphLike,
+              num_nodes: Optional[int] = None) -> MSTResponse:
         """Convenience: submit one request and flush immediately.
 
         Requests submitted earlier are solved in the same flush; their
         responses stay queued for the next ``flush()`` call.
         """
-        return self.solve_many([(graph, num_nodes)])[0]
+        g = as_request(graph if num_nodes is None else (graph, num_nodes))
+        return self.solve_many([g])[0]
 
-    def solve_many(self, requests: Sequence[Tuple[Graph, int]]
+    def solve_many(self, requests: Sequence[GraphLike]
                    ) -> List[MSTResponse]:
         """Submit a request list and flush once; results in request order.
 
         Responses for earlier unflushed submissions are retained for the
         next ``flush()`` rather than dropped.
         """
-        ids = set(self.submit(g, v) for g, v in requests)
+        ids = set(self.submit(r) for r in requests)
         mine: Dict[int, MSTResponse] = {}
         for r in self.flush():
             if r.request_id in ids:

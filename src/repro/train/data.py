@@ -43,7 +43,7 @@ def gnn_full_batch(cfg: GNNConfig, n: int, e: int, d_feat: int,
                    classes: int, key, with_coords=None) -> Dict[str, Any]:
     """Synthetic full-graph node-classification batch."""
     kf, kl, kc = jax.random.split(key, 3)
-    g, _ = generate_graph(n, max(2 * e / n, 2.0), seed=0)
+    g = generate_graph(n, max(2 * e / n, 2.0), seed=0)
     ee = g.num_edges
     src = jnp.concatenate([g.src, g.dst])[:e] if ee >= e // 2 else g.src
     dst = jnp.concatenate([g.dst, g.src])[:e] if ee >= e // 2 else g.dst

@@ -1,0 +1,354 @@
+"""Planned-solver API surface: imports, validation matrix, shim
+equivalence, and the zero-retrace warm-solve guarantee.
+
+The conformance matrix (``test_conformance.py``) pins *results*; this
+module pins the API contract itself:
+
+  * every name in ``repro.core.__all__`` imports (the public surface can't
+    silently rot);
+  * ``SolveOptions`` rejects bad configurations EAGERLY — unknown engine,
+    unknown variant, impossible mesh policy, capability mismatches — with
+    the known sets listed in the message;
+  * the ``solve_mst``/``solve_mst_many`` compatibility shims are
+    bit-identical to ``make_solver(...).solve(...)`` across the
+    conformance families;
+  * a warm solver re-solving a seen shape records 0 new traces, both at
+    the solver's plan-cache level and at the underlying jit cache.
+"""
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import (ENGINES, MSTSolver, SolveOptions, VARIANTS, Graph,
+                        make_solver, solve_mst, solve_mst_many)
+from repro.graphs.generator import generate_graph
+
+from test_conformance import FAMILIES
+
+
+# -- import smoke -----------------------------------------------------------
+
+def test_core_all_names_importable():
+    """Everything advertised in ``repro.core.__all__`` must resolve."""
+    assert core.__all__  # non-empty
+    for name in core.__all__:
+        assert getattr(core, name) is not None, name
+    # The new surface is actually advertised.
+    for required in ("SolveOptions", "MSTSolver", "make_solver", "Graph",
+                     "ENGINES", "VARIANTS", "solve_mst", "solve_mst_many"):
+        assert required in core.__all__
+
+
+def test_engine_specs_declare_capabilities():
+    """Every registry entry carries the capability fields validation
+    checks against."""
+    for name, spec in ENGINES.items():
+        assert isinstance(spec.needs_mesh, bool), name
+        assert isinstance(spec.supports_batched_lanes, bool), name
+        assert isinstance(spec.honors_compaction, bool), name
+        assert isinstance(spec.supports_compaction_kernel, bool), name
+    assert ENGINES["batched"].supports_batched_lanes
+    assert not ENGINES["unopt-seq"].honors_compaction
+    assert ENGINES["single"].supports_compaction_kernel
+
+
+# -- SolveOptions validation matrix ----------------------------------------
+
+@pytest.mark.parametrize("bad,match", [
+    (dict(engine="nope"), "unknown engine"),
+    (dict(variant="cass"), "unknown variant"),
+    (dict(engine="distributed", mesh=None), "needs a mesh"),
+    (dict(engine="sharded", mesh=None), "needs a mesh"),
+    (dict(engine="distributed", mesh=42), "mesh must be"),
+    (dict(engine="single", mesh="typoo"), "mesh must be"),
+    (dict(engine="unopt-seq", compaction=2), "does not honor"),
+    (dict(engine="opt-seq", compaction=1), "does not honor"),
+    (dict(compaction=-1), "compaction must be >= 0"),
+    (dict(compaction_kernel=True), "requires compaction > 0"),
+    (dict(engine="batched", compaction=1, compaction_kernel=True),
+     "no Pallas stream-compaction"),
+    (dict(max_batch=0), "max_batch"),
+])
+def test_solve_options_rejects_bad_configs(bad, match):
+    with pytest.raises(ValueError, match=match):
+        SolveOptions(**bad)
+
+
+def test_solve_options_error_lists_known_sets():
+    """The eager errors must NAME the valid values — that is the point of
+    failing at construction instead of mid-trace."""
+    with pytest.raises(ValueError) as ei:
+        SolveOptions(engine="typo")
+    for name in sorted(ENGINES):
+        assert name in str(ei.value)
+    with pytest.raises(ValueError) as ei:
+        SolveOptions(variant="typo")
+    for v in VARIANTS:
+        assert v in str(ei.value)
+
+
+def test_solve_options_good_configs_construct():
+    SolveOptions()
+    SolveOptions(engine="batched", variant="lock", compaction=2,
+                 max_batch=8)
+    SolveOptions(compaction=1, compaction_kernel=True)
+    SolveOptions(engine="distributed")          # mesh='auto' default
+    # 'auto' compares by VALUE: a runtime-built string must work too.
+    SolveOptions(engine="distributed", mesh="".join(["au", "to"]))
+    o = SolveOptions(engine="single").replace(variant="lock")
+    assert o.variant == "lock"
+    with pytest.raises(ValueError, match="unknown variant"):
+        SolveOptions().replace(variant="typo")
+
+
+def test_solve_options_coerces_numeric_fields():
+    """Eager validation includes normalization: compaction and max_batch
+    become ints at construction, not a TypeError later inside packing."""
+    o = SolveOptions(engine="batched", compaction="2", max_batch=2.0)
+    assert o.compaction == 2 and isinstance(o.compaction, int)
+    assert o.max_batch == 2 and isinstance(o.max_batch, int)
+
+
+def test_solve_options_hashable_and_frozen():
+    a, b = SolveOptions(), SolveOptions()
+    assert a == b and hash(a) == hash(b)
+    assert a != SolveOptions(variant="lock")
+    with pytest.raises(Exception):
+        a.variant = "lock"  # frozen
+
+
+def test_make_solver_validates_eagerly():
+    with pytest.raises(ValueError, match="unknown engine"):
+        make_solver(engine="nope")
+    with pytest.raises(TypeError):
+        make_solver(SolveOptions(), engine="single")
+    assert isinstance(make_solver(), MSTSolver)
+
+
+def test_variant_validated_at_every_engine_entry():
+    """Satellite: each dispatch entry rejects a typo'd variant with the
+    known list, instead of failing opaquely inside the round machinery."""
+    from repro.core.batched_mst import batched_msf, pack_padded
+    from repro.core.distributed_mst import distributed_msf, make_flat_mesh
+    from repro.core.mst import (minimum_spanning_forest, mst_optimized,
+                                mst_unoptimized)
+    from repro.core.sharded_mst import sharded_msf
+
+    g = generate_graph(40, 3, seed=0)
+    mesh = make_flat_mesh(1)
+    packed = pack_padded([g], padded_edges=g.num_edges,
+                         padded_nodes=g.num_nodes)
+    entries = [
+        lambda: minimum_spanning_forest(g, variant="cass"),
+        lambda: mst_unoptimized(g, variant="cass"),
+        lambda: mst_optimized(g, variant="cass"),
+        lambda: batched_msf(packed, num_nodes=g.num_nodes, variant="cass"),
+        lambda: distributed_msf(g, mesh=mesh, variant="cass"),
+        lambda: sharded_msf(g, mesh=mesh, variant="cass"),
+        lambda: solve_mst(g, variant="cass"),
+        lambda: solve_mst_many([g], variant="cass"),
+    ]
+    for entry in entries:
+        with pytest.raises(ValueError, match="unknown variant"):
+            entry()
+
+
+# -- sized-graph normalization ---------------------------------------------
+
+def test_graph_is_sized_pytree():
+    """num_nodes is static aux data: it survives jit boundaries as a
+    Python int and distinguishes trace keys."""
+    import jax
+
+    g = generate_graph(50, 3, seed=0)
+    assert g.num_nodes == 50
+    leaves, treedef = jax.tree_util.tree_flatten(g)
+    assert len(leaves) == 3  # src, dst, weight — num_nodes is NOT a leaf
+    g2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert g2.num_nodes == 50
+
+    @jax.jit
+    def through(graph):
+        assert graph.num_nodes == 50  # static inside the trace
+        return graph.weight.sum()
+
+    through(g)
+
+
+def test_graph_pickles_and_deepcopies():
+    """The old NamedTuple pickled/copied; the immutable class must too
+    (callers cache graphs to disk / fan out via multiprocessing)."""
+    import copy
+    import pickle
+
+    g = generate_graph(20, 3, seed=0)
+    for g2 in (pickle.loads(pickle.dumps(g)), copy.deepcopy(g)):
+        assert g2.num_nodes == g.num_nodes
+        assert (np.asarray(g2.src) == np.asarray(g.src)).all()
+        assert np.allclose(np.asarray(g2.weight), np.asarray(g.weight))
+
+
+def test_request_normalization_and_mismatch():
+    from repro.core import as_request, ensure_sized
+
+    g = generate_graph(30, 3, seed=0)
+    legacy = Graph(g.src, g.dst, g.weight)
+    assert as_request((legacy, 30)).num_nodes == 30
+    assert as_request(g) is g
+    assert ensure_sized(legacy, 30).num_nodes == 30
+    with pytest.raises(ValueError, match="no num_nodes"):
+        ensure_sized(legacy)
+    with pytest.raises(ValueError, match="mismatch"):
+        ensure_sized(g, g.num_nodes + 1)
+    with pytest.raises(TypeError):
+        as_request("not a graph")
+    # graph_key shares the curated unsized error, not an opaque np failure.
+    from repro.serve.mst_service import graph_key
+    with pytest.raises(ValueError, match="no num_nodes"):
+        graph_key(legacy)
+    assert graph_key(legacy, 30) == graph_key(g.with_num_nodes(30))
+
+
+# -- shim equivalence -------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_shim_bit_identical_to_solver(family, variant):
+    """``solve_mst(...)`` must stay bit-identical to
+    ``make_solver(...).solve(...)`` across the conformance families —
+    the deprecation path cannot change results."""
+    graph = FAMILIES[family]()
+    r_shim = solve_mst(graph, variant=variant)
+    r_plan = make_solver(SolveOptions(variant=variant)).solve(graph)
+    assert (np.asarray(r_shim.mst_mask)
+            == np.asarray(r_plan.mst_mask)).all()
+    assert (np.asarray(r_shim.parent) == np.asarray(r_plan.parent)).all()
+    assert float(r_shim.total_weight) == float(r_plan.total_weight)
+    assert int(r_shim.num_rounds) == int(r_plan.num_rounds)
+    assert int(r_shim.num_waves) == int(r_plan.num_waves)
+
+
+def test_shim_many_matches_solver_many_batched():
+    graphs = [generate_graph(n, 3, seed=s)
+              for s, n in enumerate((40, 70, 40, 120))]
+    r_shim = solve_mst_many(graphs, engine="batched")
+    r_plan = make_solver(engine="batched").solve_many(graphs)
+    for a, b in zip(r_shim, r_plan):
+        assert (np.asarray(a.mst_mask) == np.asarray(b.mst_mask)).all()
+        assert int(a.num_components) == int(b.num_components)
+
+
+def test_legacy_surfaces_share_compaction_leniency():
+    """EVERY legacy keyword-bag surface — shim, service, clustering — must
+    keep the documented no-op leniency; only the validated options= path
+    is strict."""
+    from repro.cluster.emst import euclidean_mst
+    from repro.serve.mst_service import MSTService
+
+    svc = MSTService(engine="opt-seq", compaction=2)  # no ValueError
+    assert svc.compaction == 0  # dropped as the no-op it always was
+    pts = np.random.default_rng(0).random((30, 2)).astype(np.float32)
+    r = euclidean_mst(pts, k=4, engine="opt-seq", compaction=1)
+    assert r.num_components == 1
+    with pytest.raises(ValueError, match="does not honor"):
+        MSTService(options=SolveOptions(engine="opt-seq", compaction=2))
+    # Mixing options= with the legacy keywords would silently drop the
+    # caller's explicit values — rejected, like make_solver's mixed call.
+    with pytest.raises(TypeError, match="not both"):
+        MSTService(options=SolveOptions(), engine="batched")
+    with pytest.raises(TypeError, match="not both"):
+        euclidean_mst(pts, options=SolveOptions(), variant="lock")
+    # Old surface: max_batch=0 meant "no lane cap", not a ValueError.
+    svc0 = MSTService(max_batch=0)
+    assert svc0.max_batch is None
+    assert (svc0.solve(generate_graph(30, 3, seed=0)).num_components == 1)
+
+
+def test_solver_results_are_block_until_ready_safe():
+    """Per-graph engines return device arrays, the lane-packed path
+    returns trimmed host arrays; jax.block_until_ready must accept both
+    (the benchmark harness times through it)."""
+    import jax
+
+    g = generate_graph(60, 4, seed=0)
+    for engine in ("single", "batched"):
+        r = jax.block_until_ready(make_solver(engine=engine).solve(g))
+        assert int(r.num_components) == 1
+
+
+def test_shim_accepts_legacy_tuple_and_compaction_leniency():
+    """The keyword-bag surface keeps its documented leniencies: positional
+    num_nodes, (graph, num_nodes) pairs, and a compaction cadence on the
+    sequential baselines (dropped as the no-op it always was)."""
+    g = generate_graph(60, 4, seed=1)
+    legacy = Graph(g.src, g.dst, g.weight)
+    r0 = solve_mst(g)
+    r1 = solve_mst(legacy, g.num_nodes)
+    assert (np.asarray(r0.mst_mask) == np.asarray(r1.mst_mask)).all()
+    r2 = solve_mst(g, engine="opt-seq", compaction=3)  # no ValueError
+    assert (np.asarray(r2.mst_mask) == np.asarray(r0.mst_mask)).all()
+    r3 = solve_mst_many([(legacy, g.num_nodes), g])
+    assert (np.asarray(r3[0].mst_mask) == np.asarray(r3[1].mst_mask)).all()
+
+
+# -- plan cache: warm solves never retrace ---------------------------------
+
+def test_warm_solver_records_zero_new_traces():
+    """THE acceptance property: a warm solver re-solving an identical
+    shape records 0 new traces — plan-cache level AND jit-cache level."""
+    from repro.core.mst import _msf_jit
+
+    solver = make_solver(SolveOptions())
+    cold = generate_graph(150, 4, seed=0)
+    solver.solve(cold)
+    assert solver.stats.traces == 1
+    assert solver.stats.plan_hits == 0
+
+    jit_cache_before = _msf_jit._cache_size()
+    for s in range(1, 6):  # same shape, fresh weights: no result reuse
+        r = solver.solve(generate_graph(150, 4, seed=s))
+        assert int(r.num_components) == 1
+    assert solver.stats.traces == 1          # zero NEW plan entries
+    assert solver.stats.plan_hits == 5
+    assert _msf_jit._cache_size() == jit_cache_before  # zero NEW jit traces
+    assert solver.stats.warm_hit_rate == pytest.approx(5 / 6)
+
+    # A genuinely new shape traces exactly once more.
+    solver.solve(generate_graph(300, 4, seed=0))
+    assert solver.stats.traces == 2
+
+
+def test_warm_solver_batched_bucket_cache():
+    """Lane-parallel path: same request shapes land in the same pow2
+    buckets, so a second solve_many of fresh same-shape graphs adds no
+    plan entries."""
+    solver = make_solver(engine="batched", max_batch=4)
+    shapes = ((40, 3), (70, 3), (40, 4))
+    solver.solve_many([generate_graph(n, d, seed=i)
+                       for i, (n, d) in enumerate(shapes)])
+    traces_cold = solver.stats.traces
+    solver.solve_many([generate_graph(n, d, seed=100 + i)
+                       for i, (n, d) in enumerate(shapes)])
+    assert solver.stats.traces == traces_cold
+    assert solver.stats.plan_hits > 0
+
+
+def test_solver_mesh_resolved_once():
+    """mesh='auto' builds the mesh at first use and reuses the SAME object
+    (the keyword-bag path rebuilt a Mesh per call)."""
+    solver = make_solver(engine="distributed")
+    g = generate_graph(60, 4, seed=0)
+    solver.solve(g)
+    m1 = solver.mesh
+    solver.solve(generate_graph(60, 4, seed=1))
+    assert solver.mesh is m1
+
+
+def test_solver_stats_shapes_accounting():
+    solver = make_solver()
+    solver.solve(generate_graph(80, 3, seed=0))
+    solver.solve(generate_graph(80, 3, seed=1))
+    solver.solve(generate_graph(200, 3, seed=0))
+    assert solver.stats.solves == 3
+    assert sum(solver.stats.shapes.values()) == 3
+    assert len(solver.stats.shapes) == solver.stats.traces == 2

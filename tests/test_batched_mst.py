@@ -15,18 +15,20 @@ MIXED = [(50, 3, 0), (120, 4, 1), (33, 5, 2), (200, 3, 3),
          (64, 6, 4), (10, 2, 5), (90, 3, 6), (150, 5, 7)]
 
 
-def _oracle(g, v):
-    return kruskal_numpy(g.src, g.dst, g.weight, v)
+def _oracle(g):
+    return kruskal_numpy(g.src, g.dst, g.weight, g.num_nodes)
 
 
 def _two_component_graph(seed):
     """Disjoint union of two random graphs => an honest forest input."""
-    g1, v1 = generate_graph(40, 3, seed=seed, as_jax=False)
-    g2, v2 = generate_graph(25, 4, seed=seed + 1, as_jax=False)
+    g1 = generate_graph(40, 3, seed=seed, as_jax=False)
+    g2 = generate_graph(25, 4, seed=seed + 1, as_jax=False)
+    v1 = g1.num_nodes
     src = np.concatenate([g1.src, g2.src + v1]).astype(np.int32)
     dst = np.concatenate([g1.dst, g2.dst + v1]).astype(np.int32)
     w = np.concatenate([g1.weight, g2.weight]).astype(np.float32)
-    return Graph(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)), v1 + v2
+    return Graph(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+                 num_nodes=v1 + g2.num_nodes)
 
 
 @pytest.mark.parametrize("variant", ["cas", "lock"])
@@ -39,15 +41,15 @@ def test_batched_mixed_sizes_match_oracle_per_lane(variant):
     results = [batched_msf(b.graph, num_nodes=b.padded_nodes,
                            variant=variant) for b in buckets]
     per = unpack_results(buckets, results)
-    for i, (g, v) in enumerate(reqs):
-        om, ow, _ = _oracle(g, v)
+    for i, g in enumerate(reqs):
+        om, ow, _ = _oracle(g)
         mask, parent, tw, nc, _ = per[i]
         assert mask.shape == (g.num_edges,)
-        assert parent.shape == (v,)
+        assert parent.shape == (g.num_nodes,)
         assert (mask == om).all()
         assert np.isclose(tw, ow, rtol=1e-5)
         assert nc == 1
-        assert mask.sum() == v - 1
+        assert mask.sum() == g.num_nodes - 1
 
 
 @pytest.mark.parametrize("compaction", [1, 2])
@@ -61,8 +63,8 @@ def test_batched_compaction_mixed_lanes_match_oracle(compaction):
     results = [batched_msf(b.graph, num_nodes=b.padded_nodes,
                            compaction=compaction) for b in buckets]
     per = unpack_results(buckets, results)
-    for i, (g, v) in enumerate(reqs):
-        om, ow, _ = _oracle(g, v)
+    for i, g in enumerate(reqs):
+        om, ow, _ = _oracle(g)
         mask, parent, tw, nc, _ = per[i]
         assert (mask == om).all()
         assert np.isclose(tw, ow, rtol=1e-5)
@@ -74,9 +76,9 @@ def test_mst_service_compaction_passthrough():
     svc0 = MSTService(cache_size=0)
     svc1 = MSTService(cache_size=0, compaction=1)
     for n, d, s in MIXED[:4]:
-        g, v = generate_graph(n, d, seed=s)
-        r0 = svc0.solve(g, v)
-        r1 = svc1.solve(g, v)
+        g = generate_graph(n, d, seed=s)
+        r0 = svc0.solve(g)
+        r1 = svc1.solve(g)
         assert (r0.mst_mask == r1.mst_mask).all()
         assert r0.num_rounds == r1.num_rounds
         assert r0.total_weight == r1.total_weight
@@ -87,15 +89,15 @@ def test_batched_duplicate_weights(variant):
     """Ties everywhere: the (weight, edge_id) rank must keep lanes exact."""
     reqs = []
     for s in range(4):
-        g, v = generate_graph(80, 4, seed=s)
+        g = generate_graph(80, 4, seed=s)
         w = jnp.round(g.weight * 8) / 8.0  # heavy ties
-        reqs.append((Graph(g.src, g.dst, w), v))
-    e_pad = next_pow2(max(g.num_edges for g, _ in reqs))
-    v_pad = next_pow2(max(v for _, v in reqs))
+        reqs.append(Graph(g.src, g.dst, w, num_nodes=g.num_nodes))
+    e_pad = next_pow2(max(g.num_edges for g in reqs))
+    v_pad = next_pow2(max(g.num_nodes for g in reqs))
     bg = pack_padded(reqs, padded_edges=e_pad, padded_nodes=v_pad)
     res = batched_msf(bg, num_nodes=v_pad, variant=variant)
-    for i, (g, v) in enumerate(reqs):
-        om, ow, _ = _oracle(g, v)
+    for i, g in enumerate(reqs):
+        om, ow, _ = _oracle(g)
         mask, _, tw, nc, _ = unpack_lane(bg, res, i)
         assert (mask == om).all()
         assert nc == 1
@@ -107,13 +109,13 @@ def test_batched_disconnected_forest(variant):
     num_components excluding pad vertices."""
     reqs = [_two_component_graph(0), generate_graph(60, 3, seed=9),
             _two_component_graph(10)]
-    e_pad = next_pow2(max(g.num_edges for g, _ in reqs))
-    v_pad = next_pow2(max(v for _, v in reqs))
+    e_pad = next_pow2(max(g.num_edges for g in reqs))
+    v_pad = next_pow2(max(g.num_nodes for g in reqs))
     bg = pack_padded(reqs, padded_edges=e_pad, padded_nodes=v_pad)
     res = batched_msf(bg, num_nodes=v_pad, variant=variant)
     expected_comps = [2, 1, 2]
-    for i, (g, v) in enumerate(reqs):
-        om, ow, oc = _oracle(g, v)
+    for i, g in enumerate(reqs):
+        om, ow, oc = _oracle(g)
         mask, _, tw, nc, _ = unpack_lane(bg, res, i)
         assert (mask == om).all()
         assert np.isclose(tw, ow, rtol=1e-5)
@@ -138,7 +140,7 @@ def test_bucketing_round_trip_identity():
     # Every graph's true edges survive packing verbatim in its lane.
     for b in buckets:
         for lane, orig in enumerate(b.indices):
-            g, v = reqs[orig]
+            g = reqs[orig]
             e = g.num_edges
             assert (np.asarray(b.graph.src[lane, :e])
                     == np.asarray(g.src)).all()
@@ -146,7 +148,7 @@ def test_bucketing_round_trip_identity():
                     == np.asarray(g.dst)).all()
             assert np.allclose(np.asarray(b.graph.weight[lane, :e]),
                                np.asarray(g.weight))
-            assert int(b.graph.num_nodes[lane]) == v
+            assert int(b.graph.num_nodes[lane]) == g.num_nodes
             # padding contract: self-loops with +inf weight
             assert (np.asarray(b.graph.src[lane, e:]) == 0).all()
             assert np.isinf(np.asarray(b.graph.weight[lane, e:])).all()
@@ -154,9 +156,9 @@ def test_bucketing_round_trip_identity():
                for b in buckets]
     per = unpack_results(buckets, results)
     assert len(per) == len(reqs)
-    for (g, v), (mask, parent, _, _, _) in zip(reqs, per):
+    for g, (mask, parent, _, _, _) in zip(reqs, per):
         assert mask.shape == (g.num_edges,)
-        assert parent.shape == (v,)
+        assert parent.shape == (g.num_nodes,)
 
 
 def test_bucket_shape_pow2_bounds():
@@ -172,8 +174,8 @@ def test_mst_service_cache_hit_and_ordering():
     responses = svc.solve_many(reqs)
     assert [r.request_id for r in responses] == list(range(len(reqs)))
     assert not any(r.cached for r in responses)
-    for (g, v), r in zip(reqs, responses):
-        om, ow, _ = _oracle(g, v)
+    for g, r in zip(reqs, responses):
+        om, ow, _ = _oracle(g)
         assert (r.mst_mask == om).all()
         assert np.isclose(r.total_weight, ow, rtol=1e-5)
     solves_before = svc.stats.engine_solves
@@ -185,8 +187,8 @@ def test_mst_service_cache_hit_and_ordering():
     assert [r.cached for r in again] == [True, True, False, True]
     assert svc.stats.engine_solves == solves_before + 1
     assert svc.stats.cache_hits == 3
-    for (g, v), r in zip(replay, again):
-        om, _, _ = _oracle(g, v)
+    for g, r in zip(replay, again):
+        om, _, _ = _oracle(g)
         assert (r.mst_mask == om).all()
 
 
@@ -197,13 +199,13 @@ def test_mst_service_engine_dispatch(engine):
     svc = MSTService(engine=engine)
     reqs = [generate_graph(n, d, seed=s) for n, d, s in MIXED[:4]]
     responses = svc.solve_many(reqs)
-    for (g, v), r in zip(reqs, responses):
-        om, ow, _ = _oracle(g, v)
+    for g, r in zip(reqs, responses):
+        om, ow, _ = _oracle(g)
         assert (r.mst_mask == om).all()
         assert np.isclose(r.total_weight, ow, rtol=1e-5)
     assert svc.stats.engine_solves == len(reqs)
     assert svc.stats.buckets == 0  # per-request path, no shape bucketing
-    again = svc.solve(*reqs[0])
+    again = svc.solve(reqs[0])
     assert again.cached
 
 
@@ -212,15 +214,34 @@ def test_mst_service_rejects_unknown_engine():
         MSTService(engine="nope")
 
 
+def test_mst_service_rejects_unknown_variant():
+    """Options validation reaches the service constructor: a typo'd
+    variant fails eagerly, not inside the first flush's trace."""
+    with pytest.raises(ValueError, match="unknown variant"):
+        MSTService(variant="cass")
+
+
+def test_mst_service_accepts_prebuilt_options():
+    from repro.core import SolveOptions
+
+    svc = MSTService(options=SolveOptions(engine="batched", variant="lock",
+                                          max_batch=2))
+    assert svc.variant == "lock"
+    assert svc.max_batch == 2
+    g = generate_graph(40, 3, seed=0)
+    om, _, _ = _oracle(g)
+    assert (svc.solve(g).mst_mask == om).all()
+
+
 def test_mst_service_lru_eviction():
     svc = MSTService(cache_size=2)
     reqs = [generate_graph(30, 3, seed=s) for s in range(3)]
-    for g, v in reqs:
-        svc.solve(g, v)
+    for g in reqs:
+        svc.solve(g)
     assert svc.cache_len == 2
     # Oldest (seed 0) evicted; newest two are hits.
-    assert not svc.solve(*reqs[0]).cached
-    assert svc.solve(*reqs[2]).cached
+    assert not svc.solve(reqs[0]).cached
+    assert svc.solve(reqs[2]).cached
 
 
 def test_mst_service_lru_eviction_order_is_recency():
@@ -228,15 +249,15 @@ def test_mst_service_lru_eviction_order_is_recency():
     its entry, redirecting the next eviction to the least-recently-USED."""
     svc = MSTService(cache_size=2)
     a, b, c = [generate_graph(30, 3, seed=s) for s in range(3)]
-    svc.solve(*a)
-    svc.solve(*b)          # order (old -> new): a, b
-    assert svc.solve(*a).cached  # touch a -> order: b, a
-    svc.solve(*c)          # evicts b, NOT a
-    assert svc.solve(*a).cached
-    assert not svc.solve(*b).cached  # b was the LRU victim
+    svc.solve(a)
+    svc.solve(b)          # order (old -> new): a, b
+    assert svc.solve(a).cached  # touch a -> order: b, a
+    svc.solve(c)          # evicts b, NOT a
+    assert svc.solve(a).cached
+    assert not svc.solve(b).cached  # b was the LRU victim
     # Re-solving b evicted c (a was touched again above).
-    assert svc.solve(*a).cached
-    assert not svc.solve(*c).cached
+    assert svc.solve(a).cached
+    assert not svc.solve(c).cached
 
 
 def test_mst_service_lru_capacity_one():
@@ -244,13 +265,13 @@ def test_mst_service_lru_capacity_one():
     back-to-back repeats still hit."""
     svc = MSTService(cache_size=1)
     a, b = generate_graph(30, 3, seed=0), generate_graph(40, 4, seed=1)
-    svc.solve(*a)
-    assert svc.solve(*a).cached
-    svc.solve(*b)
+    svc.solve(a)
+    assert svc.solve(a).cached
+    svc.solve(b)
     assert svc.cache_len == 1
-    assert svc.solve(*b).cached
-    assert not svc.solve(*a).cached  # displaced; this re-inserts a ...
-    assert not svc.solve(*b).cached  # ... which displaced b again
+    assert svc.solve(b).cached
+    assert not svc.solve(a).cached  # displaced; this re-inserts a ...
+    assert not svc.solve(b).cached  # ... which displaced b again
 
 
 def test_mst_service_lru_hit_after_evict_reinserts():
@@ -258,11 +279,11 @@ def test_mst_service_lru_hit_after_evict_reinserts():
     poison the key."""
     svc = MSTService(cache_size=1)
     a, b = generate_graph(30, 3, seed=0), generate_graph(40, 4, seed=1)
-    r_first = svc.solve(*a)
-    svc.solve(*b)  # evicts a
-    r_again = svc.solve(*a)
+    r_first = svc.solve(a)
+    svc.solve(b)  # evicts a
+    r_again = svc.solve(a)
     assert not r_again.cached
-    assert svc.solve(*a).cached
+    assert svc.solve(a).cached
     assert (r_first.mst_mask == r_again.mst_mask).all()
     assert r_first.total_weight == r_again.total_weight
 
@@ -270,11 +291,11 @@ def test_mst_service_lru_hit_after_evict_reinserts():
 def test_mst_service_intra_flush_dedup():
     """N identical graphs in one micro-batch cost one engine lane."""
     svc = MSTService()
-    g, v = generate_graph(40, 3, seed=0)
+    g = generate_graph(40, 3, seed=0)
     other = generate_graph(50, 4, seed=1)
-    responses = svc.solve_many([(g, v), other, (g, v), (g, v)])
+    responses = svc.solve_many([g, other, g, g])
     assert svc.stats.engine_solves == 2  # one lane for g, one for other
-    om, _, _ = _oracle(g, v)
+    om, _, _ = _oracle(g)
     for r in (responses[0], responses[2], responses[3]):
         assert (r.mst_mask == om).all()
     assert [r.request_id for r in responses] == [0, 1, 2, 3]
@@ -286,12 +307,12 @@ def test_mst_service_unflushed_submissions_not_lost():
     svc = MSTService()
     g0 = generate_graph(30, 3, seed=0)
     g1 = generate_graph(45, 4, seed=1)
-    rid0 = svc.submit(*g0)
-    r1 = svc.solve(*g1)  # flushes both
+    rid0 = svc.submit(g0)
+    r1 = svc.solve(g1)  # flushes both
     assert r1.request_id == 1
     later = svc.flush()
     assert [r.request_id for r in later] == [rid0]
-    om, _, _ = _oracle(*g0)
+    om, _, _ = _oracle(g0)
     assert (later[0].mst_mask == om).all()
 
 
@@ -299,18 +320,35 @@ def test_mst_service_responses_are_frozen():
     """Cache entries share arrays with responses; they must be read-only so
     a caller can't corrupt future hits."""
     svc = MSTService()
-    g, v = generate_graph(35, 3, seed=2)
-    r = svc.solve(g, v)
+    g = generate_graph(35, 3, seed=2)
+    r = svc.solve(g)
     with pytest.raises(ValueError):
         r.mst_mask[0] = True
     with pytest.raises(ValueError):
         r.parent[0] = 5
 
 
+def test_mst_service_plan_cache_no_retrace_when_warm():
+    """Serving is the retrace-sensitive hot path: after a flush compiles a
+    shape bucket, later flushes of the same shapes must be pure plan-cache
+    hits on the service's solver."""
+    svc = MSTService(cache_size=0)  # disable result cache: force solves
+    reqs = [generate_graph(n, d, seed=s) for n, d, s in MIXED[:4]]
+    svc.solve_many(reqs)
+    traces_cold = svc.solver.stats.traces
+    assert traces_cold > 0
+    # Same shapes, new weights -> result-cache misses, plan-cache hits.
+    warm = [generate_graph(n, d, seed=s + 100) for n, d, s in MIXED[:4]]
+    svc.solve_many(warm)
+    assert svc.solver.stats.traces == traces_cold
+    assert svc.solver.stats.plan_hits > 0
+
+
 def test_graph_key_content_hash():
-    g1, v1 = generate_graph(40, 3, seed=0)
-    g2, _ = generate_graph(40, 3, seed=1)
-    assert graph_key(g1, v1) == graph_key(Graph(g1.src, g1.dst, g1.weight),
-                                          v1)
-    assert graph_key(g1, v1) != graph_key(g2, v1)
-    assert graph_key(g1, v1) != graph_key(g1, v1 + 1)
+    g1 = generate_graph(40, 3, seed=0)
+    g2 = generate_graph(40, 3, seed=1)
+    v1 = g1.num_nodes
+    assert graph_key(g1) == graph_key(Graph(g1.src, g1.dst, g1.weight), v1)
+    assert graph_key(g1) != graph_key(g2)
+    assert graph_key(g1) != graph_key(
+        Graph(g1.src, g1.dst, g1.weight), v1 + 1)

@@ -5,6 +5,10 @@ breaking — under the engines' identical rank construction the minimum
 forest is *unique*, so every cell must reproduce the oracle's edge set
 exactly (not just the total weight).
 
+The matrix dispatches through the planned-solver API (``SolveOptions`` ->
+``make_solver``); the ``solve_mst`` compatibility shims are pinned
+bit-identical to it over the same families in ``tests/test_api.py``.
+
 The mesh engines (distributed / sharded) run over every local device; under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI matrix job,
 ``tests/test_distributed.py``'s subprocess) the same cells exercise real
@@ -16,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ENGINES, solve_mst
+from repro.core import ENGINES, SolveOptions, make_solver
 from repro.core.oracle import kruskal_numpy
 from repro.core.types import Graph
 from repro.graphs.generator import generate_graph
@@ -32,7 +36,8 @@ def _path_graph(n=48, seed=0):
     src = np.arange(n - 1, dtype=np.int32)
     dst = src + 1
     w = rng.random(n - 1).astype(np.float32)
-    return Graph(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)), n
+    return Graph(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+                 num_nodes=n)
 
 
 def _star_graph(n=48, seed=1):
@@ -42,7 +47,8 @@ def _star_graph(n=48, seed=1):
     src = np.zeros(n - 1, np.int32)
     dst = np.arange(1, n, dtype=np.int32)
     w = rng.random(n - 1).astype(np.float32)
-    return Graph(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w)), n
+    return Graph(jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+                 num_nodes=n)
 
 
 def _random_sparse(n=48, seed=2):
@@ -52,9 +58,9 @@ def _random_sparse(n=48, seed=2):
 def _duplicate_weight(n=48, seed=3):
     """Heavy ties: weights quantized to 1/4 — the rank construction must
     keep the forest unique and oracle-identical anyway."""
-    g, v = generate_graph(n, 4, seed=seed)
+    g = generate_graph(n, 4, seed=seed)
     w = jnp.round(g.weight * 4) / 4.0
-    return Graph(g.src, g.dst, w), v
+    return Graph(g.src, g.dst, w, num_nodes=g.num_nodes)
 
 
 def _disconnected_forest(n=48, seed=4):
@@ -65,7 +71,8 @@ def _disconnected_forest(n=48, seed=4):
     dst = src + 1
     w = rng.random(src.shape[0]).astype(np.float32)
     return Graph(jnp.asarray(src.astype(np.int32)),
-                 jnp.asarray(dst.astype(np.int32)), jnp.asarray(w)), n
+                 jnp.asarray(dst.astype(np.int32)), jnp.asarray(w),
+                 num_nodes=n)
 
 
 FAMILIES = {
@@ -83,9 +90,17 @@ def mesh():
     return make_flat_mesh(min(8, len(jax.devices())))
 
 
-def assert_matches_oracle(result, graph, num_nodes):
+def _options(engine, variant, mesh, **kw):
+    """SolveOptions with the module mesh wired in for mesh engines."""
+    return SolveOptions(engine=engine, variant=variant,
+                        mesh=mesh if ENGINES[engine].needs_mesh else "auto",
+                        **kw)
+
+
+def assert_matches_oracle(result, graph):
     """THE conformance assert: exact edge-set identity with Kruskal."""
-    om, ow, oc = kruskal_numpy(graph.src, graph.dst, graph.weight, num_nodes)
+    om, ow, oc = kruskal_numpy(graph.src, graph.dst, graph.weight,
+                               graph.num_nodes)
     mask = np.asarray(result.mst_mask)
     assert mask.shape == om.shape
     assert (mask == om).all(), (
@@ -99,14 +114,14 @@ def assert_matches_oracle(result, graph, num_nodes):
 @pytest.mark.parametrize("engine", ENGINE_NAMES)
 @pytest.mark.parametrize("variant", VARIANTS)
 def test_conformance_matrix(engine, variant, family, mesh):
-    graph, v = FAMILIES[family]()
-    r = solve_mst(graph, v, engine=engine, variant=variant,
-                  mesh=mesh if ENGINES[engine].needs_mesh else None)
-    assert_matches_oracle(r, graph, v)
+    graph = FAMILIES[family]()
+    solver = make_solver(_options(engine, variant, mesh))
+    assert_matches_oracle(solver.solve(graph), graph)
 
 
 # Engines with an in-engine frontier-compaction path (the sequential
-# baselines either never compact or always do, by definition).
+# baselines either never compact or always do, by definition — and the
+# validated SolveOptions *rejects* a cadence there, see tests/test_api.py).
 COMPACTION_ENGINES = ("single", "batched", "distributed", "sharded")
 
 
@@ -117,11 +132,10 @@ COMPACTION_ENGINES = ("single", "batched", "distributed", "sharded")
 def test_compaction_conformance(engine, variant, family, compaction, mesh):
     """Frontier compaction must be invisible in the results: exact Kruskal
     edge-set identity at every cadence (off is the matrix above)."""
-    graph, v = FAMILIES[family]()
-    r = solve_mst(graph, v, engine=engine, variant=variant,
-                  compaction=compaction,
-                  mesh=mesh if ENGINES[engine].needs_mesh else None)
-    assert_matches_oracle(r, graph, v)
+    graph = FAMILIES[family]()
+    solver = make_solver(_options(engine, variant, mesh,
+                                  compaction=compaction))
+    assert_matches_oracle(solver.solve(graph), graph)
 
 
 @pytest.mark.parametrize("engine", COMPACTION_ENGINES)
@@ -130,11 +144,10 @@ def test_compaction_preserves_round_structure(engine, variant, mesh):
     """Compaction only drops dead scan lanes, so the hooking decisions —
     and with them rounds and lock waves — must be identical to the
     uncompacted engine, not merely the final mask."""
-    graph, v = generate_graph(220, 5, seed=11)
-    m = mesh if ENGINES[engine].needs_mesh else None
-    r0 = solve_mst(graph, v, engine=engine, variant=variant, mesh=m)
-    r1 = solve_mst(graph, v, engine=engine, variant=variant, mesh=m,
-                   compaction=1)
+    graph = generate_graph(220, 5, seed=11)
+    r0 = make_solver(_options(engine, variant, mesh)).solve(graph)
+    r1 = make_solver(_options(engine, variant, mesh,
+                              compaction=1)).solve(graph)
     assert (np.asarray(r0.mst_mask) == np.asarray(r1.mst_mask)).all()
     assert int(r0.num_rounds) == int(r1.num_rounds)
     assert int(r0.num_waves) == int(r1.num_waves)
@@ -143,12 +156,9 @@ def test_compaction_preserves_round_structure(engine, variant, mesh):
 def test_compaction_kernel_path_matches_oracle():
     """The Pallas stream-compaction permutation plugs into the single
     engine and must leave the solve oracle-identical."""
-    from repro.core.mst import minimum_spanning_forest
-
-    graph, v = generate_graph(300, 5, seed=3)
-    r = minimum_spanning_forest(graph, num_nodes=v, compaction=1,
-                                compaction_kernel=True)
-    assert_matches_oracle(r, graph, v)
+    graph = generate_graph(300, 5, seed=3)
+    solver = make_solver(SolveOptions(compaction=1, compaction_kernel=True))
+    assert_matches_oracle(solver.solve(graph), graph)
 
 
 def test_registry_covers_matrix():
@@ -167,7 +177,7 @@ def test_sharded_topology_is_actually_sharded(mesh):
     from repro.graphs.partition_edges import partition_edges
 
     n_dev = mesh.shape["data"]
-    graph, v = generate_graph(400, 5, seed=17)
+    graph = generate_graph(400, 5, seed=17)
     part = partition_edges(graph, n_dev)
     arrays = shard_topology(part, mesh)
     for arr in arrays:
@@ -177,8 +187,8 @@ def test_sharded_topology_is_actually_sharded(mesh):
         shard_shapes = {s.data.shape for s in arr.addressable_shards}
         # Every device holds exactly one 1/n_dev block of the edge axis.
         assert shard_shapes == {(arr.shape[0] // n_dev,)}
-    r = sharded_msf(graph, num_nodes=v, mesh=mesh, partition=part)
-    assert_matches_oracle(r, graph, v)
+    r = sharded_msf(graph, mesh=mesh, partition=part)
+    assert_matches_oracle(r, graph)
 
 
 @pytest.mark.parametrize("variant", VARIANTS)
@@ -189,9 +199,9 @@ def test_sharded_matches_distributed_round_counts(variant, mesh):
     from repro.core.distributed_mst import distributed_msf
     from repro.core.sharded_mst import sharded_msf
 
-    graph, v = generate_graph(300, 5, seed=23)
-    r_d = distributed_msf(graph, num_nodes=v, mesh=mesh, variant=variant)
-    r_s = sharded_msf(graph, num_nodes=v, mesh=mesh, variant=variant)
+    graph = generate_graph(300, 5, seed=23)
+    r_d = distributed_msf(graph, mesh=mesh, variant=variant)
+    r_s = sharded_msf(graph, mesh=mesh, variant=variant)
     assert (np.asarray(r_d.mst_mask) == np.asarray(r_s.mst_mask)).all()
     assert int(r_d.num_rounds) == int(r_s.num_rounds)
     assert int(r_d.num_waves) == int(r_s.num_waves)

@@ -27,11 +27,11 @@ from repro.core.oracle import kruskal_numpy
 
 mesh = make_flat_mesh(8)
 out = {}
-g, v = generate_graph(600, 5, seed=11)
-om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, v)
+g = generate_graph(600, 5, seed=11)
+om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, g.num_nodes)
 for name, fn in (("distributed", distributed_msf), ("sharded", sharded_msf)):
     for variant in ("cas", "lock"):
-        r = fn(g, num_nodes=v, mesh=mesh, variant=variant)
+        r = fn(g, mesh=mesh, variant=variant)
         out[f"{name}-{variant}"] = {
             "match": bool((np.asarray(r.mst_mask) == om).all()),
             "ncomp": int(r.num_components),
@@ -74,10 +74,10 @@ def test_distributed_matches_single_device_on_trivial_mesh():
     from repro.core.mst import minimum_spanning_forest
     from repro.graphs.generator import generate_graph
 
-    g, v = generate_graph(400, 5, seed=21)
+    g = generate_graph(400, 5, seed=21)
     mesh = make_flat_mesh(1)
-    r_d = distributed_msf(g, num_nodes=v, mesh=mesh, variant="cas")
-    r_s = minimum_spanning_forest(g, num_nodes=v, variant="cas")
+    r_d = distributed_msf(g, mesh=mesh, variant="cas")
+    r_s = minimum_spanning_forest(g, variant="cas")
     assert (np.asarray(r_d.mst_mask) == np.asarray(r_s.mst_mask)).all()
     assert int(r_d.num_rounds) == int(r_s.num_rounds)
 
@@ -91,9 +91,9 @@ def test_sharded_matches_single_device_on_trivial_mesh():
     from repro.core.sharded_mst import sharded_msf
     from repro.graphs.generator import generate_graph
 
-    g, v = generate_graph(400, 5, seed=21)
+    g = generate_graph(400, 5, seed=21)
     mesh = make_flat_mesh(1)
-    r_d = sharded_msf(g, num_nodes=v, mesh=mesh, variant="cas")
-    r_s = minimum_spanning_forest(g, num_nodes=v, variant="cas")
+    r_d = sharded_msf(g, mesh=mesh, variant="cas")
+    r_s = minimum_spanning_forest(g, variant="cas")
     assert (np.asarray(r_d.mst_mask) == np.asarray(r_s.mst_mask)).all()
     assert int(r_d.num_rounds) == int(r_s.num_rounds)

@@ -221,7 +221,8 @@ def test_sharded_segment_min_matches_partition_layout():
     from repro.graphs.partition_edges import flatten_partition, \
         partition_edges
 
-    g, v = generate_graph(300, 5, seed=9)
+    g = generate_graph(300, 5, seed=9)
+    v = g.num_nodes
     part = partition_edges(g, 4)
     s_src, s_dst, s_rank, _ = flatten_partition(part)
     out = sharded_segment_min_edges(s_rank, s_src, s_dst, num_nodes=v,
@@ -235,7 +236,8 @@ def test_segment_min_inside_boruvka_round():
     """The kernel must be a drop-in for the engine's candidate search."""
     from repro.core.mst import rank_edges
     from repro.graphs.generator import generate_graph
-    g, v = generate_graph(300, 5, seed=9)
+    g = generate_graph(300, 5, seed=9)
+    v = g.num_nodes
     rank, order = rank_edges(g.weight)
     parent = jnp.arange(v, dtype=jnp.int32)
     cu, cv = parent[g.src], parent[g.dst]

@@ -44,7 +44,8 @@ def test_gnn_sampled_block_smoke(arch):
     from repro.graphs.csr import edges_to_csr
     from repro.graphs.generator import generate_graph
     from repro.graphs.sampler import sample_subgraph
-    g, v = generate_graph(2000, 6, seed=1)
+    g = generate_graph(2000, 6, seed=1)
+    v = g.num_nodes
     csr = edges_to_csr(np.asarray(g.src), np.asarray(g.dst), v)
     sub = sample_subgraph(csr, np.arange(32), [4, 3], key)
     feats = jax.random.normal(key, (v, 12))

@@ -14,37 +14,37 @@ from repro.core.partition import mst_partition
 from repro.graphs.generator import generate_graph
 
 
-def _check(result, graph, num_nodes, oracle_mask, oracle_total):
+def _check(result, graph, oracle_mask, oracle_total):
     mask = np.asarray(result.mst_mask)
     # distinct-rank construction => unique MSF => exact edge-set match
     assert (mask == oracle_mask).all()
     assert np.isclose(float(result.total_weight), oracle_total, rtol=1e-5)
     assert int(result.num_components) == 1
-    assert mask.sum() == num_nodes - 1
+    assert mask.sum() == graph.num_nodes - 1
 
 
 @pytest.mark.parametrize("n,deg,seed", [(60, 3, 0), (300, 6, 1),
                                         (1000, 4, 2)])
 @pytest.mark.parametrize("variant", ["cas", "lock"])
 def test_variants_match_oracle(n, deg, seed, variant):
-    g, v = generate_graph(n, deg, seed=seed)
-    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, v)
-    r = minimum_spanning_forest(g, num_nodes=v, variant=variant)
-    _check(r, g, v, om, ow)
+    g = generate_graph(n, deg, seed=seed)
+    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, g.num_nodes)
+    r = minimum_spanning_forest(g, variant=variant)
+    _check(r, g, om, ow)
 
 
 @pytest.mark.parametrize("fn", [mst_unoptimized, mst_optimized])
 def test_sequential_baselines(fn):
-    g, v = generate_graph(250, 5, seed=3)
-    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, v)
-    r = fn(g, v)
-    _check(r, g, v, om, ow)
+    g = generate_graph(250, 5, seed=3)
+    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, g.num_nodes)
+    r = fn(g)
+    _check(r, g, om, ow)
 
 
 def test_lock_and_cas_same_tree_different_waves():
-    g, v = generate_graph(500, 6, seed=4)
-    r_cas = minimum_spanning_forest(g, num_nodes=v, variant="cas")
-    r_lock = minimum_spanning_forest(g, num_nodes=v, variant="lock")
+    g = generate_graph(500, 6, seed=4)
+    r_cas = minimum_spanning_forest(g, variant="cas")
+    r_lock = minimum_spanning_forest(g, variant="lock")
     assert (np.asarray(r_cas.mst_mask) == np.asarray(r_lock.mst_mask)).all()
     # The lock protocol serializes: strictly more waves than CAS rounds.
     assert int(r_lock.num_waves) > int(r_cas.num_waves)
@@ -54,16 +54,28 @@ def test_duplicate_weights_handled():
     # Paper assumes distinct weights; our rank construction removes the
     # assumption - duplicate weights must still give a valid MSF whose
     # total weight matches the oracle's.
-    g, v = generate_graph(200, 4, seed=5)
+    g = generate_graph(200, 4, seed=5)
     w = jnp.round(g.weight * 8) / 8.0  # heavy ties
-    g = Graph(g.src, g.dst, w)
-    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, v)
-    r = minimum_spanning_forest(g, num_nodes=v)
+    g = Graph(g.src, g.dst, w, num_nodes=g.num_nodes)
+    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, g.num_nodes)
+    r = minimum_spanning_forest(g)
     assert (np.asarray(r.mst_mask) == om).all()
 
 
+def test_unsized_graph_needs_num_nodes():
+    """A legacy unsized Graph must fail loudly without a vertex count, and
+    solve identically when one is attached either way."""
+    g = generate_graph(80, 4, seed=12)
+    legacy = Graph(g.src, g.dst, g.weight)  # unsized
+    with pytest.raises(ValueError, match="num_nodes"):
+        minimum_spanning_forest(legacy)
+    r0 = minimum_spanning_forest(legacy, num_nodes=g.num_nodes)
+    r1 = minimum_spanning_forest(g)
+    assert (np.asarray(r0.mst_mask) == np.asarray(r1.mst_mask)).all()
+
+
 def test_rank_edges_bijection():
-    g, _ = generate_graph(100, 5, seed=6)
+    g = generate_graph(100, 5, seed=6)
     rank, order = rank_edges(g.weight)
     e = g.num_edges
     assert sorted(np.asarray(rank).tolist()) == list(range(e))
@@ -79,7 +91,8 @@ def test_pointer_jump_full_compression():
 
 
 def test_coarsening_merges_and_pools():
-    g, v = generate_graph(400, 5, seed=7)
+    g = generate_graph(400, 5, seed=7)
+    v = g.num_nodes
     c = boruvka_coarsen(g, num_nodes=v, num_rounds=1)
     nc = int(c.num_clusters)
     assert 1 <= nc < v
@@ -95,7 +108,8 @@ def test_coarsening_merges_and_pools():
 
 
 def test_mst_partition_covers_all_nodes():
-    g, v = generate_graph(300, 4, seed=8)
+    g = generate_graph(300, 4, seed=8)
+    v = g.num_nodes
     part, sizes = mst_partition(g.src, g.dst, g.weight, v, 4)
     assert part.shape == (v,)
     assert sizes.sum() == v

@@ -62,12 +62,12 @@ def test_property_live_counts_monotone(n, deg, seed):
     and compacted solves agree exactly with the uncompacted engine."""
     from repro.core.mst import live_edge_trace, minimum_spanning_forest
 
-    g, v = generate_graph(n, deg, seed=seed)
-    trace = live_edge_trace(g, v)
+    g = generate_graph(n, deg, seed=seed)
+    trace = live_edge_trace(g)
     assert all(a >= b for a, b in zip(trace, trace[1:]))
     assert trace[0] <= g.num_edges
-    r0 = minimum_spanning_forest(g, num_nodes=v)
-    r1 = minimum_spanning_forest(g, num_nodes=v, compaction=1)
+    r0 = minimum_spanning_forest(g)
+    r1 = minimum_spanning_forest(g, compaction=1)
     np.testing.assert_array_equal(np.asarray(r0.mst_mask),
                                   np.asarray(r1.mst_mask))
     assert int(r0.num_rounds) == int(r1.num_rounds)
@@ -78,11 +78,11 @@ def test_property_live_counts_monotone(n, deg, seed):
 def test_property_spanning_tree(n, deg, seed):
     """For any random connected graph: |M| = V-1, acyclic (forms one
     component), total weight equals the Kruskal optimum."""
-    g, v = generate_graph(n, deg, seed=seed)
-    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, v)
-    r = minimum_spanning_forest(g, num_nodes=v)
+    g = generate_graph(n, deg, seed=seed)
+    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, g.num_nodes)
+    r = minimum_spanning_forest(g)
     mask = np.asarray(r.mst_mask)
-    assert mask.sum() == v - 1
+    assert mask.sum() == g.num_nodes - 1
     assert int(r.num_components) == 1
     assert np.isclose(float(r.total_weight), ow, rtol=1e-5)
 

@@ -8,7 +8,8 @@ from repro.graphs.sampler import sample_subgraph
 
 
 def _setup(n=1000, deg=6, seed=0):
-    g, v = generate_graph(n, deg, seed=seed)
+    g = generate_graph(n, deg, seed=seed)
+    v = g.num_nodes
     return g, edges_to_csr(np.asarray(g.src), np.asarray(g.dst), v), v
 
 

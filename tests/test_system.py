@@ -18,10 +18,10 @@ def test_paper_table1_graph_classes_exist():
 def test_paper_pipeline_end_to_end_small():
     """Generator -> both parallel variants -> verified MST (the paper's
     full experimental pipeline at reduced scale)."""
-    g, v = generate_graph(10_000, 3, seed=42)
-    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, v)
+    g = generate_graph(10_000, 3, seed=42)
+    om, ow, _ = kruskal_numpy(g.src, g.dst, g.weight, g.num_nodes)
     for variant in ("cas", "lock"):
-        r = minimum_spanning_forest(g, num_nodes=v, variant=variant)
+        r = minimum_spanning_forest(g, variant=variant)
         assert (np.asarray(r.mst_mask) == om).all()
         assert int(r.num_components) == 1
 
