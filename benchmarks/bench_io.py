@@ -1,0 +1,72 @@
+"""Shared BENCH_mst.json I/O: merge-preserving writes for every section.
+
+``benchmarks/run.py --json`` used to overwrite the whole file, clobbering
+the ``_derived`` keys the standalone ``cluster_bench --smoke --json`` run
+had merged in (order-dependent drift).  Both entry points now write
+through :func:`merge_bench_json`:
+
+  * timing rows and their ``_derived`` strings are merged per key — a
+    section updates its own rows and preserves everyone else's;
+  * the ``_metrics`` section (the ``repro.obs`` snapshot) merges per
+    (metric name, labels): entries present in the new snapshot replace
+    the stored ones, entries only in the file survive.  Replacement —
+    not summation — because each writer snapshots its *own process*;
+    summing across reruns of the same section would double-count.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+JSON_PATH = os.path.normpath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                 "BENCH_mst.json"))
+
+
+def _metric_key(entry: Dict[str, object]) -> Tuple[str, tuple]:
+    return (entry["name"],
+            tuple(sorted(dict(entry.get("labels", {})).items())))
+
+
+def merge_metrics_sections(old: Optional[Dict[str, object]],
+                           new: Optional[Dict[str, object]]
+                           ) -> Optional[Dict[str, object]]:
+    """Merge two ``_metrics`` documents: new entries win per (name,
+    labels); entries only present in ``old`` are preserved."""
+    if not old:
+        return new
+    if not new:
+        return old
+    by_key = {_metric_key(e): e for e in old.get("metrics", [])}
+    for e in new.get("metrics", []):
+        by_key[_metric_key(e)] = e
+    return {"metrics": [by_key[k] for k in sorted(by_key)]}
+
+
+def merge_bench_json(rows: Sequence[Tuple[str, float, str]],
+                     path: str = JSON_PATH,
+                     metrics: Optional[Dict[str, object]] = None
+                     ) -> Dict[str, object]:
+    """Fold ``(name, us, derived)`` rows (and optionally an obs snapshot)
+    into ``path``, preserving every key this section does not produce.
+    Returns the written payload."""
+    payload: Dict[str, object] = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    derived: Dict[str, str] = payload.setdefault("_derived", {})
+    for name, us, der in rows:
+        payload[name] = round(us, 1)
+        if der:
+            derived[name] = der
+    if metrics is not None:
+        payload["_metrics"] = merge_metrics_sections(
+            payload.get("_metrics"), metrics)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return payload
+
+
+__all__ = ["JSON_PATH", "merge_bench_json", "merge_metrics_sections"]

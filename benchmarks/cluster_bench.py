@@ -20,15 +20,12 @@ run:
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import sys
 from typing import List, Sequence, Tuple
 
 import numpy as np
 
-JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
-                         "BENCH_mst.json")
+from benchmarks.bench_io import JSON_PATH, merge_bench_json
 
 # (kind, n, dim, knn_k) cells.  The smoke cell is a subset of the default
 # set so the CI regression job always has a committed baseline key; uniform
@@ -101,19 +98,15 @@ def cluster_rows(shapes: Sequence[Tuple[str, int, int, int]] = DEFAULT_SHAPES,
 
 def merge_json(rows: List[Tuple[str, float, str]], path: str) -> None:
     """Fold this section's keys into an existing BENCH_mst.json (or start a
-    fresh one) without touching other sections' keys."""
-    payload = {}
-    if os.path.exists(path):
-        with open(path) as f:
-            payload = json.load(f)
-    derived = payload.setdefault("_derived", {})
-    for name, us, der in rows:
-        payload[name] = round(us, 1)
-        if der:
-            derived[name] = der
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-        f.write("\n")
+    fresh one) without touching other sections' keys.
+
+    Thin wrapper over the shared ``benchmarks.bench_io.merge_bench_json``
+    (kept for backward compatibility); this process's obs snapshot rides
+    along so the emst_* escalation counters land in ``_metrics``.
+    """
+    from repro import obs
+
+    merge_bench_json(rows, path, metrics=obs.snapshot())
 
 
 def main() -> None:
@@ -131,9 +124,8 @@ def main() -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if args.json:
-        path = os.path.normpath(JSON_PATH)
-        merge_json(rows, path)
-        print(f"# merged {len(rows)} rows into {path}", file=sys.stderr)
+        merge_json(rows, JSON_PATH)
+        print(f"# merged {len(rows)} rows into {JSON_PATH}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -3,19 +3,18 @@
 Prints ``name,us_per_call,derived`` CSV.  Default scope is the reduced
 graph sweep (10K/100K); pass --full for the paper's 1M-vertex classes and
 --scaling for the multi-device scaling figures (subprocess per worker
-count).  --json additionally writes ``BENCH_mst.json``
-(``{name: us_per_call}``) so the perf trajectory is machine-readable
-across PRs.
+count).  --json additionally merges the rows into ``BENCH_mst.json``
+(``{name: us_per_call}`` + ``_derived`` + a ``_metrics`` obs snapshot)
+through ``benchmarks.bench_io`` so the perf trajectory is
+machine-readable across PRs and sections written by other entry points
+(``cluster_bench --smoke --json``) survive.
 """
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import sys
 
-JSON_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
-                         "BENCH_mst.json")
+from benchmarks.bench_io import JSON_PATH, merge_bench_json
 
 
 def solver_cache_rows(graph_name: str, repeats: int):
@@ -143,6 +142,11 @@ def main() -> None:
         from benchmarks import cluster_bench
         rows += cluster_bench.cluster_rows(cluster_bench.DEFAULT_SHAPES,
                                            repeats=max(args.repeats, 5))
+    # Service telemetry: frozen request stream, deterministic hit_rate and
+    # p50/p90/p99 flush-latency derived metrics (runs in smoke too — the
+    # CI metrics-schema step needs the mstserve_* keys in the snapshot).
+    from benchmarks import serve_bench
+    rows += serve_bench.serve_rows()
     if not (args.no_weak or args.smoke):
         # Sharded-engine weak scaling (forced 8-host-device subprocess):
         # per-device topology bytes land in BENCH_mst.json's derived column.
@@ -156,17 +160,14 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
 
     if args.json:
-        path = os.path.normpath(JSON_PATH)
-        payload = {name: round(us, 1) for name, us, _ in rows}
-        # Non-timing metrics (per-device topology bytes, rounds, graphs/s)
-        # ride along under "_derived" so the weak-scaling memory trajectory
-        # is machine-checkable across PRs, not just the wall times.
-        payload["_derived"] = {name: derived for name, us, derived in rows
-                               if derived}
-        with open(path, "w") as f:
-            json.dump(payload, f, indent=2, sort_keys=True)
-            f.write("\n")
-        print(f"# wrote {path}", file=sys.stderr)
+        from repro import obs
+
+        # Merge-preserving write: rows land under their own keys,
+        # non-timing metrics under "_derived", and the full process-wide
+        # telemetry snapshot (every MetricsRegistry this run created)
+        # under "_metrics" — scripts/dump_metrics.py renders it.
+        merge_bench_json(rows, JSON_PATH, metrics=obs.snapshot())
+        print(f"# wrote {JSON_PATH}", file=sys.stderr)
 
 
 if __name__ == "__main__":

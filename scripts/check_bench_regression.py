@@ -26,10 +26,21 @@ import sys
 # are absolute throughput and deliberately NOT here — a slower runner would
 # trip the threshold without any real regression.  warm_hit_rate is the
 # planned solver's plan-cache hit fraction on repeated same-shape solves
-# (benchmarks/run.solver_cache_rows): deterministic, so any engine change
-# that starts re-tracing warm shapes drops it straight through tolerance.
+# (benchmarks/run.solver_cache_rows) and hit_rate the service result-cache
+# fraction on serve_bench's frozen request stream: both deterministic, so
+# any change that starts re-tracing warm shapes or missing the cache drops
+# them straight through tolerance.
 SPEEDUP_METRICS = ("speedup_vs_off", "speedup_vs_unopt", "speedup_vs_opt",
-                   "cas_speedup", "speedup_vs_bruteforce", "warm_hit_rate")
+                   "cas_speedup", "speedup_vs_bruteforce", "warm_hit_rate",
+                   "hit_rate")
+
+# Metrics where SMALLER is better: histogram percentile summaries from the
+# obs layer (serve_bench's flush-latency p50/p90/p99).  Absolute
+# microseconds are NOT runner-portable, so CI pairs these with a generous
+# per-key --override rather than the default threshold — the gate exists
+# to catch order-of-magnitude instrumentation or batching regressions
+# (e.g. a compile sneaking into the measured flush path), not 20% noise.
+LATENCY_METRICS = ("p50_us", "p90_us", "p99_us")
 
 _PAIR = re.compile(r"([A-Za-z_][A-Za-z0-9_]*)=([-+0-9.eE]+)")
 
@@ -88,7 +99,7 @@ def main() -> int:
         new = parse_derived(json.load(f).get("_derived", {}))
 
     shared = [k for k in sorted(base) if k in new
-              and k[1] in SPEEDUP_METRICS]
+              and k[1] in SPEEDUP_METRICS + LATENCY_METRICS]
     if not shared:
         print("check_bench_regression: no shared speedup metrics — "
               "nothing to compare", file=sys.stderr)
@@ -98,7 +109,12 @@ def main() -> int:
     for key in shared:
         b, n = base[key], new[key]
         tol = tolerance_for(key, overrides, args.threshold)
-        drop = (b - n) / b if b > 0 else 0.0
+        if key[1] in LATENCY_METRICS:
+            # Smaller is better: regression = fractional GROWTH over the
+            # committed percentile.
+            drop = (n - b) / b if b > 0 else 0.0
+        else:
+            drop = (b - n) / b if b > 0 else 0.0
         status = "REGRESSED" if drop > tol else "ok"
         print(f"{key[0]}:{key[1]}  baseline={b:.3f}  new={n:.3f}  "
               f"drop={drop * 100:+.1f}%  tol={tol * 100:.0f}%  {status}")
@@ -110,7 +126,7 @@ def main() -> int:
               + ", ".join(f"{r}:{m}" for r, m in failures),
               file=sys.stderr)
         return 1
-    print(f"\nall {len(shared)} shared speedup metrics within tolerance")
+    print(f"\nall {len(shared)} shared metrics within tolerance")
     return 0
 
 

@@ -1,0 +1,89 @@
+"""Render BENCH_mst.json's ``_metrics`` section as Prometheus text.
+
+Usage:
+    PYTHONPATH=src python scripts/dump_metrics.py [BENCH_mst.json] [--check]
+
+Without ``--check``, prints the exposition (text format 0.0.4: ``# TYPE``
+lines, cumulative ``_bucket{le=...}`` series) to stdout — pipe it at a
+Pushgateway or diff it across runs.  With ``--check``, additionally
+validates the exposition grammar (TYPE-before-sample ordering, histogram
+``+Inf`` bucket presence, cumulative monotonicity, ``_count`` agreement)
+and asserts the REQUIRED_METRICS key set is present, exiting 1 with one
+line per problem — the CI metrics-schema step runs exactly this against
+the smoke benchmark's output.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+DEFAULT_PATH = os.path.normpath(
+    os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                 "BENCH_mst.json"))
+
+# Every name the instrumented smoke benchmark must emit: solver dispatch
+# telemetry (any engine), plan-cache counters, and the service-layer
+# queue/flush metrics.  A hook that silently stops recording breaks CI
+# here, not in production dashboards.
+REQUIRED_METRICS = (
+    "mst_solves_total",
+    "mst_plan_traces_total",
+    "mst_plan_hits_total",
+    "mst_solve_latency_us",
+    "mstserve_requests_total",
+    "mstserve_flushes_total",
+    "mstserve_flush_latency_us",
+    "mstserve_flush_batch_size",
+    "mstserve_queue_depth",
+    "mstserve_cache_hits_total",
+)
+
+
+def main() -> int:
+    from repro import obs
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", default=DEFAULT_PATH,
+                    help="BENCH_mst.json to read (default: repo root)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate exposition format + required key set")
+    args = ap.parse_args()
+
+    try:
+        with open(args.path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"dump_metrics: cannot read {args.path}: {e}", file=sys.stderr)
+        return 1
+    doc = payload.get("_metrics")
+    if not doc:
+        print(f"dump_metrics: {args.path} has no _metrics section — "
+              "run `python -m benchmarks.run --smoke --json` first",
+              file=sys.stderr)
+        return 1
+
+    text = obs.render_prometheus(doc)
+    print(text, end="")
+
+    if args.check:
+        errors = obs.check_exposition(text, required=REQUIRED_METRICS)
+        if errors:
+            for err in errors:
+                print(f"dump_metrics: {err}", file=sys.stderr)
+            print(f"dump_metrics: {len(errors)} problem(s) in {args.path}",
+                  file=sys.stderr)
+            return 1
+        n = len(doc.get("metrics", []))
+        print(f"# dump_metrics: OK — {n} metrics, "
+              f"{len(REQUIRED_METRICS)} required names present",
+              file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -38,8 +38,20 @@ from repro.core.solver import legacy_options
 from repro.core.types import Graph
 from repro.kernels.knn_graph.ops import knn_graph
 from repro.kernels.knn_graph.ref import pairwise_sq_dists
+from repro.obs.metrics import COUNT_BUCKETS, MetricsRegistry
+from repro.obs.trace import annotate
 
 DEFAULT_K = 8
+
+# Escalation telemetry for the whole clustering layer (DESIGN.md §4):
+# module-level because escalation spans solver instances; obs.snapshot()
+# picks it up like any per-instance registry.
+_REGISTRY = MetricsRegistry("emst")
+_M_REQUESTS = _REGISTRY.counter("emst_requests_total")
+_M_ESCALATIONS = _REGISTRY.counter("emst_escalations_total")
+_M_BRIDGES = _REGISTRY.counter("emst_bridge_edges_total")
+_H_CANDIDATES = _REGISTRY.histogram("emst_candidate_edges",
+                                    buckets=COUNT_BUCKETS)
 
 
 class EMSTResult(NamedTuple):
@@ -165,6 +177,7 @@ def euclidean_mst_many(
         solve_many_fn = make_solver(options).solve_many
     clouds = [np.asarray(c, np.float32) for c in clouds]
     out: List[Optional[EMSTResult]] = [None] * len(clouds)
+    _M_REQUESTS.inc(len(clouds))
     # Per-active-cloud escalation state.
     state = {}
     for i, pts in enumerate(clouds):
@@ -181,7 +194,9 @@ def euclidean_mst_many(
         requests = []
         for i in active:
             pts, s = clouds[i], state[i]
-            u, v, w = candidate_edges(pts, s["k"], extra=s["extra"])
+            with annotate("knn_graph"):
+                u, v, w = candidate_edges(pts, s["k"], extra=s["extra"])
+            _H_CANDIDATES.observe(u.shape[0])
             edge_lists[i] = (u, v, w)
             requests.append(Graph(jnp.asarray(u), jnp.asarray(v),
                                   jnp.asarray(w),
@@ -206,6 +221,7 @@ def euclidean_mst_many(
                         and (prev is None or nc < prev)):
                     s["k"] = min(n - 1, s["k"] * 2)
                     s["doublings"] += 1
+                    _M_ESCALATIONS.inc()
                     continue
                 bu, bv, bw = nearest_cross_component_edges(
                     clouds[i], np.asarray(r.parent))
@@ -216,6 +232,7 @@ def euclidean_mst_many(
                      np.concatenate([ex[1], bv]),
                      np.concatenate([ex[2], bw])))
                 s["bridges"] += bu.shape[0]
+                _M_BRIDGES.inc(bu.shape[0])
                 s["bridged"] = True
                 continue
             mask = np.asarray(r.mst_mask)

@@ -36,6 +36,7 @@ from repro.core.engine import (boruvka_epoch, init_frontier,
 from repro.core.mst import boruvka_round, rank_edges, _init_state
 from repro.core.types import GraphLike, as_request
 from repro.core.union_find import count_components
+from repro.obs.trace import phase as _obs_phase
 
 PAD_WEIGHT = jnp.float32(jnp.inf)  # sorts after every real weight
 
@@ -89,27 +90,28 @@ def pack_padded(graphs: Sequence[GraphLike], *, padded_edges: int,
     Host-side (numpy) construction; callers wanting automatic power-of-two
     bucketing should go through ``graphs.batching.pack_graphs``.
     """
-    b = len(graphs)
-    src = np.zeros((b, padded_edges), np.int32)
-    dst = np.zeros((b, padded_edges), np.int32)
-    weight = np.full((b, padded_edges), np.inf, np.float32)
-    nn = np.zeros((b,), np.int32)
-    ne = np.zeros((b,), np.int32)
-    for i, item in enumerate(graphs):
-        g = as_request(item)
-        v = g.num_nodes
-        e = g.num_edges
-        if e > padded_edges or v > padded_nodes:
-            raise ValueError(f"graph {i} ({v}V/{e}E) exceeds bucket "
-                             f"({padded_nodes}V/{padded_edges}E)")
-        src[i, :e] = np.asarray(g.src)
-        dst[i, :e] = np.asarray(g.dst)
-        weight[i, :e] = np.asarray(g.weight)
-        nn[i] = v
-        ne[i] = e
-    return BatchedGraph(jnp.asarray(src), jnp.asarray(dst),
-                        jnp.asarray(weight), jnp.asarray(nn),
-                        jnp.asarray(ne))
+    with _obs_phase("pack"):
+        b = len(graphs)
+        src = np.zeros((b, padded_edges), np.int32)
+        dst = np.zeros((b, padded_edges), np.int32)
+        weight = np.full((b, padded_edges), np.inf, np.float32)
+        nn = np.zeros((b,), np.int32)
+        ne = np.zeros((b,), np.int32)
+        for i, item in enumerate(graphs):
+            g = as_request(item)
+            v = g.num_nodes
+            e = g.num_edges
+            if e > padded_edges or v > padded_nodes:
+                raise ValueError(f"graph {i} ({v}V/{e}E) exceeds bucket "
+                                 f"({padded_nodes}V/{padded_edges}E)")
+            src[i, :e] = np.asarray(g.src)
+            dst[i, :e] = np.asarray(g.dst)
+            weight[i, :e] = np.asarray(g.weight)
+            nn[i] = v
+            ne[i] = e
+        return BatchedGraph(jnp.asarray(src), jnp.asarray(dst),
+                            jnp.asarray(weight), jnp.asarray(nn),
+                            jnp.asarray(ne))
 
 
 @functools.partial(

@@ -46,6 +46,7 @@ from repro.core.engine import (
     validate_variant,
 )
 from repro.core.union_find import pointer_jump, count_components
+from repro.obs.trace import annotate
 
 
 def _pad_to(x, n, fill):
@@ -142,9 +143,10 @@ def distributed_msf(graph: Graph, *, num_nodes: int = None, mesh: Mesh,
         run, mesh=mesh,
         in_specs=(shard, shard, shard, repl, repl, repl, repl),
         out_specs=repl)
-    parent, mst_mask, rounds, waves, total, ncomp = run_sharded(
-        scan_src, scan_dst, scan_rank, graph.src, graph.dst, order,
-        graph.weight)
+    with annotate("distributed_msf"):
+        parent, mst_mask, rounds, waves, total, ncomp = run_sharded(
+            scan_src, scan_dst, scan_rank, graph.src, graph.dst, order,
+            graph.weight)
     return MSTResult(parent=parent, mst_mask=mst_mask, num_rounds=rounds,
                      num_waves=waves, total_weight=total,
                      num_components=ncomp)

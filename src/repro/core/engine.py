@@ -42,6 +42,7 @@ import numpy as np
 
 from repro.core.types import Graph, MSTResult, INT_SENTINEL
 from repro.core.union_find import pointer_jump, count_components
+from repro.obs.trace import phase as _obs_phase
 
 # The paper's two synchronization schemes — the only hooking variants any
 # engine implements.  Every dispatch entry validates against this tuple
@@ -105,12 +106,13 @@ def rank_edges_host(weight) -> Tuple[jnp.ndarray, jnp.ndarray]:
     whose rank is computed at the host level (single, sequential,
     distributed, sharded; the batched engine ranks in-jit under vmap).
     """
-    w = np.asarray(weight)
-    e = w.shape[0]
-    order = np.argsort(w, kind="stable").astype(np.int32)
-    rank = np.empty((e,), np.int32)
-    rank[order] = np.arange(e, dtype=np.int32)
-    return jnp.asarray(rank), jnp.asarray(order)
+    with _obs_phase("rank"):
+        w = np.asarray(weight)
+        e = w.shape[0]
+        order = np.argsort(w, kind="stable").astype(np.int32)
+        rank = np.empty((e,), np.int32)
+        rank[order] = np.arange(e, dtype=np.int32)
+        return jnp.asarray(rank), jnp.asarray(order)
 
 
 class BoruvkaState(NamedTuple):

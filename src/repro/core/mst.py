@@ -38,10 +38,12 @@ compatibility.
 from __future__ import annotations
 
 import functools
+from typing import List, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import annotate
 from repro.core.types import Graph, MSTResult, INT_SENTINEL, ensure_sized
 from repro.core.engine import (  # noqa: F401  (re-exported API)
     BoruvkaState,
@@ -176,14 +178,32 @@ def _one_round_jit(state, scan_src, scan_dst, scan_rank, full_src, full_dst,
                          track_covered=track_covered, num_nodes=num_nodes)
 
 
-def live_edge_trace(graph: Graph, num_nodes: int = None, *,
-                    variant: str = "cas") -> list:
-    """Per-round live (non-covered) edge counts — the frontier-decay signal.
+class RoundTrace(NamedTuple):
+    """Per-round observables from the instrumented host round loop.
 
-    Host-side instrumented round loop (full-width scans; only the counts
-    are read out).  The counts are what a compacting engine's bucketed
-    prefix tracks, so this is both the EXPERIMENTS.md decay table and the
-    monotonicity oracle for the hypothesis property test.
+    Lists are indexed by completed (non-final) round, matching
+    ``live_edge_trace``'s historical convention: entry ``r`` is the value
+    *after* round ``r+1`` ran; the terminating round (where ``done``
+    flips) contributes no entry.
+    """
+
+    live: List[int]     # live (non-covered) edges after the round
+    commits: List[int]  # cumulative committed MST edges after the round
+    waves: List[int]    # cumulative hook waves after the round
+
+
+def round_trace(graph: Graph, num_nodes: int = None, *,
+                variant: str = "cas") -> RoundTrace:
+    """Round-level solve observables: live edges, cumulative commits,
+    cumulative hook waves per round.
+
+    Host-side instrumented round loop over the shared ``boruvka_round``
+    block (full-width scans; only scalars are read out per round).  The
+    conformance matrix pins hooking decisions — and with them rounds,
+    waves and the covered bits — identical across every engine and every
+    compaction cadence, so this one loop is the round-detail source for
+    all of them (``MSTSolver.trace_solve`` attaches it to a
+    :class:`repro.obs.SolveTrace`).
     """
     graph = ensure_sized(graph, num_nodes)
     num_nodes = graph.num_nodes
@@ -191,18 +211,33 @@ def live_edge_trace(graph: Graph, num_nodes: int = None, *,
     rank, order = rank_edges_host(graph.weight)
     e = graph.num_edges
     state = init_state(num_nodes, e, e)
-    counts = []
+    live, commits, waves = [], [], []
     while True:
-        state = _one_round_jit(state, graph.src, graph.dst, rank,
-                               graph.src, graph.dst, order,
-                               num_nodes=num_nodes, variant=variant,
-                               track_covered=True)
+        with annotate("boruvka_round"):
+            state = _one_round_jit(state, graph.src, graph.dst, rank,
+                                   graph.src, graph.dst, order,
+                                   num_nodes=num_nodes, variant=variant,
+                                   track_covered=True)
         if bool(state.done):
             break
-        counts.append(int(jnp.sum(~state.covered)))
-        if len(counts) > num_nodes:
+        live.append(int(jnp.sum(~state.covered)))
+        commits.append(int(jnp.sum(state.mst_mask)))
+        waves.append(int(state.num_waves))
+        if len(live) > num_nodes:
             raise RuntimeError("Borůvka failed to converge")
-    return counts
+    return RoundTrace(live, commits, waves)
+
+
+def live_edge_trace(graph: Graph, num_nodes: int = None, *,
+                    variant: str = "cas") -> list:
+    """Per-round live (non-covered) edge counts — the frontier-decay signal.
+
+    The counts are what a compacting engine's bucketed prefix tracks, so
+    this is both the EXPERIMENTS.md decay table and the monotonicity
+    oracle for the hypothesis property test.  (A view over
+    :func:`round_trace`, which also reads commits and waves.)
+    """
+    return round_trace(graph, num_nodes, variant=variant).live
 
 
 def mst_unoptimized(graph: Graph, num_nodes: int = None,
@@ -230,10 +265,11 @@ def _python_loop(graph: Graph, num_nodes, *, variant: str,
     scan_src, scan_dst, scan_rank = graph.src, graph.dst, rank
     rounds = 0
     while True:
-        state = _one_round_jit(state, scan_src, scan_dst, scan_rank,
-                               graph.src, graph.dst, order,
-                               num_nodes=num_nodes, variant=variant,
-                               track_covered=compact)
+        with annotate("boruvka_round"):
+            state = _one_round_jit(state, scan_src, scan_dst, scan_rank,
+                                   graph.src, graph.dst, order,
+                                   num_nodes=num_nodes, variant=variant,
+                                   track_covered=compact)
         if bool(state.done):
             break
         rounds += 1

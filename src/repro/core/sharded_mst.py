@@ -57,6 +57,7 @@ from repro.core.engine import (
 from repro.core.union_find import pointer_jump, count_components
 from repro.graphs.partition_edges import (EdgePartition, flatten_partition,
                                           partition_edges)
+from repro.obs.trace import annotate
 
 # Re-exported so engine users have one import surface.
 from repro.core.distributed_mst import make_flat_mesh  # noqa: F401
@@ -257,8 +258,9 @@ def sharded_msf(graph: Graph, *, num_nodes: int = None, mesh: Mesh,
         # mst_mask stays sharded through the whole solve; out_specs P(axis)
         # is the single gather that assembles the global mask.
         out_specs=(repl, shard, repl, repl, repl))
-    parent, mask_pad, rounds, waves, ncomp = run_sharded(
-        s_src, s_dst, s_rank, s_gid)
+    with annotate("sharded_msf"):
+        parent, mask_pad, rounds, waves, ncomp = run_sharded(
+            s_src, s_dst, s_rank, s_gid)
     mst_mask = mask_pad[:e]
     # Weights never reached the devices; one host-side reduction.
     total = jnp.sum(jnp.where(mst_mask, graph.weight, 0.0))

@@ -25,14 +25,20 @@ a module-level cache of default solvers keyed by options.
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import deque
 from typing import Dict, List, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh
 
 from repro.core.options import MESH_AUTO, SolveOptions
 from repro.core.registry import ENGINES
 from repro.core.types import Graph, GraphLike, MSTResult, as_request, \
     ensure_sized
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import SolveTrace, annotate, collect_phases
 
 
 @dataclasses.dataclass
@@ -70,7 +76,8 @@ class MSTSolver:
     with the engines it wraps (everything host-side is plain dict caching).
     """
 
-    def __init__(self, options: SolveOptions):
+    def __init__(self, options: SolveOptions,
+                 registry: Optional[MetricsRegistry] = None):
         if not isinstance(options, SolveOptions):
             raise TypeError(
                 f"make_solver takes a SolveOptions, got "
@@ -81,6 +88,26 @@ class MSTSolver:
         self._plans: Dict[tuple, object] = {}
         # Only a concrete Mesh is kept; the 'auto' policy resolves lazily.
         self._mesh = options.mesh if isinstance(options.mesh, Mesh) else None
+        # Telemetry (DESIGN.md §4): per-instance registry by default so
+        # ``solver.registry`` reads are exact; obs.snapshot() merges all
+        # registries for process-wide export.  The label set is fixed per
+        # solver, so every metric handle is created once, here.
+        self.registry = (registry if registry is not None
+                         else MetricsRegistry("mst"))
+        lbl = dict(engine=options.engine, variant=options.variant)
+        reg = self.registry
+        self._m_solves = reg.counter("mst_solves_total", **lbl)
+        self._m_batches = reg.counter("mst_batches_total", **lbl)
+        self._m_traces = reg.counter("mst_plan_traces_total", **lbl)
+        self._m_hits = reg.counter("mst_plan_hits_total", **lbl)
+        self._m_rounds = reg.counter("mst_rounds_total", **lbl)
+        self._m_waves = reg.counter("mst_waves_total", **lbl)
+        self._h_total = reg.histogram("mst_solve_latency_us", **lbl)
+        self._h_rank = reg.histogram("mst_rank_latency_us", **lbl)
+        self._h_pack = reg.histogram("mst_pack_latency_us", **lbl)
+        # Ring of recent SolveTraces (``last_trace`` is traces[-1]).
+        self.traces: "deque[SolveTrace]" = deque(maxlen=256)
+        self.last_trace: Optional[SolveTrace] = None
 
     # -- mesh policy --------------------------------------------------------
 
@@ -101,14 +128,18 @@ class MSTSolver:
     # -- plan cache ---------------------------------------------------------
 
     def _plan(self, key: tuple, build):
+        """Fetch-or-build the plan for ``key``; returns ``(plan, hit)``."""
         plan = self._plans.get(key)
-        if plan is None:
+        hit = plan is not None
+        if not hit:
             plan = self._plans[key] = build()
             self.stats.traces += 1
+            self._m_traces.inc()
         else:
             self.stats.plan_hits += 1
+            self._m_hits.inc()
         self.stats.shapes[key] = self.stats.shapes.get(key, 0) + 1
-        return plan
+        return plan, hit
 
     def _graph_plan(self, graph: Graph):
         """Per-(E, V) plan for the per-graph engines: all statics bound."""
@@ -141,6 +172,49 @@ class MSTSolver:
 
         return self._plan((batch_size, padded_edges, padded_nodes), build)
 
+    # -- instrumented dispatch ----------------------------------------------
+
+    def _run_plan(self, plan, arg, *, plan_key, plan_hit, batch_size,
+                  shape, reader):
+        """Run one engine dispatch and emit its :class:`SolveTrace`.
+
+        The dispatch blocks (``jax.block_until_ready``) so the recorded
+        latency is honest end-to-end wall time; every caller of a solve
+        either blocks immediately after anyway (benchmarks, serving) or
+        reads results right away.  Host-side phases deep in the engines
+        (``rank_edges_host`` -> "rank", packing helpers -> "pack") report
+        into a thread-local collector; ``solve_us`` is the remainder.
+        ``reader(result)`` pulls ``(rounds, waves, mst_edges)`` — scalar
+        device reads, performed after the block.
+        """
+        with collect_phases() as phases, \
+                annotate(f"mst_solve:{self.options.engine}"):
+            t0 = time.perf_counter()
+            result = plan(arg)
+            jax.block_until_ready(result)
+            total_us = (time.perf_counter() - t0) * 1e6
+        rank_us = phases.get("rank", 0.0) * 1e6
+        pack_us = phases.get("pack", 0.0) * 1e6
+        rounds, waves, mst_edges = reader(result)
+        trace = SolveTrace(
+            engine=self.options.engine, variant=self.options.variant,
+            compaction=self.options.compaction, shape=shape,
+            batch_size=batch_size, plan_key=plan_key, plan_hit=plan_hit,
+            num_rounds=rounds, num_waves=waves, mst_edges=mst_edges,
+            rank_us=rank_us, pack_us=pack_us,
+            solve_us=max(0.0, total_us - rank_us - pack_us),
+            total_us=total_us)
+        self.traces.append(trace)
+        self.last_trace = trace
+        self._m_solves.inc(batch_size)
+        self._m_batches.inc()
+        self._m_rounds.inc(rounds)
+        self._m_waves.inc(waves)
+        self._h_total.observe(total_us)
+        if rank_us:
+            self._h_rank.observe(rank_us)
+        return result
+
     # -- solving ------------------------------------------------------------
 
     def solve(self, graph: Graph,
@@ -152,7 +226,16 @@ class MSTSolver:
             return self.solve_many([graph])[0]
         self.stats.solves += 1
         self.stats.batches += 1
-        return self._graph_plan(graph)(graph)
+        key = (graph.num_edges, graph.num_nodes)
+        plan, hit = self._graph_plan(graph)
+        num_nodes = graph.num_nodes
+
+        def reader(r):
+            return (int(r.num_rounds), int(r.num_waves),
+                    num_nodes - int(r.num_components))
+
+        return self._run_plan(plan, graph, plan_key=key, plan_hit=hit,
+                              batch_size=1, shape=key, reader=reader)
 
     def solve_many(self, requests: Sequence[GraphLike]) -> List[MSTResult]:
         """Solve a request list; per-request results in input order.
@@ -171,9 +254,24 @@ class MSTSolver:
 
         from repro.graphs.batching import pack_graphs, unpack_results_mst
 
-        buckets = pack_graphs(graphs, max_batch=self.options.max_batch)
-        results = [self.solve_packed(b) for b in buckets]
-        return unpack_results_mst(buckets, results)
+        # The outer collector catches the "pack" phases (lane packing +
+        # result trimming) that run outside the per-bucket dispatches;
+        # the per-bucket traces get an even share of that wall time.
+        with collect_phases() as outer:
+            buckets = pack_graphs(graphs, max_batch=self.options.max_batch)
+            results, emitted = [], []
+            for b in buckets:
+                results.append(self.solve_packed(b))
+                emitted.append(self.last_trace)
+            out = unpack_results_mst(buckets, results)
+        pack_us = outer.get("pack", 0.0) * 1e6
+        if pack_us and emitted:
+            self._h_pack.observe(pack_us)
+            share = pack_us / len(emitted)
+            for t in emitted:
+                t.pack_us += share
+                t.total_us += share
+        return out
 
     def solve_packed(self, bucket):
         """Solve one pre-packed shape bucket (``graphs.batching
@@ -190,16 +288,52 @@ class MSTSolver:
                 f"use solve()/solve_many()")
         self.stats.solves += len(bucket.indices)
         self.stats.batches += 1
-        plan = self._bucket_plan(len(bucket.indices), bucket.padded_edges,
-                                 bucket.padded_nodes)
-        return plan(bucket.graph)
+        key = (len(bucket.indices), bucket.padded_edges, bucket.padded_nodes)
+        plan, hit = self._bucket_plan(*key)
+        nn = bucket.graph.num_nodes
+
+        def reader(r):
+            return (int(jnp.max(r.num_rounds)), int(jnp.max(r.num_waves)),
+                    int(jnp.sum(nn - r.num_components)))
+
+        return self._run_plan(plan, bucket.graph, plan_key=key,
+                              plan_hit=hit, batch_size=len(bucket.indices),
+                              shape=(bucket.padded_edges,
+                                     bucket.padded_nodes), reader=reader)
+
+    def trace_solve(self, graph: Graph, num_nodes: Optional[int] = None):
+        """Solve one graph and return ``(result, trace)`` with the
+        per-round detail arrays filled in.
+
+        The detail comes from the shared instrumented host round loop
+        (:func:`repro.core.mst.round_trace`): the conformance matrix pins
+        hooking decisions identical across every engine and compaction
+        cadence, so the arrays are engine-exact even though the detail
+        pass re-runs the rounds one ``boruvka_round`` at a time.  Use for
+        diagnosis, not on hot paths (it re-solves the graph once more).
+        """
+        from repro.core.engine import scan_bucket_sizes
+        from repro.core.mst import round_trace
+
+        graph = ensure_sized(graph, num_nodes)
+        result = self.solve(graph)
+        trace = self.last_trace
+        rt = round_trace(graph, variant=self.options.variant)
+        trace.live_per_round = rt.live
+        trace.commits_per_round = rt.commits
+        trace.waves_per_round = rt.waves
+        sizes = scan_bucket_sizes(graph.num_edges)
+        trace.buckets_per_round = [
+            next(s for s in sizes if s >= c) for c in rt.live]
+        return result, trace
 
     def __repr__(self) -> str:
         return (f"MSTSolver({self.options!r}, traces={self.stats.traces}, "
                 f"plan_hits={self.stats.plan_hits})")
 
 
-def make_solver(options: Optional[SolveOptions] = None,
+def make_solver(options: Optional[SolveOptions] = None, *,
+                registry: Optional[MetricsRegistry] = None,
                 **kwargs) -> MSTSolver:
     """Build a planned solver.
 
@@ -210,13 +344,16 @@ def make_solver(options: Optional[SolveOptions] = None,
 
     Validation (unknown engine/variant, impossible mesh policy, capability
     mismatches) happens here, eagerly — not at the first solve.
+    ``registry`` shares an existing :class:`repro.obs.MetricsRegistry`
+    (the serving layer passes its own so service and solver metrics land
+    in one place); by default each solver gets a fresh one.
     """
     if options is None:
         options = SolveOptions(**kwargs)
     elif kwargs:
         raise TypeError("pass either a SolveOptions or keyword fields, "
                         "not both")
-    return MSTSolver(options)
+    return MSTSolver(options, registry=registry)
 
 
 # ---------------------------------------------------------------------------

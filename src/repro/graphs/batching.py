@@ -21,6 +21,7 @@ import numpy as np
 from repro.core.batched_mst import (BatchedGraph, BatchedMSTResult,
                                     pack_padded)
 from repro.core.types import GraphLike, as_request
+from repro.obs.trace import phase as _obs_phase
 
 MIN_BUCKET = 64  # below this, shapes collapse into one tiny bucket
 
@@ -96,20 +97,21 @@ def unpack_results_mst(buckets: Sequence[PackedBucket],
 
     n = sum(len(b.indices) for b in buckets)
     out: List[MSTResult] = [None] * n  # type: ignore[list-item]
-    for bucket, res in zip(buckets, results):
-        # One device->host transfer per bucket (not per lane per field).
-        res_np = jax.device_get(res)
-        nn = np.asarray(bucket.graph.num_nodes)
-        ne = np.asarray(bucket.graph.num_edges)
-        for lane, orig in enumerate(bucket.indices):
-            v, e = int(nn[lane]), int(ne[lane])
-            out[orig] = MSTResult(
-                parent=res_np.parent[lane, :v],
-                mst_mask=res_np.mst_mask[lane, :e],
-                num_rounds=res_np.num_rounds[lane],
-                num_waves=res_np.num_waves[lane],
-                total_weight=res_np.total_weight[lane],
-                num_components=res_np.num_components[lane])
+    with _obs_phase("pack"):
+        for bucket, res in zip(buckets, results):
+            # One device->host transfer per bucket (not per lane per field).
+            res_np = jax.device_get(res)
+            nn = np.asarray(bucket.graph.num_nodes)
+            ne = np.asarray(bucket.graph.num_edges)
+            for lane, orig in enumerate(bucket.indices):
+                v, e = int(nn[lane]), int(ne[lane])
+                out[orig] = MSTResult(
+                    parent=res_np.parent[lane, :v],
+                    mst_mask=res_np.mst_mask[lane, :e],
+                    num_rounds=res_np.num_rounds[lane],
+                    num_waves=res_np.num_waves[lane],
+                    total_weight=res_np.total_weight[lane],
+                    num_components=res_np.num_components[lane])
     return out
 
 

@@ -1,6 +1,6 @@
 """PartitionSpec rules for every family (the distribution config).
 
-Scheme (DESIGN.md §4):
+Scheme (DESIGN.md §7):
   * ``model`` axis = tensor parallel (attention heads / ffn width / vocab /
     expert-ffn width) - ``data`` (x ``pod``) axis = batch + FSDP weight
     sharding + expert parallelism over the expert dim.

@@ -1,0 +1,34 @@
+"""repro.obs — the unified telemetry layer (DESIGN.md §4).
+
+One import surface for every layer:
+
+    from repro import obs
+
+    reg = obs.MetricsRegistry("mstserve")
+    reg.counter("mstserve_requests_total").inc()
+    reg.histogram("mstserve_flush_latency_us").observe(runtime_us)
+
+    text = obs.render_prometheus(obs.snapshot())
+
+Solvers (``repro.core.MSTSolver``) and services
+(``repro.serve.MSTService``) create a registry each and emit a
+:class:`SolveTrace` per engine dispatch; ``benchmarks/run.py --json``
+stores :func:`snapshot` under ``BENCH_mst.json``'s ``_metrics`` key and
+``scripts/dump_metrics.py`` renders/validates the Prometheus exposition.
+"""
+from repro.obs.metrics import (BATCH_BUCKETS, COUNT_BUCKETS, Counter,
+                               Gauge, Histogram, LATENCY_BUCKETS_US,
+                               MetricsRegistry, all_registries,
+                               check_exposition, merge_metric_lists,
+                               render_prometheus, snapshot)
+from repro.obs.trace import (SolveTrace, annotate, annotations_enabled,
+                             collect_phases, enable_annotations, phase)
+
+__all__ = [
+    "LATENCY_BUCKETS_US", "BATCH_BUCKETS", "COUNT_BUCKETS",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "all_registries", "merge_metric_lists", "snapshot",
+    "render_prometheus", "check_exposition",
+    "SolveTrace", "phase", "collect_phases", "annotate",
+    "enable_annotations", "annotations_enabled",
+]

@@ -1,0 +1,497 @@
+"""Host-side metrics primitives: counters, gauges, fixed-bucket histograms.
+
+The registry is the unified telemetry spine (DESIGN.md §4).  Everything
+here is deliberately *jit-free*: metrics are plain Python objects mutated
+on the host, and the engine layer only touches them around
+``block_until_ready`` boundaries (the solver wrapper) or inside host-side
+phases (edge ranking, lane packing).  Nothing in this module imports the
+core engines, so any layer — core, serve, cluster, benchmarks — can depend
+on it without cycles.
+
+Naming scheme (pinned by ``scripts/dump_metrics.py --check``):
+
+  * prefix by layer — ``mst_`` solver/engine, ``mstserve_`` service,
+    ``emst_`` clustering;
+  * monotone counters end in ``_total``;
+  * latency histograms end in ``_latency_us`` and use
+    :data:`LATENCY_BUCKETS_US`;
+  * gauges are bare nouns (``mstserve_queue_depth``).
+
+Registries auto-enroll in a process-wide index so
+:func:`snapshot` can merge every live registry (solver + service +
+cluster) into one exportable document — that merged JSON is what
+``benchmarks/run.py --json`` stores under ``BENCH_mst.json``'s
+``_metrics`` key and what the Prometheus exposition renders from.
+"""
+from __future__ import annotations
+
+import math
+import re
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# Default histogram boundaries.  Latencies are recorded in microseconds;
+# the geometric ladder spans 10us..10s, which covers a cache hit at the
+# bottom and a cold 100K-edge distributed solve at the top.
+LATENCY_BUCKETS_US: Tuple[float, ...] = (
+    10.0, 20.0, 50.0, 100.0, 200.0, 500.0,
+    1e3, 2e3, 5e3, 1e4, 2e4, 5e4, 1e5, 2e5, 5e5, 1e6, 2e6, 5e6, 1e7)
+
+# Pow2 ladder for batch sizes / lane counts (mirrors the pow2 shape
+# bucketing in ``graphs/batching.py``).
+BATCH_BUCKETS: Tuple[float, ...] = (
+    1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0)
+
+# Pow2-ish ladder for structural counts (candidate edges, rounds).
+COUNT_BUCKETS: Tuple[float, ...] = tuple(
+    float(1 << i) for i in range(0, 21, 2))
+
+_METRIC_NAME = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_NAME = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
+
+def _check_name(name: str) -> str:
+    if not _METRIC_NAME.match(name):
+        raise ValueError(f"invalid metric name {name!r}")
+    return name
+
+
+class Counter:
+    """A monotone counter.  ``inc`` only; reset via the owning registry."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError("counters only go up; use a Gauge")
+        self.value += n
+
+
+class Gauge:
+    """A point-in-time value (queue depth, hit rate)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def inc(self, n: float = 1.0) -> None:
+        self.value += n
+
+    def dec(self, n: float = 1.0) -> None:
+        self.value -= n
+
+
+class Histogram:
+    """Fixed-bucket histogram with interpolated percentile summaries.
+
+    ``buckets`` are ascending *upper* bounds; one extra overflow bucket
+    (``+Inf``) catches values beyond the last boundary.  Percentiles are
+    estimated by linear interpolation inside the containing bucket and
+    clamped to the observed ``[min, max]`` — so a single-sample histogram
+    reports that exact value at every percentile, and overflow samples
+    never report a made-up bound beyond the largest value actually seen.
+    """
+
+    __slots__ = ("buckets", "counts", "count", "sum", "min", "max")
+
+    def __init__(self, buckets: Sequence[float] = LATENCY_BUCKETS_US):
+        bs = tuple(float(b) for b in buckets)
+        if not bs or any(b2 <= b1 for b1, b2 in zip(bs, bs[1:])):
+            raise ValueError("histogram buckets must be ascending and "
+                             "non-empty")
+        self.buckets = bs
+        self._zero()
+
+    def _zero(self) -> None:
+        self.counts = [0] * (len(self.buckets) + 1)  # last = overflow
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        i = 0
+        for i, b in enumerate(self.buckets):
+            if v <= b:
+                break
+        else:
+            i = len(self.buckets)  # overflow
+        self.counts[i] += 1
+        self.count += 1
+        self.sum += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+
+    def percentile(self, p: float) -> float:
+        """Interpolated p-th percentile (0..100); 0.0 when empty."""
+        if self.count == 0:
+            return 0.0
+        target = max(1.0, math.ceil(p / 100.0 * self.count))
+        cum = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if cum + c >= target:
+                lo = self.buckets[i - 1] if i > 0 else self.min
+                hi = (self.buckets[i] if i < len(self.buckets)
+                      else self.max)
+                frac = (target - cum) / c
+                est = lo + (hi - lo) * frac
+                return min(max(est, self.min), self.max)
+            cum += c
+        return self.max  # unreachable, but total
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50)
+
+    @property
+    def p90(self) -> float:
+        return self.percentile(90)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "count": self.count,
+            "sum": self.sum,
+            "min": self.min if self.count else 0.0,
+            "max": self.max if self.count else 0.0,
+            "p50": self.p50, "p90": self.p90, "p99": self.p99,
+        }
+
+
+# Process-wide registry index: strong references on purpose.  Benchmark
+# sections build solvers/services and drop them after timing; their
+# metrics must still be alive when --json snapshots the process.
+_REGISTRIES: List["MetricsRegistry"] = []
+_REGISTRIES_LOCK = threading.Lock()
+
+
+class MetricsRegistry:
+    """Get-or-create registry of named, labelled metrics.
+
+    One registry per solver/service instance keeps per-instance views
+    (``ServiceStats``) exact; :func:`snapshot` merges all registries for
+    process-wide export.  Same (name, labels) returns the same object;
+    same name under a different metric *type* is an error.
+    """
+
+    def __init__(self, namespace: str = "") -> None:
+        self.namespace = namespace
+        self._metrics: Dict[Tuple[str, Tuple[Tuple[str, str], ...]],
+                            object] = {}
+        self._types: Dict[str, str] = {}
+        self._lock = threading.Lock()
+        with _REGISTRIES_LOCK:
+            _REGISTRIES.append(self)
+
+    # -- creation -----------------------------------------------------------
+
+    def _get(self, kind: str, name: str, labels: Dict[str, str], build):
+        _check_name(name)
+        for k in labels:
+            if not _LABEL_NAME.match(k):
+                raise ValueError(f"invalid label name {k!r}")
+        key = (name, tuple(sorted((k, str(v)) for k, v in labels.items())))
+        with self._lock:
+            seen = self._types.get(name)
+            if seen is not None and seen != kind:
+                raise ValueError(
+                    f"metric {name!r} already registered as {seen}, "
+                    f"cannot re-register as {kind}")
+            self._types[name] = kind
+            m = self._metrics.get(key)
+            if m is None:
+                m = self._metrics[key] = build()
+            return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get("counter", name, labels, Counter)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get("gauge", name, labels, Gauge)
+
+    def histogram(self, name: str,
+                  buckets: Sequence[float] = LATENCY_BUCKETS_US,
+                  **labels) -> Histogram:
+        # ``buckets`` only applies at creation; later get-or-create calls
+        # return the existing histogram unchanged.
+        return self._get("histogram", name, labels,
+                         lambda: Histogram(buckets))
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def reset(self) -> None:
+        """Zero every metric, keeping all handed-out handles valid."""
+        with self._lock:
+            for m in self._metrics.values():
+                if isinstance(m, Histogram):
+                    m._zero()
+                else:
+                    m.value = 0.0
+
+    # -- export -------------------------------------------------------------
+
+    def to_json(self) -> Dict[str, object]:
+        """Self-describing JSON document (the ``_metrics`` schema)."""
+        out = []
+        with self._lock:
+            items = sorted(self._metrics.items())
+        for (name, labels), m in items:
+            entry: Dict[str, object] = {
+                "name": name,
+                "type": self._types[name],
+                "labels": dict(labels),
+            }
+            if isinstance(m, Histogram):
+                entry["buckets"] = list(m.buckets)
+                entry["counts"] = list(m.counts)
+                entry.update(m.summary())
+            else:
+                entry["value"] = m.value
+            out.append(entry)
+        return {"metrics": out}
+
+
+def all_registries() -> List[MetricsRegistry]:
+    with _REGISTRIES_LOCK:
+        return list(_REGISTRIES)
+
+
+def merge_metric_lists(docs: Sequence[Dict[str, object]]
+                       ) -> Dict[str, object]:
+    """Merge ``to_json()`` documents into one.
+
+    Counters and gauges with the same (name, labels) sum; histograms sum
+    their bucket counts (bucket boundaries must agree) and combine
+    min/max.  Percentiles are recomputed from the merged counts.  Gauges
+    summing is a documented approximation — per-instance queue depths add
+    up to "total queued across instances", which is the fleet-level
+    reading a scrape wants.
+    """
+    merged: Dict[Tuple[str, Tuple[Tuple[str, str], ...]],
+                 Dict[str, object]] = {}
+    for doc in docs:
+        for entry in doc.get("metrics", []):
+            key = (entry["name"],
+                   tuple(sorted(entry.get("labels", {}).items())))
+            cur = merged.get(key)
+            if cur is None:
+                merged[key] = {k: (list(v) if isinstance(v, list) else v)
+                               for k, v in entry.items()}
+                continue
+            if cur["type"] != entry["type"]:
+                raise ValueError(
+                    f"metric {entry['name']!r} merged across types "
+                    f"{cur['type']!r} vs {entry['type']!r}")
+            if entry["type"] == "histogram":
+                if list(cur["buckets"]) != list(entry["buckets"]):
+                    raise ValueError(
+                        f"histogram {entry['name']!r} bucket mismatch")
+                cur["counts"] = [a + b for a, b in zip(cur["counts"],
+                                                       entry["counts"])]
+                cur["count"] = cur["count"] + entry["count"]
+                cur["sum"] = cur["sum"] + entry["sum"]
+                if entry["count"]:
+                    cur["min"] = (min(cur["min"], entry["min"])
+                                  if cur["count"] - entry["count"]
+                                  else entry["min"])
+                    cur["max"] = max(cur["max"], entry["max"])
+            else:
+                cur["value"] = cur["value"] + entry["value"]
+    # Recompute percentile summaries for merged histograms.
+    for cur in merged.values():
+        if cur["type"] == "histogram" and cur["count"]:
+            h = Histogram(cur["buckets"])
+            h.counts = list(cur["counts"])
+            h.count = int(cur["count"])
+            h.sum = float(cur["sum"])
+            h.min = float(cur["min"])
+            h.max = float(cur["max"])
+            cur.update(h.summary())
+    return {"metrics": [merged[k] for k in sorted(merged)]}
+
+
+def snapshot() -> Dict[str, object]:
+    """Merge every live registry in the process into one JSON document."""
+    return merge_metric_lists([r.to_json() for r in all_registries()])
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text exposition (format 0.0.4) — render + validate.
+# ---------------------------------------------------------------------------
+
+def _fmt_labels(labels: Dict[str, str], extra: Optional[Tuple[str, str]]
+                = None) -> str:
+    pairs = sorted(labels.items())
+    if extra is not None:
+        pairs = pairs + [extra]
+    if not pairs:
+        return ""
+    body = ",".join(f'{k}="{str(v)}"' for k, v in pairs)
+    return "{" + body + "}"
+
+
+def _fmt_num(v: float) -> str:
+    f = float(v)
+    if f == math.inf:
+        return "+Inf"
+    if f == int(f) and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def render_prometheus(doc: Dict[str, object]) -> str:
+    """Render a ``to_json()``/``snapshot()`` document as a Prometheus
+    text exposition."""
+    by_name: Dict[str, List[Dict[str, object]]] = {}
+    types: Dict[str, str] = {}
+    for entry in doc.get("metrics", []):
+        by_name.setdefault(entry["name"], []).append(entry)
+        types[entry["name"]] = entry["type"]
+    lines: List[str] = []
+    for name in sorted(by_name):
+        lines.append(f"# TYPE {name} {types[name]}")
+        for entry in by_name[name]:
+            labels = dict(entry.get("labels", {}))
+            if entry["type"] != "histogram":
+                lines.append(f"{name}{_fmt_labels(labels)} "
+                             f"{_fmt_num(entry['value'])}")
+                continue
+            cum = 0
+            bounds = list(entry["buckets"]) + [math.inf]
+            for b, c in zip(bounds, entry["counts"]):
+                cum += c
+                le = _fmt_labels(labels, ("le", _fmt_num(b)))
+                lines.append(f"{name}_bucket{le} {cum}")
+            lines.append(f"{name}_sum{_fmt_labels(labels)} "
+                         f"{_fmt_num(entry['sum'])}")
+            lines.append(f"{name}_count{_fmt_labels(labels)} "
+                         f"{_fmt_num(entry['count'])}")
+    return "\n".join(lines) + "\n"
+
+
+_SAMPLE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?P<labels>\{[^{}]*\})?"
+    r" (?P<value>[^ ]+)$")
+_LABEL_PAIR = re.compile(r'^[a-zA-Z_][a-zA-Z0-9_]*="[^"\\]*"$')
+
+
+def check_exposition(text: str,
+                     required: Sequence[str] = ()) -> List[str]:
+    """Validate an exposition: grammar, TYPE-before-samples, histogram
+    series completeness (+Inf bucket, cumulative monotone, count
+    agreement) and the required metric-name set.  Returns a list of
+    error strings (empty = valid)."""
+    errors: List[str] = []
+    declared: Dict[str, str] = {}
+    # (hist base name, labels-without-le) -> list of (bound, cum value)
+    hist_buckets: Dict[Tuple[str, str], List[Tuple[float, float]]] = {}
+    hist_counts: Dict[Tuple[str, str], float] = {}
+    seen_names = set()
+
+    for ln, raw in enumerate(text.splitlines(), 1):
+        line = raw.rstrip()
+        if not line:
+            continue
+        if line.startswith("#"):
+            parts = line.split()
+            if len(parts) >= 2 and parts[1] == "TYPE":
+                if len(parts) != 4:
+                    errors.append(f"line {ln}: malformed TYPE comment")
+                elif parts[3] not in ("counter", "gauge", "histogram",
+                                      "summary", "untyped"):
+                    errors.append(f"line {ln}: unknown type {parts[3]!r}")
+                else:
+                    declared[parts[2]] = parts[3]
+            continue
+        m = _SAMPLE.match(line)
+        if not m:
+            errors.append(f"line {ln}: unparseable sample {line!r}")
+            continue
+        name, labels_s, value_s = (m.group("name"), m.group("labels"),
+                                   m.group("value"))
+        labels: Dict[str, str] = {}
+        if labels_s:
+            for pair in labels_s[1:-1].split(","):
+                if not pair:
+                    continue
+                if not _LABEL_PAIR.match(pair):
+                    errors.append(f"line {ln}: bad label pair {pair!r}")
+                    continue
+                k, v = pair.split("=", 1)
+                labels[k] = v[1:-1]
+        try:
+            value = (math.inf if value_s == "+Inf"
+                     else -math.inf if value_s == "-Inf"
+                     else float(value_s))
+        except ValueError:
+            errors.append(f"line {ln}: bad value {value_s!r}")
+            continue
+        base = name
+        for suffix in ("_bucket", "_sum", "_count"):
+            stripped = name[:-len(suffix)] if name.endswith(suffix) else None
+            if stripped and declared.get(stripped) == "histogram":
+                base = stripped
+                break
+        if base not in declared:
+            errors.append(f"line {ln}: sample {name!r} has no preceding "
+                          f"TYPE declaration")
+            continue
+        seen_names.add(base)
+        if declared[base] == "histogram":
+            series = repr(sorted((k, v) for k, v in labels.items()
+                                 if k != "le"))
+            if name.endswith("_bucket"):
+                if "le" not in labels:
+                    errors.append(f"line {ln}: histogram bucket without "
+                                  f"le label")
+                    continue
+                le = (math.inf if labels["le"] == "+Inf"
+                      else float(labels["le"]))
+                hist_buckets.setdefault((base, series), []).append(
+                    (le, value))
+            elif name.endswith("_count"):
+                hist_counts[(base, series)] = value
+
+    for (base, series), pairs in hist_buckets.items():
+        pairs = sorted(pairs)
+        if not pairs or pairs[-1][0] != math.inf:
+            errors.append(f"histogram {base}{series}: missing +Inf bucket")
+            continue
+        cums = [c for _, c in pairs]
+        if any(b > a for a, b in zip(cums[1:], cums)):
+            errors.append(f"histogram {base}{series}: bucket counts not "
+                          f"cumulative-monotone")
+        total = hist_counts.get((base, series))
+        if total is None:
+            errors.append(f"histogram {base}{series}: missing _count")
+        elif total != cums[-1]:
+            errors.append(f"histogram {base}{series}: _count {total} != "
+                          f"+Inf bucket {cums[-1]}")
+
+    for name in required:
+        if name not in seen_names:
+            errors.append(f"required metric {name!r} missing from "
+                          f"exposition")
+    return errors
+
+
+__all__ = [
+    "LATENCY_BUCKETS_US", "BATCH_BUCKETS", "COUNT_BUCKETS",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "all_registries", "merge_metric_lists", "snapshot",
+    "render_prometheus", "check_exposition",
+]

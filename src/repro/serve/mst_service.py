@@ -24,8 +24,9 @@ what later PRs make async / multi-device (DESIGN.md §3).
 from __future__ import annotations
 
 import hashlib
+import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -34,6 +35,8 @@ from repro.core import MSTSolver, SolveOptions, make_solver
 from repro.core.solver import legacy_options
 from repro.core.types import Graph, GraphLike, as_request, ensure_sized
 from repro.graphs.batching import pack_graphs, unpack_results
+from repro.obs.metrics import BATCH_BUCKETS, MetricsRegistry
+from repro.obs.trace import collect_phases
 
 
 @dataclass(frozen=True)
@@ -102,18 +105,92 @@ def points_key(points: np.ndarray, knn_k: int) -> str:
     return "pts:" + h.hexdigest()
 
 
-@dataclass
 class ServiceStats:
-    submitted: int = 0
-    served: int = 0
-    cache_hits: int = 0
-    engine_solves: int = 0   # lanes actually run through the solver
-    flushes: int = 0
-    buckets: int = 0
-    bucket_shapes: Dict[Tuple[int, int], int] = field(default_factory=dict)
-    cluster_requests: int = 0
-    cluster_cache_hits: int = 0
-    cluster_escalations: int = 0  # k-doubling rounds across cold requests
+    """Registry-backed service telemetry (DESIGN.md §4).
+
+    The pre-obs surface was a dataclass of bare ints; those attribute
+    names survive as *views* over the registry counters, so every
+    existing ``svc.stats.cache_hits`` read keeps working while the same
+    numbers flow into the Prometheus exposition.  The service mutates
+    through the metric handles (``c_*`` counters, ``g_*`` gauges,
+    ``h_*`` histograms); outside readers treat the stats as read-only
+    (they always did — all writes live inside ``MSTService``).
+    """
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        r = self.registry = (registry if registry is not None
+                             else MetricsRegistry("mstserve"))
+        self.bucket_shapes: Dict[Tuple[int, int], int] = {}
+        self.c_submitted = r.counter("mstserve_requests_total")
+        self.c_served = r.counter("mstserve_served_total")
+        self.c_cache_hits = r.counter("mstserve_cache_hits_total")
+        self.c_engine_solves = r.counter("mstserve_engine_solves_total")
+        self.c_flushes = r.counter("mstserve_flushes_total")
+        self.c_buckets = r.counter("mstserve_buckets_total")
+        self.c_cluster_requests = r.counter(
+            "mstserve_cluster_requests_total")
+        self.c_cluster_cache_hits = r.counter(
+            "mstserve_cluster_cache_hits_total")
+        self.c_cluster_escalations = r.counter(
+            "mstserve_cluster_escalations_total")
+        self.g_queue_depth = r.gauge("mstserve_queue_depth")
+        self.g_hit_rate = r.gauge("mstserve_cache_hit_rate")
+        self.h_flush_batch = r.histogram("mstserve_flush_batch_size",
+                                         buckets=BATCH_BUCKETS)
+        self.h_flush_latency = r.histogram("mstserve_flush_latency_us")
+        self.h_pack = r.histogram("mstserve_pack_latency_us")
+
+    # -- legacy int views ---------------------------------------------------
+
+    @property
+    def submitted(self) -> int:
+        return int(self.c_submitted.value)
+
+    @property
+    def served(self) -> int:
+        return int(self.c_served.value)
+
+    @property
+    def cache_hits(self) -> int:
+        return int(self.c_cache_hits.value)
+
+    @property
+    def engine_solves(self) -> int:
+        """Lanes actually run through the solver."""
+        return int(self.c_engine_solves.value)
+
+    @property
+    def flushes(self) -> int:
+        return int(self.c_flushes.value)
+
+    @property
+    def buckets(self) -> int:
+        return int(self.c_buckets.value)
+
+    @property
+    def cluster_requests(self) -> int:
+        return int(self.c_cluster_requests.value)
+
+    @property
+    def cluster_cache_hits(self) -> int:
+        return int(self.c_cluster_cache_hits.value)
+
+    @property
+    def cluster_escalations(self) -> int:
+        """k-doubling rounds across cold requests."""
+        return int(self.c_cluster_escalations.value)
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Lifetime fraction of served requests answered from the LRU."""
+        served = self.served
+        return self.cache_hits / served if served else 0.0
+
+    def __repr__(self) -> str:
+        return (f"ServiceStats(submitted={self.submitted}, "
+                f"served={self.served}, cache_hits={self.cache_hits}, "
+                f"engine_solves={self.engine_solves}, "
+                f"flushes={self.flushes}, buckets={self.buckets})")
 
 
 class MSTService:
@@ -156,14 +233,18 @@ class MSTService:
                             "engine/variant/compaction/max_batch keywords, "
                             "not both")
         self.options = options
-        self.solver: MSTSolver = make_solver(options)
+        # One registry for the whole service: solver metrics (plan hits,
+        # solve latency) and service metrics (queue, flush, cache) land
+        # in the same place for export.
+        self.stats = ServiceStats()
+        self.solver: MSTSolver = make_solver(options,
+                                             registry=self.stats.registry)
         # Legacy attribute surface (examples/tests read these).
         self.variant = options.variant
         self.engine = options.engine
         self.compaction = options.compaction
         self.max_batch = options.max_batch  # None = unbounded buckets
         self.cache_size = int(cache_size)
-        self.stats = ServiceStats()
         self._cache: "OrderedDict[str, MSTResponse]" = OrderedDict()
         # Clustering entries (dendrogram + escalation stats) live in their
         # own LRU of the same capacity: one clustering request can imply
@@ -188,7 +269,8 @@ class MSTService:
         rid = self._next_id
         self._next_id += 1
         self._pending.append((rid, graph_key(g), g))
-        self.stats.submitted += 1
+        self.stats.c_submitted.inc()
+        self.stats.g_queue_depth.set(len(self._pending))
         return rid
 
     def flush(self) -> List[MSTResponse]:
@@ -199,16 +281,19 @@ class MSTService:
         """
         unclaimed, self._unclaimed = self._unclaimed, []
         pending, self._pending = self._pending, []
+        self.stats.g_queue_depth.set(0)
         if not pending:
             return unclaimed
-        self.stats.flushes += 1
+        t_flush = time.perf_counter()
+        self.stats.c_flushes.inc()
+        self.stats.h_flush_batch.observe(len(pending))
 
         responses: Dict[int, MSTResponse] = {}
         misses: List[Tuple[int, str, Graph]] = []
         for rid, key, g in pending:
             hit = self._cache_get(self._cache, key)
             if hit is not None:
-                self.stats.cache_hits += 1
+                self.stats.c_cache_hits.inc()
                 responses[rid] = MSTResponse(rid, hit.mst_mask, hit.parent,
                                              hit.total_weight,
                                              hit.num_components,
@@ -242,7 +327,10 @@ class MSTService:
                                               base.num_components,
                                               base.num_rounds))
 
-        self.stats.served += len(pending)
+        self.stats.c_served.inc(len(pending))
+        self.stats.g_hit_rate.set(self.stats.cache_hit_rate)
+        self.stats.h_flush_latency.observe(
+            (time.perf_counter() - t_flush) * 1e6)
         return unclaimed + [responses[rid] for rid, _, _ in pending]
 
     def _solve_batch(self, solve_list):
@@ -252,22 +340,35 @@ class MSTService:
         ``solve_list`` order (the ``unpack_results`` contract).
         """
         if self.solver.spec.supports_batched_lanes:
-            buckets = pack_graphs([g for _, _, g in solve_list],
-                                  max_batch=self.max_batch)
-            results = []
-            for b in buckets:
-                self.stats.buckets += 1
-                shape = (b.padded_edges, b.padded_nodes)
-                self.stats.bucket_shapes[shape] = (
-                    self.stats.bucket_shapes.get(shape, 0)
-                    + len(b.indices))
-                self.stats.engine_solves += len(b.indices)
-                results.append(self.solver.solve_packed(b))
-            return unpack_results(buckets, results)
+            # The collector catches the "pack" phases (lane packing +
+            # result trimming) running outside the per-bucket dispatches.
+            with collect_phases() as phases:
+                buckets = pack_graphs([g for _, _, g in solve_list],
+                                      max_batch=self.max_batch)
+                results = []
+                for b in buckets:
+                    self.stats.c_buckets.inc()
+                    shape = (b.padded_edges, b.padded_nodes)
+                    self.stats.bucket_shapes[shape] = (
+                        self.stats.bucket_shapes.get(shape, 0)
+                        + len(b.indices))
+                    self.stats.c_engine_solves.inc(len(b.indices))
+                    t0 = time.perf_counter()
+                    results.append(self.solver.solve_packed(b))
+                    # Per-bucket solve latency: the shape label stays
+                    # bounded by the pow2 bucketing.
+                    self.stats.registry.histogram(
+                        "mstserve_bucket_solve_latency_us",
+                        shape=f"{b.padded_edges}x{b.padded_nodes}").observe(
+                            (time.perf_counter() - t0) * 1e6)
+                out = unpack_results(buckets, results)
+            if phases.get("pack"):
+                self.stats.h_pack.observe(phases["pack"] * 1e6)
+            return out
         # Per-graph registry engines: one plan-cached dispatch per request.
         out = []
         for _, _, g in solve_list:
-            self.stats.engine_solves += 1
+            self.stats.c_engine_solves.inc()
             r = self.solver.solve(g)
             out.append((np.asarray(r.mst_mask), np.asarray(r.parent),
                         float(r.total_weight), int(r.num_components),
@@ -336,11 +437,11 @@ class MSTService:
         misses: List[Tuple[int, str, np.ndarray]] = []
         for i, pts in enumerate(clouds):
             pts = np.asarray(pts, np.float32)
-            self.stats.cluster_requests += 1
+            self.stats.c_cluster_requests.inc()
             key = points_key(pts, knn_k)
             hit = self._cache_get(self._cluster_cache, key)
             if hit is not None:
-                self.stats.cluster_cache_hits += 1
+                self.stats.c_cluster_cache_hits.inc()
                 entries[i] = hit + (True,)
             else:
                 misses.append((i, key, pts))
@@ -356,7 +457,7 @@ class MSTService:
                 dend = single_linkage(r.src, r.dst, r.distance,
                                       r.num_points)
                 dend.heights.setflags(write=False)
-                self.stats.cluster_escalations += r.escalations
+                self.stats.c_cluster_escalations.inc(r.escalations)
                 entry = (dend, r.knn_k, r.escalations, r.bridges)
                 self._cache_put(self._cluster_cache, key, entry)
                 entries[i] = entry + (False,)

@@ -1,6 +1,6 @@
 """Checkpointing: per-host npz shards, atomic rename, resume-from-latest.
 
-Fault-tolerance contract (DESIGN.md §4):
+Fault-tolerance contract (DESIGN.md §7):
   * a checkpoint is only visible once its directory is atomically renamed
     from ``step_N.tmp`` to ``step_N`` - a killed writer never corrupts state;
   * ``latest_step`` scans for complete checkpoints only, so restart after

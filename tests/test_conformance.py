@@ -205,3 +205,48 @@ def test_sharded_matches_distributed_round_counts(variant, mesh):
     assert (np.asarray(r_d.mst_mask) == np.asarray(r_s.mst_mask)).all()
     assert int(r_d.num_rounds) == int(r_s.num_rounds)
     assert int(r_d.num_waves) == int(r_s.num_waves)
+
+
+@pytest.mark.parametrize("engine", ENGINE_NAMES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_trace_identity(engine, variant, mesh):
+    """Observability axis of the matrix: every registered engine emits a
+    SolveTrace, and the trace is *deterministic* — two fresh solvers over
+    the same graph + options report identical rounds, waves and per-round
+    detail arrays.  The detail pass shares one instrumented round loop
+    (``core.mst.round_trace``), so this also pins that loop's round
+    structure to each engine's own counters."""
+    graph = FAMILIES["random-sparse"]()
+    om, _, oc = kruskal_numpy(graph.src, graph.dst, graph.weight,
+                              graph.num_nodes)
+    traces = []
+    for _ in range(2):
+        solver = make_solver(_options(engine, variant, mesh))
+        result, trace = solver.trace_solve(graph)
+        assert trace is solver.last_trace
+        assert trace.engine == engine and trace.variant == variant
+        assert not trace.plan_hit  # fresh solver: first dispatch compiles
+        assert trace.num_rounds == int(result.num_rounds)
+        assert trace.num_waves == int(result.num_waves)
+        # mst_edges is derived as V - num_components: must equal the
+        # oracle's edge count, i.e. no mask transfer was needed to get it.
+        assert trace.mst_edges == int(om.sum()) == graph.num_nodes - oc
+        # Detail arrays: one entry per productive round; commits are
+        # cumulative, so the last entry is the full forest.
+        assert len(trace.live_per_round) == trace.num_rounds
+        assert trace.commits_per_round[-1] == trace.mst_edges
+        assert trace.waves_per_round[-1] == trace.num_waves
+        # live counts only decay, and the scan buckets cover them.
+        assert all(a >= b for a, b in zip(trace.live_per_round,
+                                          trace.live_per_round[1:]))
+        assert all(b >= c for b, c in zip(trace.buckets_per_round,
+                                          trace.live_per_round))
+        assert trace.total_us >= trace.solve_us >= 0.0
+        traces.append(trace)
+    t1, t2 = traces
+    assert t1.live_per_round == t2.live_per_round
+    assert t1.commits_per_round == t2.commits_per_round
+    assert t1.waves_per_round == t2.waves_per_round
+    assert t1.buckets_per_round == t2.buckets_per_round
+    assert (t1.num_rounds, t1.num_waves, t1.mst_edges) == \
+           (t2.num_rounds, t2.num_waves, t2.mst_edges)
