@@ -119,8 +119,16 @@ def batched_throughput_rows(batch_sizes=BATCH_SIZES, *,
                             degree: int = BENCH_DEGREE,
                             variant: str = "cas",
                             repeats: int = 3) -> List[Tuple[str, float, str]]:
-    """(name, us_per_call, derived) rows; derived carries graphs_per_sec."""
+    """(name, us_per_call, derived) rows; derived carries graphs_per_sec.
+
+    Also records the ``b64_vs_b8`` same-run throughput ratio — batching
+    amortizes dispatch across lanes, so aggregate graphs/sec must not
+    fall as lanes grow; the ratio is a gated metric
+    (``scripts/check_bench_regression.py``) after a regression shipped
+    where b=64 throughput silently dropped below b=8.
+    """
     rows = []
+    gps_by_b = {}
     for b in batch_sizes:
         graphs = [generate_graph(num_nodes, degree, seed=s)
                   for s in range(b)]
@@ -139,6 +147,42 @@ def batched_throughput_rows(batch_sizes=BATCH_SIZES, *,
             best = min(best, time.perf_counter() - t0)
         us = best * 1e6
         gps = b / best
+        gps_by_b[b] = gps
         rows.append((f"batched_msf_{variant}_V{num_nodes}_b{b}", us,
                      f"graphs_per_sec={gps:.1f}"))
+    if 8 in gps_by_b and 64 in gps_by_b:
+        rows.append((f"batched_scaling_{variant}_V{num_nodes}", 0.0,
+                     f"b64_vs_b8={gps_by_b[64] / gps_by_b[8]:.3f}"))
+    return rows
+
+
+def batched_e2e_rows(batch_sizes=(8, 64), *,
+                     num_nodes: int = BENCH_NODES,
+                     degree: int = BENCH_DEGREE,
+                     variant: str = "cas",
+                     repeats: int = 3) -> List[Tuple[str, float, str]]:
+    """End-to-end ``solve_many`` throughput: lane packing + engine solve +
+    per-lane result trimming.
+
+    The engine-only rows above can't see host-side pack/unpack costs; this
+    is the row that moved when the per-graph transfer loop in
+    ``pack_padded`` and the per-lane scalar boxing in
+    ``unpack_results_mst`` were vectorized.
+    """
+    from repro.core.solver import make_solver
+
+    rows = []
+    for b in batch_sizes:
+        graphs = [generate_graph(num_nodes, degree, seed=s)
+                  for s in range(b)]
+        solver = make_solver(engine="batched", variant=variant)
+        solver.solve_many(graphs)  # compile + warm plan cache
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            solver.solve_many(graphs)
+            best = min(best, time.perf_counter() - t0)
+        us = best * 1e6
+        rows.append((f"batched_e2e_{variant}_V{num_nodes}_b{b}", us,
+                     f"graphs_per_sec={b / best:.1f}"))
     return rows

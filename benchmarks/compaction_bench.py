@@ -71,7 +71,15 @@ def paired_time(base_fn, comp_fn, repeats: int):
 def compaction_rows(cells: Sequence[Tuple[str, int]] = DEFAULT_CELLS,
                     variant: str = "cas",
                     repeats: int = 5) -> List[Tuple[str, float, str]]:
-    """(name, us, derived) rows: paired speedup + live-edge decay trace."""
+    """(name, us, derived) rows: paired speedups + live-edge decay trace.
+
+    Three arms per cell, timed as two adjacent A/B pairs against the same
+    uncompacted base: ``_k{k}`` is flat frontier compaction (edge buckets
+    only — the dense classes REGRESS here, because their live-edge count
+    barely decays while every per-round vertex-sized op stays full-size)
+    and ``_k{k}c`` is contract-Borůvka (edge AND vertex buckets), the
+    configuration the dense-class acceptance gates at >= 1.0.
+    """
     from repro.core.mst import live_edge_trace, minimum_spanning_forest
 
     rows = []
@@ -88,11 +96,19 @@ def compaction_rows(cells: Sequence[Tuple[str, int]] = DEFAULT_CELLS,
                 g, variant=variant, compaction=k
             ).total_weight.block_until_ready()
 
+        def contract():
+            return minimum_spanning_forest(
+                g, variant=variant, compaction=k, contraction=True
+            ).total_weight.block_until_ready()
+
         base_us, comp_us, speedup = paired_time(base, comp, repeats)
+        _, con_us, con_speedup = paired_time(base, contract, repeats)
         rows.append((f"compaction_single_{graph_name}_{variant}_off",
                      base_us, ""))
         rows.append((f"compaction_single_{graph_name}_{variant}_k{k}",
                      comp_us, f"speedup_vs_off={speedup:.3f}"))
+        rows.append((f"compaction_single_{graph_name}_{variant}_k{k}c",
+                     con_us, f"speedup_vs_off={con_speedup:.3f}"))
         trace = live_edge_trace(g, variant=variant)
         rows.append((f"compaction_live_{graph_name}_{variant}", 0.0,
                      "live_per_round=" + "-".join(str(c) for c in trace)))

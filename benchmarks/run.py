@@ -130,9 +130,12 @@ def main() -> None:
         cells=(compaction_bench.SMOKE_CELLS if args.smoke
                else compaction_bench.DEFAULT_CELLS),
         repeats=max(args.repeats, 5))
-    # Batched multi-graph engine: serving throughput at batch {1, 8, 64}.
+    # Batched multi-graph engine: serving throughput at batch {1, 8, 64},
+    # plus end-to-end solve_many rows (pack + solve + unpack) that see the
+    # host-side lane packing costs the engine-only rows cannot.
     from benchmarks import batched_bench
     rows += batched_bench.batched_throughput_rows(repeats=args.repeats)
+    rows += batched_bench.batched_e2e_rows(repeats=args.repeats)
     # Euclidean-MST clustering pipeline vs brute-force all-pairs (paired).
     # Smoke runs skip it: the CI bench-regression job runs the standalone
     # `benchmarks.cluster_bench --smoke --json` step, which merges its keys

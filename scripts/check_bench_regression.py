@@ -32,7 +32,11 @@ import sys
 # them straight through tolerance.
 SPEEDUP_METRICS = ("speedup_vs_off", "speedup_vs_unopt", "speedup_vs_opt",
                    "cas_speedup", "speedup_vs_bruteforce", "warm_hit_rate",
-                   "hit_rate")
+                   "hit_rate",
+                   # batched-engine scale-up ratio (b=64 gps / b=8 gps):
+                   # same-run, so runner speed cancels; gates the
+                   # throughput-must-not-fall-with-lanes property.
+                   "b64_vs_b8")
 
 # Metrics where SMALLER is better: histogram percentile summaries from the
 # obs layer (serve_bench's flush-latency p50/p90/p99).  Absolute

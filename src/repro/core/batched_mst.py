@@ -30,9 +30,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import (boruvka_epoch, init_frontier,
-                               materialize_commits, scan_bucket_sizes,
-                               validate_variant)
+from repro.core.engine import (ContractCarry, boruvka_contract_epoch,
+                               boruvka_epoch, contracted_parent_original_ids,
+                               init_frontier, materialize_commits,
+                               scan_bucket_sizes, validate_variant,
+                               vertex_bucket_sizes)
 from repro.core.mst import boruvka_round, rank_edges, _init_state
 from repro.core.types import GraphLike, as_request
 from repro.core.union_find import count_components
@@ -89,26 +91,36 @@ def pack_padded(graphs: Sequence[GraphLike], *, padded_edges: int,
 
     Host-side (numpy) construction; callers wanting automatic power-of-two
     bucketing should go through ``graphs.batching.pack_graphs``.
+
+    The lane fill is vectorized: ONE ``jax.device_get`` fetches every
+    graph's arrays (a per-graph ``np.asarray`` is a synchronous transfer
+    each — the dominant pack cost at high lane counts) and one flat
+    fancy-index assignment scatters all lanes at once.
     """
     with _obs_phase("pack"):
         b = len(graphs)
+        sized = [as_request(item) for item in graphs]
+        nn = np.fromiter((g.num_nodes for g in sized), np.int32, count=b)
+        ne = np.fromiter((g.num_edges for g in sized), np.int32, count=b)
+        for i, g in enumerate(sized):
+            if g.num_edges > padded_edges or g.num_nodes > padded_nodes:
+                raise ValueError(
+                    f"graph {i} ({g.num_nodes}V/{g.num_edges}E) exceeds "
+                    f"bucket ({padded_nodes}V/{padded_edges}E)")
         src = np.zeros((b, padded_edges), np.int32)
         dst = np.zeros((b, padded_edges), np.int32)
         weight = np.full((b, padded_edges), np.inf, np.float32)
-        nn = np.zeros((b,), np.int32)
-        ne = np.zeros((b,), np.int32)
-        for i, item in enumerate(graphs):
-            g = as_request(item)
-            v = g.num_nodes
-            e = g.num_edges
-            if e > padded_edges or v > padded_nodes:
-                raise ValueError(f"graph {i} ({v}V/{e}E) exceeds bucket "
-                                 f"({padded_nodes}V/{padded_edges}E)")
-            src[i, :e] = np.asarray(g.src)
-            dst[i, :e] = np.asarray(g.dst)
-            weight[i, :e] = np.asarray(g.weight)
-            nn[i] = v
-            ne[i] = e
+        total = int(ne.sum())
+        if total:
+            host = jax.device_get([(g.src, g.dst, g.weight) for g in sized])
+            # (lane, col) of every real edge across the batch: lane i
+            # occupies cols [0, ne[i]).
+            rows = np.repeat(np.arange(b), ne)
+            cols = (np.arange(total, dtype=np.int64)
+                    - np.repeat(np.cumsum(ne) - ne, ne))
+            src[rows, cols] = np.concatenate([h[0] for h in host])
+            dst[rows, cols] = np.concatenate([h[1] for h in host])
+            weight[rows, cols] = np.concatenate([h[2] for h in host])
         return BatchedGraph(jnp.asarray(src), jnp.asarray(dst),
                             jnp.asarray(weight), jnp.asarray(nn),
                             jnp.asarray(ne))
@@ -117,11 +129,12 @@ def pack_padded(graphs: Sequence[GraphLike], *, padded_edges: int,
 @functools.partial(
     jax.jit,
     static_argnames=("num_nodes", "variant", "track_covered",
-                     "max_lock_waves", "compaction"))
+                     "max_lock_waves", "compaction", "contraction"))
 def batched_msf(batch: BatchedGraph, *, num_nodes: int,
                 variant: str = "cas", track_covered: bool = True,
                 max_lock_waves: int = 16,
-                compaction: int = 0) -> BatchedMSTResult:
+                compaction: int = 0,
+                contraction: bool = False) -> BatchedMSTResult:
     """Borůvka MSF over every lane of ``batch`` in one jitted while_loop.
 
     Args:
@@ -137,6 +150,13 @@ def batched_msf(batch: BatchedGraph, *, num_nodes: int,
         the scan shrinks to one pow2 bucket of the *max* live count across
         lanes — the bucket switch must sit outside the vmap, so the batch
         scans at the pace of its liveliest lane.
+      contraction: contract-Borůvka (DESIGN.md §2c): per-lane relabeling
+        of surviving supervertices to dense ids at each epoch boundary,
+        with the vertex bucket picked from the batch-max supervertex count
+        OUTSIDE the vmap (mirroring the edge buckets).  Pad vertices are
+        excluded from the active range up front, so padded lanes solve at
+        true-size vertex buckets from the first epoch.  Requires
+        ``compaction > 0``.
 
     Returns per-lane results; lane i is only meaningful up to
     ``batch.num_nodes[i]`` / ``batch.num_edges[i]``.
@@ -145,6 +165,9 @@ def batched_msf(batch: BatchedGraph, *, num_nodes: int,
     if compaction and not track_covered:
         raise ValueError("compaction requires track_covered=True "
                          "(the covered bit IS the live/dead partition key)")
+    if contraction and not compaction:
+        raise ValueError("contraction requires compaction > 0 "
+                         "(contraction happens at epoch boundaries)")
     e_pad = batch.src.shape[1]
     rank, order = jax.vmap(rank_edges)(batch.weight)
 
@@ -153,6 +176,14 @@ def batched_msf(batch: BatchedGraph, *, num_nodes: int,
                            commit_slots=variant == "cas")
 
     init = jax.vmap(one_lane_init)(batch.num_nodes)
+
+    if contraction:
+        return _finish_contracted(
+            batch, _contracted_loop(
+                batch, rank, order, init, num_nodes=num_nodes,
+                variant=variant, max_lock_waves=max_lock_waves,
+                compaction=compaction),
+            num_nodes=num_nodes)
 
     round_fn = jax.vmap(
         functools.partial(boruvka_round, variant=variant,
@@ -194,6 +225,76 @@ def batched_msf(batch: BatchedGraph, *, num_nodes: int,
         num_waves=final.num_waves,
         total_weight=total,
         num_components=comp - pad_singletons,
+    )
+
+
+def _contracted_loop(batch: BatchedGraph, rank, order, init, *,
+                     num_nodes: int, variant: str, max_lock_waves: int,
+                     compaction: int) -> ContractCarry:
+    """Contract-Borůvka while_loop over every lane (DESIGN.md §2c).
+
+    ``num_active`` starts at each lane's TRUE vertex count: pad vertices
+    are edge-free identity roots, so excluding them from the active range
+    up front simply drops them at the first contraction (their root_map
+    entries go to the sentinel and nothing ever reads them back), and the
+    batch-max vertex bucket tracks real supervertices — a heavily padded
+    lane runs vertex-sized work at its true size from epoch one instead
+    of paying V_pad forever.
+    """
+    e_pad = batch.src.shape[1]
+    e_sizes = scan_bucket_sizes(e_pad)
+    v_sizes = vertex_bucket_sizes(num_nodes)
+
+    def round_factory(sz_v):
+        return jax.vmap(
+            functools.partial(boruvka_round, variant=variant,
+                              track_covered=True, num_nodes=sz_v,
+                              max_lock_waves=max_lock_waves))
+
+    def cond(c):
+        return ~jnp.all(c.state.done)
+
+    def body(c):
+        return boruvka_contract_epoch(
+            c, batch.src, batch.dst, order, round_factory=round_factory,
+            e_sizes=e_sizes, v_sizes=v_sizes, compaction=compaction,
+            e_full=e_pad)
+
+    b = batch.src.shape[0]
+    return jax.lax.while_loop(cond, body, ContractCarry(
+        state=init,
+        frontier=init_frontier(batch.src, batch.dst, rank),
+        root_map=jnp.broadcast_to(jnp.arange(num_nodes, dtype=jnp.int32),
+                                  (b, num_nodes)),
+        num_active=batch.num_nodes.astype(jnp.int32)))
+
+
+def _finish_contracted(batch: BatchedGraph, fin: ContractCarry, *,
+                       num_nodes: int) -> BatchedMSTResult:
+    """Per-lane original-id reconstruction from the root-translation table.
+
+    Pad vertices were dropped from the active range at the first
+    contraction, so their ``root_map`` entries are stale — mask them to
+    segment 0 for the representative reduction (pad indices sort after
+    every real vertex, so they can't win a min) and report them as
+    identity singletons, matching the padding contract.  ``num_active``
+    already counts exactly the real components per lane.
+    """
+    final = jax.vmap(materialize_commits)(fin.state)
+    total = jnp.sum(jnp.where(final.mst_mask, batch.weight, 0.0), axis=1)
+    iota_v = jnp.arange(num_nodes, dtype=jnp.int32)
+    valid = iota_v[None, :] < batch.num_nodes[:, None]
+    comp = jnp.where(valid, fin.root_map, 0)
+    parent = jax.vmap(contracted_parent_original_ids,
+                      in_axes=(0, None))(comp, num_nodes)
+    parent = jnp.where(valid, parent, iota_v[None, :])
+    return BatchedMSTResult(
+        parent=parent,
+        mst_mask=final.mst_mask,
+        num_rounds=final.num_rounds,
+        num_waves=final.num_waves,
+        total_weight=total,
+        num_components=fin.num_active,
     )
 
 

@@ -56,7 +56,7 @@ def _pad_to(x, n, fill):
     return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
 
 
-def distributed_msf(graph: Graph, *, num_nodes: int = None, mesh: Mesh,
+def distributed_msf(graph: Graph, *, num_nodes: Optional[int] = None, mesh: Mesh,
                     axis: str = "data", variant: str = "cas",
                     max_lock_waves: int = 16,
                     compaction: int = 0) -> MSTResult:

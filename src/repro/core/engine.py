@@ -34,6 +34,7 @@ single jitted ``while_loop`` via ``lax.switch`` over statically-sized slices.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -326,6 +327,371 @@ def compact_frontier_bucketed(frontier: Frontier, covered,
                           (frontier, covered))
 
 
+# ---------------------------------------------------------------------------
+# Graph contraction: relabel supervertices to a dense range between epochs.
+# ---------------------------------------------------------------------------
+
+class ContractCarry(NamedTuple):
+    """While-loop carry of the contract-Borůvka engines (DESIGN.md §2c).
+
+    The vertex-side analogue of :class:`Frontier`: buffers stay full-width
+    (static shapes), the *active* prefix shrinks.  ``root_map`` is the
+    root-translation table — for every ORIGINAL vertex, the contracted id
+    of its component as of the last contraction — so endpoints decoded
+    from the full-size topology arrays can be translated into the current
+    contracted space, and the final parent/components can be reported in
+    original vertex ids.  ``num_active`` is the contracted vertex count
+    V' (supervertices, including finished components: they must keep
+    their dense id so ``root_map`` stays total).
+    """
+
+    state: BoruvkaState      # full-width buffers; prefixes are active
+    frontier: Frontier       # full-width edge buffers, live prefix packed
+    root_map: jnp.ndarray    # (..., V_orig) int32 original -> contracted id
+    num_active: jnp.ndarray  # (...,) int32 contracted vertex count V'
+
+
+def relabel_roots(isroot) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Monotone dense rank over the root set (jnp path).
+
+    Root ``i`` gets ``|{j < i : isroot[j]}|``; non-roots get INT_SENTINEL
+    (never read through — endpoint lookups go ``new_id[parent[x]]`` and
+    ``parent[x]`` is always a root).  Monotonicity preserves the relative
+    order of root ids, which is what keeps the CAS 2-cycle break and the
+    lock arbitration making bit-identical decisions on the contracted
+    graph.  The Pallas ``kernels/relabel_vertices`` kernel computes the
+    same table on-device with a 2-phase count-then-assign grid.
+    """
+    isroot = isroot.astype(bool)
+    rank = (jnp.cumsum(isroot, axis=-1) - 1).astype(jnp.int32)
+    new_id = jnp.where(isroot, rank, INT_SENTINEL)
+    return new_id, jnp.sum(isroot, axis=-1).astype(jnp.int32)
+
+
+def count_active_roots(parent, num_active) -> jnp.ndarray:
+    """Roots among the active id range ``[0, num_active)`` — the live
+    supervertex count the vertex buckets track (buffer ids beyond
+    ``num_active`` are identity-parent padding and must not count)."""
+    sz = parent.shape[-1]
+    iota = jnp.arange(sz, dtype=jnp.int32)
+    active = iota < jnp.asarray(num_active, jnp.int32)[..., None]
+    return jnp.sum((parent == iota) & active, axis=-1).astype(jnp.int32)
+
+
+def _contract_prefix(state: BoruvkaState, frontier: Frontier, root_map,
+                     num_active, sz_e: int, sz_v: int, e_full: int,
+                     use_kernel: bool):
+    """One contraction: relabel surviving roots of the ``[0, sz_v)`` prefix
+    to a dense ``[0, V'')`` range, flush CAS commit slots, rewrite the
+    ``[0, sz_e)`` scan lanes' endpoints through the relabeling, pack the
+    live lanes, and reset the parent buffer to identity (every contracted
+    supervertex is its own root).
+
+    Lanes/slots beyond the prefixes are untouched: they are already
+    packed-dead (sentinel ranks / sentinel commit slots) and the buckets
+    only ever shrink, so stale suffix values are never read again.
+    """
+    def one(parent, covered, committed, mst_mask, src, dst, rank, eid,
+            rmap, n_act):
+        iota = jnp.arange(sz_v, dtype=jnp.int32)
+        par = parent[:sz_v]
+        isroot = (par == iota) & (iota < n_act)
+        if use_kernel:
+            from repro.kernels.relabel_vertices.ops import relabel_vertices
+            new_id, n_new = relabel_vertices(isroot)
+        else:
+            new_id, n_new = relabel_roots(isroot)
+        if committed is not None:
+            # Commit slots are addressed by contracted id, which this
+            # relabeling is about to reuse: flush them into the (E,) mask
+            # now (sentinel e_full slots scatter out of bounds -> dropped)
+            # and reset, restoring the write-once invariant per epoch.
+            mst_mask = mst_mask.at[committed[:sz_v]].set(True, mode="drop")
+            committed = committed.at[:sz_v].set(e_full)
+        # Coverage refresh under the post-hook parent (the in-round covered
+        # bit lags hooking by one round), fused with the endpoint rewrite:
+        # cu/cv are this epoch's final component ids of each scan lane.
+        cu = par[src[:sz_e]]
+        cv = par[dst[:sz_e]]
+        covered = covered.at[:sz_e].set(covered[:sz_e] | (cu == cv))
+        # Rewrite endpoints through the relabeling; every lane's component
+        # id is a root, so new_id reads never see the sentinel.
+        src = src.at[:sz_e].set(new_id[cu])
+        dst = dst.at[:sz_e].set(new_id[cv])
+        packed, covered = _pack_prefix(
+            Frontier(src, dst, rank, jnp.int32(sz_e), eid), covered, sz_e,
+            use_kernel)
+        # Root-translation table: original vertex -> new contracted id.
+        rmap = new_id[par[rmap]]
+        parent = jnp.arange(parent.shape[0], dtype=jnp.int32)
+        return (parent, covered, committed, mst_mask, packed.src,
+                packed.dst, packed.rank, packed.edge_id, rmap, n_new,
+                packed.live)
+
+    args = (state.parent, state.covered, state.committed, state.mst_mask,
+            frontier.src, frontier.dst, frontier.rank, frontier.edge_id,
+            root_map, jnp.asarray(num_active, jnp.int32))
+    if state.covered.ndim == 1:
+        out = one(*args)
+    else:
+        # Batched (B, ...) layout: per-lane contraction under one static
+        # (sz_e, sz_v) pair — the bucket choice itself is batch-max and
+        # sits OUTSIDE the vmap (a vmapped switch would run every branch).
+        out = jax.vmap(one, in_axes=(
+            0, 0, None if state.committed is None else 0, 0, 0, 0, 0,
+            None if frontier.edge_id is None else 0, 0, 0))(*args)
+    (parent, covered, committed, mst_mask, src, dst, rank, eid, rmap,
+     n_new, live) = out
+    new_state = state._replace(parent=parent, covered=covered,
+                               committed=committed, mst_mask=mst_mask)
+    return (new_state, Frontier(src, dst, rank, live, eid), rmap, n_new)
+
+
+def vertex_bucket_sizes(num_nodes: int,
+                        min_bucket: int = MIN_SCAN_BUCKET
+                        ) -> Tuple[int, ...]:
+    """Static pow2 vertex-prefix lengths — the vertex-side mirror of
+    ``scan_bucket_sizes``."""
+    return scan_bucket_sizes(num_nodes, min_bucket)
+
+
+def boruvka_contract_epoch(carry: ContractCarry, full_src, full_dst, order,
+                           *, round_factory,
+                           e_sizes: Tuple[int, ...],
+                           v_sizes: Tuple[int, ...],
+                           compaction: int, e_full: int,
+                           use_kernel: bool = False) -> ContractCarry:
+    """One contract-Borůvka epoch: rounds at a fixed (E, V) bucket pair,
+    then ONE pack + contraction (DESIGN.md §2c).
+
+    The generalization of :func:`boruvka_epoch` to a 2-D bucket lattice:
+    the ``lax.switch`` ranges over (edge bucket, vertex bucket) *pairs*,
+    and the chosen branch runs rounds over the statically-sliced edge AND
+    vertex prefixes until the forest completes or — checked every
+    ``compaction`` rounds — either the live-edge count or the surviving
+    supervertex count has dropped to a smaller bucket.  The epoch then
+    relabels the surviving roots to a dense ``[0, V')`` range
+    (``_contract_prefix``), so the next epoch re-enters at the shrunken
+    pair and every per-round vertex-sized op (segment_min, hooking,
+    pointer jumping) runs at the contracted size — the piece frontier
+    compaction alone cannot shrink, and the reason the dense classes
+    regressed under it.
+
+    ``round_factory(sz_v)`` binds the round body to a static vertex count
+    (``boruvka_round`` partial for the single engine, its ``jax.vmap``
+    for the batched engine); the round receives ``carry.root_map`` so
+    candidate endpoints decoded from the full-size topology arrays are
+    translated into the contracted space.  Both bucket indices reduce
+    with ``jnp.max`` over lane axes OUTSIDE any vmap.
+    """
+    idx_e = scan_bucket_index(e_sizes, jnp.max(carry.frontier.live))
+    idx_v = scan_bucket_index(v_sizes, jnp.max(carry.num_active))
+    idx = idx_e * len(v_sizes) + idx_v
+
+    def branch(i_e, sz_e, i_v, sz_v):
+        round_fn = round_factory(sz_v)
+
+        def run(c: ContractCarry) -> ContractCarry:
+            st, f, rmap, n_act = c
+            src = f.src[..., :sz_e]
+            dst = f.dst[..., :sz_e]
+            rank = f.rank[..., :sz_e]
+            sub0 = st._replace(
+                parent=st.parent[..., :sz_v],
+                covered=st.covered[..., :sz_e],
+                committed=None if st.committed is None
+                else st.committed[..., :sz_v])
+
+            def inner_cond(ic):
+                st_i, live_e, live_v = ic
+                shrink = ((scan_bucket_index(e_sizes, jnp.max(live_e)) < i_e)
+                          | (scan_bucket_index(v_sizes, jnp.max(live_v))
+                             < i_v))
+                cadence = (jnp.max(st_i.num_rounds) % compaction) == 0
+                return ~jnp.all(st_i.done) & ~(cadence & shrink)
+
+            def inner_body(ic):
+                st_i, _, _ = ic
+                st_i = round_fn(st_i, src, dst, rank, full_src, full_dst,
+                                order, rmap)
+                live_e = jnp.sum(~st_i.covered, axis=-1).astype(jnp.int32)
+                live_v = count_active_roots(st_i.parent, n_act)
+                return st_i, live_e, live_v
+
+            sub, _, _ = jax.lax.while_loop(inner_cond, inner_body,
+                                           (sub0, f.live, n_act))
+            # Splice the prefix state back into the full-width buffers,
+            # then contract: relabel + flush + endpoint rewrite + pack.
+            full = st._replace(
+                parent=st.parent.at[..., :sz_v].set(sub.parent),
+                covered=st.covered.at[..., :sz_e].set(sub.covered),
+                committed=st.committed if st.committed is None
+                else st.committed.at[..., :sz_v].set(sub.committed),
+                mst_mask=sub.mst_mask,
+                num_rounds=sub.num_rounds, num_waves=sub.num_waves,
+                done=sub.done)
+            return ContractCarry(*_contract_prefix(
+                full, f, rmap, n_act, sz_e, sz_v, e_full, use_kernel))
+        return run
+
+    branches = [branch(i_e, sz_e, i_v, sz_v)
+                for i_e, sz_e in enumerate(e_sizes)
+                for i_v, sz_v in enumerate(v_sizes)]
+    return jax.lax.switch(idx, branches, carry)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("variant", "max_lock_waves", "compaction",
+                              "use_kernel"))
+def contract_epoch_host(parent, covered, committed, mst_mask, num_rounds,
+                        num_waves, src, dst, rank, full_src, full_dst,
+                        order, root_map, num_active, *, variant: str,
+                        max_lock_waves: int, compaction: int,
+                        use_kernel: bool):
+    """One contract-Borůvka epoch for the HOST epoch loop (single engine).
+
+    Unlike :func:`boruvka_contract_epoch` (the batched engine's in-jit
+    variant, which must keep full-width buffers inside its while_loop
+    carry and pays full-width splices at every epoch boundary), the host
+    loop hands this function buffers ALREADY at the current bucket sizes —
+    the shapes are the static bucket choice, no ``lax.switch`` product and
+    no full-width staging.  Runs rounds until the forest completes or —
+    checked every ``compaction`` rounds — a strictly smaller edge or
+    vertex bucket becomes reachable, then performs the contraction
+    transform at prefix width: relabel surviving roots, flush CAS commit
+    slots, refresh coverage under the post-hook parent, rewrite endpoints
+    into the new dense space, and build the live-prefix permutation.  The
+    host reads the returned scalars, picks the next bucket pair, and calls
+    :func:`contract_slice_host` to materialize the smaller buffers.
+
+    The transform is computed even when ``done`` flips (one wasted
+    O(bucket) pass on the final epoch) so the host needs only a single
+    device round-trip per epoch.
+    """
+    sz_v = parent.shape[0]
+    sz_e = src.shape[0]
+    e_sizes = scan_bucket_sizes(sz_e)
+    v_sizes = vertex_bucket_sizes(sz_v)
+    # Vertex-only shrinks pay off only when vertex-sized per-round work is
+    # a real fraction of the round (measured: at E >> V the round cost is
+    # identical across vertex buckets, so contracting for V alone is pure
+    # transform overhead).  Static in the bucket pair, so it folds away.
+    v_matters = 2 * sz_v >= sz_e
+    state = BoruvkaState(parent, mst_mask, covered, num_rounds, num_waves,
+                         jnp.zeros((), bool), committed)
+
+    def cond(c):
+        st, live_e, live_v, in_epoch = c
+        e_shrink = scan_bucket_index(e_sizes, live_e) < len(e_sizes) - 1
+        v_shrink = scan_bucket_index(v_sizes, live_v) < len(v_sizes) - 1
+        # Dedup unlock: once V'^2 fits the pair table (<= sz_e), the
+        # multi-edge dedup bounds the live set by V'^2/2 — a guaranteed
+        # edge-bucket collapse on dense classes whose live count never
+        # decays on its own.  float32: V'^2 overflows int32 at V' > 46341.
+        dedup = (live_v.astype(jnp.float32) ** 2
+                 <= jnp.float32(sz_e)) & (len(e_sizes) > 1)
+        shrink = e_shrink | (v_shrink & v_matters) | dedup
+        cadence = (st.num_rounds % compaction) == 0
+        # `in_epoch` guards progress: the entry state may already satisfy
+        # the dedup condition (it fired last epoch too), so require at
+        # least one round before handing back to the host.
+        return ~st.done & ~(cadence & shrink & (in_epoch > 0))
+
+    def body(c):
+        st, _, _, in_epoch = c
+        st = boruvka_round(st, src, dst, rank, full_src, full_dst, order,
+                           root_map, variant=variant, track_covered=True,
+                           num_nodes=sz_v, max_lock_waves=max_lock_waves)
+        live_e = jnp.sum(~st.covered).astype(jnp.int32)
+        live_v = count_active_roots(st.parent, num_active)
+        return st, live_e, live_v, in_epoch + 1
+
+    st, _, _, _ = jax.lax.while_loop(
+        cond, body, (state, jnp.asarray(sz_e, jnp.int32), num_active,
+                     jnp.zeros((), jnp.int32)))
+
+    iota = jnp.arange(sz_v, dtype=jnp.int32)
+    isroot = (st.parent == iota) & (iota < num_active)
+    if use_kernel:
+        from repro.kernels.relabel_vertices.ops import relabel_vertices
+        new_id, n_new = relabel_vertices(isroot)
+    else:
+        new_id, n_new = relabel_roots(isroot)
+    mst_mask = st.mst_mask
+    if committed is not None:
+        # Slots are addressed by contracted id, which the relabeling is
+        # about to reuse: flush now (sentinel slots scatter out of bounds
+        # -> dropped); contract_slice_host rebuilds fresh sentinel slots.
+        mst_mask = mst_mask.at[st.committed].set(True, mode="drop")
+    cu = st.parent[src]
+    cv = st.parent[dst]
+    cov = st.covered | (cu == cv)  # post-hook coverage refresh
+    nsrc = new_id[cu]
+    ndst = new_id[cv]
+
+    def dedup_pairs(c):
+        # Multi-edge dedup — the other half of true graph contraction, and
+        # the measured fix for the dense-class regression: after a few
+        # rounds V' is tiny while tens of thousands of live edges remain,
+        # nearly all parallel edges between the same supervertex pairs.  A
+        # non-minimal parallel edge can never be EITHER endpoint
+        # component's candidate (the kept pair-minimum has a smaller rank
+        # and the same endpoints), so covering them is invisible to the
+        # hooking decisions — rounds, waves and the committed edge set stay
+        # bit-identical — but it lets the edge bucket collapse toward the
+        # O(V'^2) pair bound.  Scatter-min over a dense pair table of
+        # static size ``sz_e``; the cond predicate below guarantees every
+        # live pair key ``u * V' + v`` fits the table (and int32).
+        u = jnp.minimum(nsrc, ndst)
+        v = jnp.maximum(nsrc, ndst)
+        key = jnp.where(c, sz_e, u * n_new + v)  # dead lanes -> dropped
+        live_rank = jnp.where(c, INT_SENTINEL, rank)
+        best = jnp.full((sz_e,), INT_SENTINEL, jnp.int32).at[key].min(
+            live_rank, mode="drop")
+        keep = ~c & (rank == best.at[key].get(mode="fill",
+                                              fill_value=INT_SENTINEL))
+        return ~keep
+
+    cov = jax.lax.cond(
+        n_new.astype(jnp.float32) ** 2 <= jnp.float32(sz_e),
+        dedup_pairs, lambda c: c, cov)
+    if use_kernel:
+        from repro.kernels.compact_edges.ops import compact_edges
+        perm, live = compact_edges(cov)
+    else:
+        perm, live = live_prefix_permutation(cov)
+    return (st.done, st.num_rounds, st.num_waves, mst_mask,
+            nsrc, ndst, perm, live,
+            new_id[st.parent[root_map]], n_new)
+
+
+@functools.partial(jax.jit, static_argnames=("new_e", "new_v", "e_full"))
+def contract_slice_host(nsrc, ndst, rank, perm, live, *, new_e: int,
+                        new_v: int, e_full: int):
+    """Materialize the next epoch's bucket-sized buffers from
+    :func:`contract_epoch_host`'s full-prefix outputs: gather the live
+    lanes (``perm`` packs them first; the host chose ``new_e`` >= live) and
+    reset the vertex-side state — identity parent, sentinel commit slots —
+    at the contracted size."""
+    prefix = perm[:new_e]
+    pad = jnp.arange(new_e, dtype=jnp.int32) >= live
+    return (nsrc[prefix], ndst[prefix],
+            jnp.where(pad, INT_SENTINEL, rank[prefix]),
+            jnp.arange(new_v, dtype=jnp.int32),       # parent: identity
+            pad,                                      # covered
+            jnp.full((new_v,), e_full, jnp.int32))    # CAS commit slots
+
+
+def contracted_parent_original_ids(root_map, num_nodes: int) -> jnp.ndarray:
+    """Translate the contracted component ids back to an original-id
+    parent array: every vertex points at the minimum original vertex of
+    its component (a valid fully-compressed union-find labeling, the
+    canonical choice since contraction erases the hook-order roots)."""
+    v_iota = jnp.arange(num_nodes, dtype=jnp.int32)
+    rep = jax.ops.segment_min(v_iota, root_map, num_segments=num_nodes)
+    return rep[root_map]
+
+
 def make_scan_branches(sizes: Tuple[int, ...], num_nodes: int):
     """Bucketed candidate-scan branches for the mesh engines.
 
@@ -417,13 +783,20 @@ def candidate_min_edges(key, cu, cv, num_nodes):
     return jnp.minimum(best_u, best_v)  # (V,) rank or INT_SENTINEL
 
 
-def resolve_candidates(best, order, full_src, full_dst, parent):
+def resolve_candidates(best, order, full_src, full_dst, parent,
+                       root_map=None):
     """Decode per-component candidate rank -> (edge id, endpoints, partner).
 
     Requires the *replicated-topology* arrays ``order``/``full_src``/
     ``full_dst``; the shard-local engine replaces this step with its
     owner-decode collective (``sharded_mst``) and calls
     ``partner_components`` on the decoded endpoints instead.
+
+    Under contraction (``root_map`` not None) the topology arrays still
+    hold ORIGINAL vertex ids, so the decoded endpoints are translated
+    into the contracted space before the parent lookups; the returned
+    ``end_u``/``end_v`` are contracted ids, which is what the lock
+    variant's per-wave re-find needs.
     """
     has = best < INT_SENTINEL
     # Single guarded gather: a sentinel rank is out of bounds for `order`,
@@ -432,6 +805,9 @@ def resolve_candidates(best, order, full_src, full_dst, parent):
     cand_edge = order.at[best].get(mode="fill", fill_value=0)
     end_u = full_src[cand_edge]
     end_v = full_dst[cand_edge]
+    if root_map is not None:
+        end_u = root_map[end_u]
+        end_v = root_map[end_v]
     other, iota = partner_components(parent, has, end_u, end_v)
     return has, cand_edge, end_u, end_v, other, iota
 
@@ -562,10 +938,15 @@ def hook_lock_waves(parent, mst_mask, has, cand_edge, end_u, end_v,
 # ---------------------------------------------------------------------------
 
 def boruvka_round(state: BoruvkaState, scan_src, scan_dst, scan_rank,
-                  full_src, full_dst, order, *, variant: str,
+                  full_src, full_dst, order, root_map=None, *, variant: str,
                   track_covered: bool, num_nodes: int,
                   max_lock_waves: int = 16) -> BoruvkaState:
-    """One round: min-edge search over scan lanes, hooking, compression."""
+    """One round: min-edge search over scan lanes, hooking, compression.
+
+    ``root_map`` (contract-Borůvka only) translates original-id endpoints
+    decoded from the replicated topology into the contracted vertex space;
+    the scan lanes themselves are already contracted-id.
+    """
     cu_e = state.parent[scan_src]
     cv_e = state.parent[scan_dst]
     self_edge = cu_e == cv_e
@@ -573,7 +954,7 @@ def boruvka_round(state: BoruvkaState, scan_src, scan_dst, scan_rank,
     key = jnp.where(new_covered, INT_SENTINEL, scan_rank)
     best = candidate_min_edges(key, cu_e, cv_e, num_nodes)
     has, cand_edge, end_u, end_v, other, iota = resolve_candidates(
-        best, order, full_src, full_dst, state.parent)
+        best, order, full_src, full_dst, state.parent, root_map)
     committed = state.committed
     if variant == "cas":
         new_parent, commit = hook_cas(state.parent, has, cand_edge, other,

@@ -37,8 +37,9 @@ compatibility.
 """
 from __future__ import annotations
 
+import bisect
 import functools
-from typing import List, NamedTuple
+from typing import List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,9 +48,14 @@ from repro.obs.trace import annotate
 from repro.core.types import Graph, MSTResult, INT_SENTINEL, ensure_sized
 from repro.core.engine import (  # noqa: F401  (re-exported API)
     BoruvkaState,
+    ContractCarry,
     Frontier,
+    boruvka_contract_epoch,
     boruvka_epoch,
     boruvka_round,
+    contract_epoch_host,
+    contract_slice_host,
+    contracted_parent_original_ids,
     candidate_min_edges,
     commit_edges,
     compact_frontier,
@@ -65,6 +71,7 @@ from repro.core.engine import (  # noqa: F401  (re-exported API)
     resolve_candidates,
     scan_bucket_sizes,
     validate_variant,
+    vertex_bucket_sizes,
 )
 
 # Backward-compatible aliases (pre-engine-extraction names).
@@ -76,12 +83,13 @@ _finish = finish_result
 # Single-device engines.
 # ---------------------------------------------------------------------------
 
-def minimum_spanning_forest(graph: Graph, *, num_nodes: int = None,
+def minimum_spanning_forest(graph: Graph, *, num_nodes: Optional[int] = None,
                             variant: str = "cas",
                             track_covered: bool = True,
                             max_lock_waves: int = 16,
                             compaction: int = 0,
-                            compaction_kernel: bool = False) -> MSTResult:
+                            compaction_kernel: bool = False,
+                            contraction: bool = False) -> MSTResult:
     """Full Borůvka MSF as a single jitted ``lax.while_loop``.
 
     The (weight, edge_id) rank is computed host-side (numpy stable
@@ -105,14 +113,111 @@ def minimum_spanning_forest(graph: Graph, *, num_nodes: int = None,
       compaction_kernel: route the live-prefix permutation through the
                Pallas stream-compaction kernel (``kernels/compact_edges``)
                instead of the jnp cumsum path.
+      contraction: contract-Borůvka (DESIGN.md §2c): at every epoch
+               boundary the surviving supervertices are relabeled to a
+               dense ``[0, V')`` range and live endpoints rewritten, so
+               later rounds also shrink the *vertex*-sized per-round work
+               (segment_min, hooking, pointer jumping) — the part frontier
+               compaction alone cannot touch, and what the dense classes
+               need.  Requires ``compaction > 0`` (the epoch cadence is
+               shared).  Hooking decisions stay bit-identical: the relabel
+               is monotone, so rounds/waves/mst_mask match the
+               uncontracted engines; the reported ``parent`` is the
+               min-original-vertex canonical labeling.
     """
     graph = ensure_sized(graph, num_nodes)
     validate_variant(variant)
+    if contraction and not compaction:
+        raise ValueError("contraction requires compaction > 0 "
+                         "(contraction happens at epoch boundaries)")
     rank, order = rank_edges_host(graph.weight)
+    if contraction:
+        return _contracted_host_loop(
+            graph, rank, order, variant=variant,
+            max_lock_waves=max_lock_waves, compaction=compaction,
+            compaction_kernel=compaction_kernel)
     return _msf_jit(graph, rank, order, num_nodes=graph.num_nodes,
                     variant=variant, track_covered=track_covered,
                     max_lock_waves=max_lock_waves, compaction=compaction,
                     compaction_kernel=compaction_kernel)
+
+
+def _bucket_cover(sizes, count: int) -> int:
+    """Smallest static bucket covering ``count`` (host-side
+    ``scan_bucket_index``)."""
+    return sizes[bisect.bisect_left(sizes, max(count, 1))]
+
+
+def _contracted_host_loop(graph: Graph, rank, order, *, variant: str,
+                          max_lock_waves: int, compaction: int,
+                          compaction_kernel: bool) -> MSTResult:
+    """Contract-Borůvka driver: HOST epoch loop over truly-shrinking
+    buffers (DESIGN.md §2c).
+
+    Each epoch is one ``contract_epoch_host`` call whose buffer shapes ARE
+    the current (edge bucket, vertex bucket) pair — the host reads back
+    the post-epoch live-edge and supervertex counts, picks the next pow2
+    pair, and ``contract_slice_host`` materializes the smaller buffers.
+    Compared to the batched engine's in-jit ``boruvka_contract_epoch``
+    (full-width while_loop carry + a ``lax.switch`` over the bucket-pair
+    product), this keeps every epoch-boundary op at prefix width and
+    compiles one specialization per visited pair instead of the full
+    product — the same host-bucket idiom as ``_python_loop``'s opt-seq
+    path, at a cost of one device round-trip per epoch (~log V of them).
+    """
+    num_nodes = graph.num_nodes
+    e_full = graph.num_edges
+    e_sizes = scan_bucket_sizes(e_full)
+    v_sizes = vertex_bucket_sizes(num_nodes)
+    cas = variant == "cas"
+
+    src, dst, rk = graph.src, graph.dst, rank
+    parent = jnp.arange(num_nodes, dtype=jnp.int32)
+    covered = jnp.zeros((e_full,), bool)
+    committed = (jnp.full((num_nodes,), e_full, jnp.int32) if cas else None)
+    mst_mask = jnp.zeros((e_full,), bool)
+    num_rounds = jnp.zeros((), jnp.int32)
+    num_waves = jnp.zeros((), jnp.int32)
+    root_map = jnp.arange(num_nodes, dtype=jnp.int32)
+    num_active = jnp.asarray(num_nodes, jnp.int32)
+
+    epochs = 0
+    while True:
+        with annotate("contract_epoch"):
+            # The epoch's pack already reflects the fused multi-edge dedup
+            # (engine.contract_epoch_host): once the O(V'^2) pair bound
+            # fits the dense pair table, only the min-rank edge per
+            # supervertex pair stays live — on dense classes this is what
+            # finally lets the edge bucket collapse.
+            (done, num_rounds, num_waves, mst_mask, nsrc, ndst, perm,
+             live, root_map, num_active) = contract_epoch_host(
+                parent, covered, committed, mst_mask, num_rounds, num_waves,
+                src, dst, rk, graph.src, graph.dst, order, root_map,
+                num_active, variant=variant, max_lock_waves=max_lock_waves,
+                compaction=compaction, use_kernel=compaction_kernel)
+        if bool(done):
+            break
+        epochs += 1
+        if epochs > num_nodes:  # safety: can't exceed V epochs
+            raise RuntimeError("contract-Borůvka failed to converge")
+        n_active = int(num_active)
+        new_e = _bucket_cover(e_sizes, int(live))
+        new_v = _bucket_cover(v_sizes, n_active)
+        src, dst, rk, parent, covered, slots = contract_slice_host(
+            nsrc, ndst, rk, perm, live, new_e=new_e, new_v=new_v,
+            e_full=e_full)
+        committed = slots if cas else None
+
+    total = jnp.sum(jnp.where(mst_mask, graph.weight, 0.0))
+    return MSTResult(
+        parent=contracted_parent_original_ids(root_map, num_nodes),
+        mst_mask=mst_mask,
+        num_rounds=num_rounds,
+        num_waves=num_waves,
+        total_weight=total,
+        # Every surviving supervertex IS a component (done components keep
+        # their dense id), so V' is the component count.
+        num_components=num_active)
 
 
 @functools.partial(
@@ -192,7 +297,7 @@ class RoundTrace(NamedTuple):
     waves: List[int]    # cumulative hook waves after the round
 
 
-def round_trace(graph: Graph, num_nodes: int = None, *,
+def round_trace(graph: Graph, num_nodes: Optional[int] = None, *,
                 variant: str = "cas") -> RoundTrace:
     """Round-level solve observables: live edges, cumulative commits,
     cumulative hook waves per round.
@@ -224,11 +329,18 @@ def round_trace(graph: Graph, num_nodes: int = None, *,
         commits.append(int(jnp.sum(state.mst_mask)))
         waves.append(int(state.num_waves))
         if len(live) > num_nodes:
-            raise RuntimeError("Borůvka failed to converge")
+            # A correct solve needs <= log2(V) rounds (components at least
+            # halve); V rounds means the hooking is cycling, and the live
+            # tail is the diagnostic — a flat tail = stuck components, a
+            # shrinking tail = runaway accounting.
+            raise RuntimeError(
+                f"Borůvka failed to converge: {len(live)} rounds exceed "
+                f"num_nodes={num_nodes} (variant={variant!r}); "
+                f"live edges over the last rounds: {live[-5:]}")
     return RoundTrace(live, commits, waves)
 
 
-def live_edge_trace(graph: Graph, num_nodes: int = None, *,
+def live_edge_trace(graph: Graph, num_nodes: Optional[int] = None, *,
                     variant: str = "cas") -> list:
     """Per-round live (non-covered) edge counts — the frontier-decay signal.
 
@@ -240,26 +352,35 @@ def live_edge_trace(graph: Graph, num_nodes: int = None, *,
     return round_trace(graph, num_nodes, variant=variant).live
 
 
-def mst_unoptimized(graph: Graph, num_nodes: int = None,
-                    variant: str = "cas") -> MSTResult:
-    """Paper §2.1 sequential Borůvka: every round rescans *all* edges."""
-    return _python_loop(graph, num_nodes, variant=variant, compact=False)
+def mst_unoptimized(graph: Graph, num_nodes: Optional[int] = None,
+                    variant: str = "cas", *, ranking=None) -> MSTResult:
+    """Paper §2.1 sequential Borůvka: every round rescans *all* edges.
+
+    ``ranking`` optionally passes a precomputed ``rank_edges_host`` result
+    so A/B harnesses (fig1) can hoist the common host sort out of the
+    timed region — it is identical work on both arms and only dilutes the
+    measured scan-path ratio.
+    """
+    return _python_loop(graph, num_nodes, variant=variant, compact=False,
+                        ranking=ranking)
 
 
-def mst_optimized(graph: Graph, num_nodes: int = None,
-                  variant: str = "cas") -> MSTResult:
+def mst_optimized(graph: Graph, num_nodes: Optional[int] = None,
+                  variant: str = "cas", *, ranking=None) -> MSTResult:
     """Paper §2.1 optimized sequential: covered edges are skipped, realized
     vectorized as compaction - masking alone saves no vector work; dropping
     lanes does."""
-    return _python_loop(graph, num_nodes, variant=variant, compact=True)
+    return _python_loop(graph, num_nodes, variant=variant, compact=True,
+                        ranking=ranking)
 
 
 def _python_loop(graph: Graph, num_nodes, *, variant: str,
-                 compact: bool) -> MSTResult:
+                 compact: bool, ranking=None) -> MSTResult:
     graph = ensure_sized(graph, num_nodes)
     num_nodes = graph.num_nodes
     validate_variant(variant)
-    rank, order = rank_edges_host(graph.weight)
+    rank, order = ranking if ranking is not None \
+        else rank_edges_host(graph.weight)
     e_full = graph.num_edges
     state = init_state(num_nodes, e_full, e_full)
     scan_src, scan_dst, scan_rank = graph.src, graph.dst, rank

@@ -47,6 +47,11 @@ class SolveOptions:
       compaction_kernel: route the live-prefix permutation through the
         Pallas stream-compaction kernel; requires ``compaction > 0`` and an
         engine declaring ``supports_compaction_kernel``.
+      contraction: contract-Borůvka (DESIGN.md §2c) — shrink the *vertex*
+        space at epoch boundaries by relabeling surviving supervertices to
+        a dense range; requires ``compaction > 0`` (contraction happens at
+        the epoch boundary the cadence defines) and an engine declaring
+        ``supports_contraction``.
       mesh: mesh policy — :data:`MESH_AUTO` (default; mesh engines build a
         1-D mesh over all local devices once, at first solve), a concrete
         ``jax.sharding.Mesh``, or ``None`` (explicitly no mesh — rejected
@@ -59,6 +64,7 @@ class SolveOptions:
     variant: str = "cas"
     compaction: int = 0
     compaction_kernel: bool = False
+    contraction: bool = False
     mesh: MeshPolicy = MESH_AUTO
     max_batch: Optional[int] = None
 
@@ -89,6 +95,17 @@ class SolveOptions:
                 raise ValueError(
                     f"engine {self.engine!r} has no Pallas stream-compaction "
                     f"path; engines that do: {supporting}")
+        if self.contraction:
+            if not self.compaction:
+                raise ValueError(
+                    "contraction=True requires compaction > 0 (the graph "
+                    "contracts at the epoch boundaries the cadence defines)")
+            if not spec.supports_contraction:
+                supporting = sorted(n for n, s in ENGINES.items()
+                                    if s.supports_contraction)
+                raise ValueError(
+                    f"engine {self.engine!r} cannot contract the vertex "
+                    f"space between epochs; engines that can: {supporting}")
         if not (self.mesh is None or self.mesh == MESH_AUTO
                 or isinstance(self.mesh, Mesh)):
             raise ValueError(

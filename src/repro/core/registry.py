@@ -3,7 +3,7 @@
 Every engine solves the same problem through the uniform entry
 
     ENGINES[name].solve(graph, variant=..., mesh=..., compaction=...,
-                        compaction_kernel=...)
+                        compaction_kernel=..., contraction=...)
 
 where ``graph`` is a *sized* :class:`repro.core.types.Graph` (it carries
 ``num_nodes``).  ``mesh`` is accepted by every engine (ignored by the
@@ -12,7 +12,7 @@ default to a 1-D mesh over all local devices when none is given.
 
 :class:`EngineSpec` additionally *declares* what each engine can do
 (``needs_mesh`` / ``supports_batched_lanes`` / ``honors_compaction`` /
-``supports_compaction_kernel``) so :class:`repro.core.options.SolveOptions`
+``supports_compaction_kernel`` / ``supports_contraction``) so :class:`repro.core.options.SolveOptions`
 can validate a configuration eagerly — at construction, not deep inside a
 jit trace.
 """
@@ -31,15 +31,18 @@ from repro.core.mst import (
 
 def _solve_single(graph: Graph, *, variant: str = "cas", mesh=None,
                   compaction: int = 0,
-                  compaction_kernel: bool = False) -> MSTResult:
+                  compaction_kernel: bool = False,
+                  contraction: bool = False) -> MSTResult:
     return minimum_spanning_forest(graph, variant=variant,
                                    compaction=compaction,
-                                   compaction_kernel=compaction_kernel)
+                                   compaction_kernel=compaction_kernel,
+                                   contraction=contraction)
 
 
 def _solve_unopt_seq(graph: Graph, *, variant: str = "cas", mesh=None,
                      compaction: int = 0,
-                     compaction_kernel: bool = False) -> MSTResult:
+                     compaction_kernel: bool = False,
+                     contraction: bool = False) -> MSTResult:
     # The §2.1 baseline rescans every edge by definition: compaction is a
     # no-op here (``honors_compaction=False`` lets validation say so).
     return mst_unoptimized(graph, variant=variant)
@@ -47,14 +50,16 @@ def _solve_unopt_seq(graph: Graph, *, variant: str = "cas", mesh=None,
 
 def _solve_opt_seq(graph: Graph, *, variant: str = "cas", mesh=None,
                    compaction: int = 0,
-                   compaction_kernel: bool = False) -> MSTResult:
+                   compaction_kernel: bool = False,
+                   contraction: bool = False) -> MSTResult:
     # Host-side compaction every round is this engine's definition.
     return mst_optimized(graph, variant=variant)
 
 
 def _solve_batched(graph: Graph, *, variant: str = "cas", mesh=None,
                    compaction: int = 0,
-                   compaction_kernel: bool = False) -> MSTResult:
+                   compaction_kernel: bool = False,
+                   contraction: bool = False) -> MSTResult:
     """One-lane batch through the vmapped engine, trimmed back to MSTResult.
 
     The registry-level adapter pads to the exact request shape; the planned
@@ -67,7 +72,7 @@ def _solve_batched(graph: Graph, *, variant: str = "cas", mesh=None,
     packed = pack_padded([graph], padded_edges=graph.num_edges,
                          padded_nodes=v)
     r = batched_msf(packed, num_nodes=v, variant=variant,
-                    compaction=compaction)
+                    compaction=compaction, contraction=contraction)
     return MSTResult(parent=r.parent[0], mst_mask=r.mst_mask[0],
                      num_rounds=r.num_rounds[0], num_waves=r.num_waves[0],
                      total_weight=r.total_weight[0],
@@ -83,7 +88,8 @@ def _default_mesh(mesh):
 
 def _solve_distributed(graph: Graph, *, variant: str = "cas", mesh=None,
                        compaction: int = 0,
-                       compaction_kernel: bool = False) -> MSTResult:
+                       compaction_kernel: bool = False,
+                       contraction: bool = False) -> MSTResult:
     from repro.core.distributed_mst import distributed_msf
 
     return distributed_msf(graph, mesh=_default_mesh(mesh), variant=variant,
@@ -92,7 +98,8 @@ def _solve_distributed(graph: Graph, *, variant: str = "cas", mesh=None,
 
 def _solve_sharded(graph: Graph, *, variant: str = "cas", mesh=None,
                    compaction: int = 0,
-                   compaction_kernel: bool = False) -> MSTResult:
+                   compaction_kernel: bool = False,
+                   contraction: bool = False) -> MSTResult:
     from repro.core.sharded_mst import sharded_msf
 
     return sharded_msf(graph, mesh=_default_mesh(mesh), variant=variant,
@@ -104,8 +111,8 @@ class EngineSpec(NamedTuple):
 
     Attributes:
       name: registry key.
-      solve: ``(graph, *, variant, mesh, compaction, compaction_kernel) ->
-        MSTResult`` over a sized Graph.
+      solve: ``(graph, *, variant, mesh, compaction, compaction_kernel,
+        contraction) -> MSTResult`` over a sized Graph.
       needs_mesh: True when the engine runs real collectives (a mesh is
         constructed over all local devices if the caller passes none).
       description: one-line summary for --help texts and docs tables.
@@ -116,6 +123,10 @@ class EngineSpec(NamedTuple):
         definition, so a caller asking them for a cadence is a config bug).
       supports_compaction_kernel: the Pallas stream-compaction kernel can
         replace the jnp live-prefix permutation.
+      supports_contraction: the engine can shrink the *vertex* space
+        between compaction epochs (contract-Borůvka, DESIGN.md §2c); the
+        mesh engines keep replicated/owner-sharded vertex layouts whose
+        collectives assume a fixed vertex space, so they decline the knob.
     """
 
     name: str
@@ -125,20 +136,23 @@ class EngineSpec(NamedTuple):
     supports_batched_lanes: bool = False
     honors_compaction: bool = False
     supports_compaction_kernel: bool = False
+    supports_contraction: bool = False
 
 
 ENGINES = {
     spec.name: spec for spec in (
         EngineSpec("single", _solve_single, False,
                    "one jitted while_loop, cas/lock hooking (paper §2.2)",
-                   honors_compaction=True, supports_compaction_kernel=True),
+                   honors_compaction=True, supports_compaction_kernel=True,
+                   supports_contraction=True),
         EngineSpec("unopt-seq", _solve_unopt_seq, False,
                    "paper §2.1 baseline: rescans every edge per round"),
         EngineSpec("opt-seq", _solve_opt_seq, False,
                    "paper §2.1 optimized: covered-edge compaction"),
         EngineSpec("batched", _solve_batched, False,
                    "vmapped multi-graph engine, lane-packed solves",
-                   supports_batched_lanes=True, honors_compaction=True),
+                   supports_batched_lanes=True, honors_compaction=True,
+                   supports_contraction=True),
         EngineSpec("distributed", _solve_distributed, True,
                    "edge scan sharded, topology replicated, pmin merge",
                    honors_compaction=True),

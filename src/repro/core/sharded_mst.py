@@ -79,7 +79,7 @@ def shard_topology(part: EdgePartition, mesh: Mesh, axis: str = "data"):
                  flatten_partition(part))
 
 
-def sharded_msf(graph: Graph, *, num_nodes: int = None, mesh: Mesh,
+def sharded_msf(graph: Graph, *, num_nodes: Optional[int] = None, mesh: Mesh,
                 axis: str = "data", variant: str = "cas",
                 max_lock_waves: int = 16,
                 partition: Optional[EdgePartition] = None,

@@ -151,7 +151,8 @@ class MSTSolver:
             def plan(g: Graph) -> MSTResult:
                 return solve(g, variant=opts.variant, mesh=mesh,
                              compaction=opts.compaction,
-                             compaction_kernel=opts.compaction_kernel)
+                             compaction_kernel=opts.compaction_kernel,
+                             contraction=opts.contraction)
             return plan
 
         return self._plan((graph.num_edges, graph.num_nodes), build)
@@ -167,7 +168,8 @@ class MSTSolver:
             def plan(batched_graph):
                 return batched_msf(batched_graph, num_nodes=padded_nodes,
                                    variant=opts.variant,
-                                   compaction=opts.compaction)
+                                   compaction=opts.compaction,
+                                   contraction=opts.contraction)
             return plan
 
         return self._plan((batch_size, padded_edges, padded_nodes), build)
@@ -198,7 +200,8 @@ class MSTSolver:
         rounds, waves, mst_edges = reader(result)
         trace = SolveTrace(
             engine=self.options.engine, variant=self.options.variant,
-            compaction=self.options.compaction, shape=shape,
+            compaction=self.options.compaction,
+            contraction=self.options.contraction, shape=shape,
             batch_size=batch_size, plan_key=plan_key, plan_hit=plan_hit,
             num_rounds=rounds, num_waves=waves, mst_edges=mst_edges,
             rank_us=rank_us, pack_us=pack_us,

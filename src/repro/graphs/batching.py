@@ -98,20 +98,31 @@ def unpack_results_mst(buckets: Sequence[PackedBucket],
     n = sum(len(b.indices) for b in buckets)
     out: List[MSTResult] = [None] * n  # type: ignore[list-item]
     with _obs_phase("pack"):
-        for bucket, res in zip(buckets, results):
-            # One device->host transfer per bucket (not per lane per field).
-            res_np = jax.device_get(res)
-            nn = np.asarray(bucket.graph.num_nodes)
-            ne = np.asarray(bucket.graph.num_edges)
+        # ONE device->host transfer for all buckets (not per bucket, and
+        # not per lane per field) — at high lane counts the per-bucket
+        # sync was a visible slice of batched throughput.
+        results_np = jax.device_get(list(results))
+        for bucket, res_np in zip(buckets, results_np):
+            # Bulk-convert the per-lane scalars once: python ints/floats
+            # out of one .tolist() each, instead of boxing a numpy scalar
+            # per lane per field inside the loop.
+            nn = np.asarray(bucket.graph.num_nodes).tolist()
+            ne = np.asarray(bucket.graph.num_edges).tolist()
+            rounds = res_np.num_rounds.tolist()
+            waves = res_np.num_waves.tolist()
+            totals = res_np.total_weight.tolist()
+            comps = res_np.num_components.tolist()
+            parent, mask = res_np.parent, res_np.mst_mask
             for lane, orig in enumerate(bucket.indices):
-                v, e = int(nn[lane]), int(ne[lane])
+                # parent/mst_mask slices are views into the bucket arrays
+                # — no per-lane copy.
                 out[orig] = MSTResult(
-                    parent=res_np.parent[lane, :v],
-                    mst_mask=res_np.mst_mask[lane, :e],
-                    num_rounds=res_np.num_rounds[lane],
-                    num_waves=res_np.num_waves[lane],
-                    total_weight=res_np.total_weight[lane],
-                    num_components=res_np.num_components[lane])
+                    parent=parent[lane, :nn[lane]],
+                    mst_mask=mask[lane, :ne[lane]],
+                    num_rounds=rounds[lane],
+                    num_waves=waves[lane],
+                    total_weight=totals[lane],
+                    num_components=comps[lane])
     return out
 
 

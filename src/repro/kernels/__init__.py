@@ -12,9 +12,11 @@ tiling the TPU target would use.
 from repro.kernels.segment_min_edges.ops import (batched_segment_min_edges,
                                                  segment_min_edges)
 from repro.kernels.compact_edges.ops import compact_edges
+from repro.kernels.relabel_vertices.ops import relabel_vertices
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.fm_interaction.ops import fm_interaction_kernel
 from repro.kernels.gnn_spmm.ops import gather_segment_sum
 
 __all__ = ["segment_min_edges", "batched_segment_min_edges", "compact_edges",
-           "flash_attention", "fm_interaction_kernel", "gather_segment_sum"]
+           "relabel_vertices", "flash_attention", "fm_interaction_kernel",
+           "gather_segment_sum"]

@@ -1,0 +1,40 @@
+"""Public wrapper: padding, block selection, interpret switch.
+
+``interpret`` defaults to auto-detection like the other kernel packages:
+compiled on TPU backends, interpreter mode everywhere else.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.relabel_vertices.kernel import relabel_vertices_pallas
+
+
+def _resolve_interpret(interpret) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_vertices", "interpret"))
+def relabel_vertices(isroot, *, block_vertices: int = 4096,
+                     interpret: bool | None = None):
+    """isroot: (V,) bool -> (new_id (V,) int32, num_roots () int32).
+
+    Monotone dense rank over the root set (see ref.py for the exact
+    contract).  Padding with isroot=0 is safe: pad slots are non-roots, so
+    they take the sentinel and contribute nothing to the count or to any
+    real slot's rank.
+    """
+    v = isroot.shape[0]
+    block = min(block_vertices, max(256, v))
+    root = isroot.astype(jnp.int32)
+    pad = (-v) % block
+    if pad:
+        root = jnp.concatenate([root, jnp.zeros((pad,), jnp.int32)])
+    new_id, counts = relabel_vertices_pallas(
+        root, block_vertices=block, interpret=_resolve_interpret(interpret))
+    return new_id[:v], counts[0]

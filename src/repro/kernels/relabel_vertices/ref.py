@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the root-relabeling kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+INT_SENTINEL = np.iinfo(np.int32).max
+
+
+def relabel_vertices_ref(isroot):
+    """isroot: (V,) bool -> (new_id (V,) int32, num_roots () int32).
+
+    Monotone dense rank over the root set: root ``i`` gets
+    ``|{j < i : isroot[j]}|`` (an exclusive cumsum), non-roots get
+    INT_SENTINEL.  Monotonicity is load-bearing: it preserves the relative
+    order of root ids, so the contracted graph's CAS 2-cycle break and
+    lock arbitration make the exact decisions the uncontracted solve made.
+    """
+    isroot = isroot.astype(bool)
+    rank = (jnp.cumsum(isroot) - 1).astype(jnp.int32)
+    new_id = jnp.where(isroot, rank, INT_SENTINEL)
+    return new_id, jnp.sum(isroot).astype(jnp.int32)

@@ -104,7 +104,8 @@ class SolveTrace:
 
     Always filled (cheap, no extra device work):
 
-      engine/variant/compaction: the resolved configuration that ran.
+      engine/variant/compaction/contraction: the resolved configuration
+        that ran.
       shape: padded ``(num_edges, num_nodes)`` of the dispatch.
       batch_size: lanes in the dispatch (1 for per-graph engines).
       plan_key / plan_hit: plan-cache behaviour of this dispatch.
@@ -140,6 +141,9 @@ class SolveTrace:
     pack_us: float
     solve_us: float
     total_us: float
+    # Contract-Borůvka on/off; defaulted (and therefore declared after the
+    # required fields) so existing positional constructions stay valid.
+    contraction: bool = False
     live_per_round: Optional[List[int]] = None
     commits_per_round: Optional[List[int]] = None
     waves_per_round: Optional[List[int]] = None

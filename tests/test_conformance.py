@@ -153,11 +153,59 @@ def test_compaction_preserves_round_structure(engine, variant, mesh):
     assert int(r0.num_waves) == int(r1.num_waves)
 
 
+# Engines whose SolveOptions accept contraction=True (contract-Borůvka:
+# relabel surviving roots to a dense [0, V') prefix between epochs so the
+# vertex-sized per-round work shrinks with the component count, not just
+# the edge scan).  Kept in sync with EngineSpec.supports_contraction.
+CONTRACTION_ENGINES = tuple(n for n in ENGINE_NAMES
+                            if ENGINES[n].supports_contraction)
+
+
+def test_contraction_engines_expected():
+    assert CONTRACTION_ENGINES == ("single", "batched")
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("engine", CONTRACTION_ENGINES)
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_contraction_conformance(engine, variant, family, mesh):
+    """Contraction must be invisible in the results: exact Kruskal edge-set
+    identity, plus edge-set AND round/wave identity with the same engine's
+    compacted-but-uncontracted solve — the relabel is monotone, so hooking
+    decisions cannot change."""
+    graph = FAMILIES[family]()
+    r_con = make_solver(_options(engine, variant, mesh, compaction=1,
+                                 contraction=True)).solve(graph)
+    assert_matches_oracle(r_con, graph)
+    r_off = make_solver(_options(engine, variant, mesh,
+                                 compaction=1)).solve(graph)
+    assert (np.asarray(r_con.mst_mask) == np.asarray(r_off.mst_mask)).all()
+    assert int(r_con.num_rounds) == int(r_off.num_rounds)
+    assert int(r_con.num_waves) == int(r_off.num_waves)
+    # parent is reported in ORIGINAL vertex ids, min-vertex canonical:
+    # idempotent, and every vertex's label is the smallest id in its
+    # component (so it can never exceed the vertex's own id).
+    par = np.asarray(r_con.parent)
+    assert par.shape == (graph.num_nodes,)
+    assert (par[par] == par).all()
+    assert (par <= np.arange(graph.num_nodes)).all()
+
+
 def test_compaction_kernel_path_matches_oracle():
     """The Pallas stream-compaction permutation plugs into the single
     engine and must leave the solve oracle-identical."""
     graph = generate_graph(300, 5, seed=3)
     solver = make_solver(SolveOptions(compaction=1, compaction_kernel=True))
+    assert_matches_oracle(solver.solve(graph), graph)
+
+
+def test_contraction_kernel_path_matches_oracle():
+    """contraction=True + compaction_kernel=True routes BOTH the frontier
+    pack and the between-epoch root relabel through their Pallas kernels;
+    the solve must stay oracle-identical."""
+    graph = generate_graph(300, 5, seed=3)
+    solver = make_solver(SolveOptions(compaction=1, compaction_kernel=True,
+                                      contraction=True))
     assert_matches_oracle(solver.solve(graph), graph)
 
 

@@ -25,6 +25,8 @@ from repro.kernels.fm_interaction.ops import fm_interaction_kernel
 from repro.kernels.fm_interaction.ref import fm_interaction_ref
 from repro.kernels.gnn_spmm.ops import gather_segment_sum
 from repro.kernels.gnn_spmm.ref import gather_segment_sum_ref
+from repro.kernels.relabel_vertices.ops import relabel_vertices
+from repro.kernels.relabel_vertices.ref import relabel_vertices_ref
 
 
 @pytest.mark.parametrize("v,e,block", [(17, 96, 32), (64, 512, 128),
@@ -53,6 +55,28 @@ def test_compact_edges_sweep(e, block, frac):
     np.testing.assert_array_equal(np.asarray(perm), np.asarray(rperm))
     assert int(live) == int(rlive)
     assert sorted(np.asarray(perm).tolist()) == list(range(e))
+
+
+@pytest.mark.parametrize("v,block,frac", [(96, 256, 0.3), (512, 256, 0.7),
+                                          (1000, 512, 0.5), (8, 256, 0.0),
+                                          (300, 256, 1.0), (4096, 1024, 0.1)])
+def test_relabel_vertices_sweep(v, block, frac):
+    """Root-relabel kernel == jnp oracle: exact dense rank + root count,
+    across block splits, padding remainders, and root densities (0.0 = no
+    roots, 1.0 = every vertex is its own root — the first epoch)."""
+    rng = np.random.default_rng(v + block)
+    isroot = jnp.asarray(rng.random(v) < frac) if 0.0 < frac < 1.0 \
+        else jnp.full((v,), bool(frac))
+    nid, n = relabel_vertices(isroot, block_vertices=block)
+    rnid, rn = relabel_vertices_ref(isroot)
+    np.testing.assert_array_equal(np.asarray(nid), np.asarray(rnid))
+    assert int(n) == int(rn) == int(np.asarray(isroot).sum())
+    # The live half of the output is a monotone bijection onto [0, n):
+    # order preservation is what keeps the contracted solve's min-root
+    # arbitration identical to the uncontracted one.
+    roots = np.asarray(nid)[np.asarray(isroot)]
+    assert sorted(roots.tolist()) == list(range(int(n)))
+    assert (np.diff(roots) > 0).all() if roots.size else True
 
 
 # The acceptance contract for the clustering pipeline's kernel is

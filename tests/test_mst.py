@@ -114,3 +114,22 @@ def test_mst_partition_covers_all_nodes():
     assert part.shape == (v,)
     assert sizes.sum() == v
     assert (part >= 0).all() and (part < 4).all()
+
+
+def test_round_trace_nonconvergence_diagnostic(monkeypatch):
+    """When hooking cycles (done never flips), round_trace must abort with
+    a diagnostic carrying the round count, graph size, variant and the
+    live-edge tail — not loop forever or fail bare."""
+    from repro.core import mst as mst_mod
+
+    g = generate_graph(6, 3, seed=0)
+
+    def stuck(state, *args, **kwargs):
+        return state._replace(done=jnp.asarray(False))
+
+    monkeypatch.setattr(mst_mod, "_one_round_jit", stuck)
+    with pytest.raises(RuntimeError,
+                       match=r"failed to converge: \d+ rounds exceed "
+                             r"num_nodes=6 \(variant='cas'\); "
+                             r"live edges over the last rounds"):
+        mst_mod.round_trace(g)

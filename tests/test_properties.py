@@ -55,6 +55,52 @@ def test_property_live_prefix_permutation(covered_bits, seed):
     assert int(klive) == int(live)
 
 
+@given(st.lists(st.booleans(), min_size=1, max_size=256))
+@settings(max_examples=40)
+def test_property_relabel_monotone_bijection(isroot_bits):
+    """The between-epoch root relabel is a MONOTONE bijection from the root
+    set onto the dense prefix [0, V'), for ANY root mask: roots receive
+    exactly 0..V'-1 in increasing original-id order (order preservation is
+    what keeps min-root hook arbitration identical after contraction),
+    non-roots receive the sentinel.  The Pallas kernel must agree
+    bit-for-bit with the jnp engine path and the ref oracle."""
+    from repro.core.engine import relabel_roots
+    from repro.kernels.relabel_vertices.ops import relabel_vertices
+    from repro.kernels.relabel_vertices.ref import relabel_vertices_ref
+
+    bits = np.asarray(isroot_bits, bool)
+    isroot = jnp.asarray(bits)
+    new_id, num = relabel_roots(isroot)
+    nid = np.asarray(new_id)
+    k = int(num)
+    assert k == int(bits.sum())
+    labels = nid[bits]
+    assert sorted(labels.tolist()) == list(range(k))  # bijection onto [0,k)
+    assert (np.diff(labels) > 0).all()                # monotone
+    assert (nid[~bits] == INT_SENTINEL).all()
+    knid, kn = relabel_vertices(isroot)
+    rnid, rn = relabel_vertices_ref(isroot)
+    np.testing.assert_array_equal(np.asarray(knid), nid)
+    np.testing.assert_array_equal(np.asarray(rnid), nid)
+    assert int(kn) == int(rn) == k
+
+
+@given(st.integers(12, 100), st.integers(2, 6), st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_property_contraction_invisible(n, deg, seed):
+    """Contract-Borůvka must be invisible in the results for any random
+    sparse graph: identical edge set, rounds, waves and component count to
+    the uncontracted compacted solve."""
+    g = generate_graph(n, deg, seed=seed)
+    r0 = minimum_spanning_forest(g, compaction=1)
+    r1 = minimum_spanning_forest(g, compaction=1, contraction=True)
+    np.testing.assert_array_equal(np.asarray(r0.mst_mask),
+                                  np.asarray(r1.mst_mask))
+    assert int(r0.num_rounds) == int(r1.num_rounds)
+    assert int(r0.num_waves) == int(r1.num_waves)
+    assert int(r0.num_components) == int(r1.num_components)
+
+
 @given(st.integers(12, 100), st.integers(2, 6), st.integers(0, 10_000))
 @settings(max_examples=8, deadline=None)
 def test_property_live_counts_monotone(n, deg, seed):
