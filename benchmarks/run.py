@@ -130,6 +130,13 @@ def main() -> None:
         cells=(compaction_bench.SMOKE_CELLS if args.smoke
                else compaction_bench.DEFAULT_CELLS),
         repeats=max(args.repeats, 5))
+    # spmm engine vs the edge-list single engine (paired ratios): the
+    # semiring SpMV candidate selection's gated headline speedup.
+    from benchmarks import spmm_bench
+    rows += spmm_bench.spmm_rows(
+        cells=(spmm_bench.SMOKE_CELLS if args.smoke
+               else spmm_bench.DEFAULT_CELLS),
+        repeats=max(args.repeats, 5))
     # Batched multi-graph engine: serving throughput at batch {1, 8, 64},
     # plus end-to-end solve_many rows (pack + solve + unpack) that see the
     # host-side lane packing costs the engine-only rows cannot.

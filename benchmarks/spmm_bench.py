@@ -1,0 +1,64 @@
+"""spmm-engine section: semiring SpMV candidate selection vs the edge-list
+scan, same hooking machinery on both arms (DESIGN.md §2d).
+
+A/B methodology is ``compaction_bench.paired_time`` (adjacent pairs,
+median of per-pair ratios — the only timing the container's drifting
+clock can't poison).  Both arms are END-TO-END solves including their
+per-solve layout costs: the host (weight, edge_id) rank on both sides,
+plus the ELL+overflow build on the spmm side — the build is ~half the
+spmm solve on Graph100K_6 and hiding it would overstate the win.
+
+The timed spmm arm is ``compaction=0`` (one static layout for the whole
+solve): the per-round reduction is where the engine wins, and on these
+classes the epoch-loop layout refreshes cost more than the shrunken
+rounds return (EXPERIMENTS.md §SpMM records the refresh arms too).
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+from benchmarks.compaction_bench import _resolve, paired_time
+
+DEFAULT_CELLS: Sequence[str] = ("Graph10K_6", "Graph100K_3", "Graph100K_6")
+# Subset of the default set so the CI regression job always has a
+# committed baseline key to compare.
+SMOKE_CELLS: Sequence[str] = ("Graph10K_6",)
+
+
+def spmm_rows(cells: Sequence[str] = DEFAULT_CELLS, variant: str = "cas",
+              repeats: int = 5) -> List[Tuple[str, float, str]]:
+    """(name, us, derived) rows: paired spmm-vs-single speedups.
+
+    ``spmm_vs_single`` is the gated headline ratio (bigger is better,
+    same-run, runner-portable); the derived column also records the
+    layout shape (ELL width, overflow slots) so a width-heuristic change
+    that shifts the layout shows up next to the ratio it moved.
+    """
+    from repro.core.engine import rank_edges_host
+    from repro.core.mst import minimum_spanning_forest
+    from repro.core.spmm_mst import spmm_msf
+    from repro.graphs.csr_device import ell_from_edges_host
+
+    rows = []
+    for graph_name in cells:
+        g = _resolve(graph_name)
+
+        def base():
+            return minimum_spanning_forest(
+                g, variant=variant).total_weight.block_until_ready()
+
+        def spmm():
+            return spmm_msf(g, variant=variant
+                            ).total_weight.block_until_ready()
+
+        base_us, spmm_us, speedup = paired_time(base, spmm, repeats)
+        rank, _ = rank_edges_host(g.weight)
+        ell = ell_from_edges_host(g.src, g.dst, rank, g.num_nodes)
+        r = spmm_msf(g, variant=variant)
+        rows.append((f"spmm_single_{graph_name}_{variant}", base_us, ""))
+        rows.append((f"spmm_{graph_name}_{variant}", spmm_us,
+                     f"spmm_vs_single={speedup:.3f};"
+                     f"rounds={int(r.num_rounds)};"
+                     f"ell_width={ell.width};"
+                     f"ovf_slots={ell.ovf_row.shape[0]}"))
+    return rows

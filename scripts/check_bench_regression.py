@@ -33,6 +33,10 @@ import sys
 SPEEDUP_METRICS = ("speedup_vs_off", "speedup_vs_unopt", "speedup_vs_opt",
                    "cas_speedup", "speedup_vs_bruteforce", "warm_hit_rate",
                    "hit_rate",
+                   # spmm engine vs the edge-list single engine, same
+                   # variant, end-to-end paired solves (benchmarks/
+                   # spmm_bench): the 7th engine's acceptance ratio.
+                   "spmm_vs_single",
                    # batched-engine scale-up ratio (b=64 gps / b=8 gps):
                    # same-run, so runner speed cancels; gates the
                    # throughput-must-not-fall-with-lanes property.

@@ -540,6 +540,41 @@ def boruvka_contract_epoch(carry: ContractCarry, full_src, full_dst, order,
     return jax.lax.switch(idx, branches, carry)
 
 
+def dedup_parallel_edges(cov, nsrc, ndst, rank, n_new):
+    """Cover every non-minimal parallel edge between contracted endpoint
+    pairs — the other half of true graph contraction, and the measured fix
+    for the dense-class regression: after a few rounds V' is tiny while
+    tens of thousands of live edges remain, nearly all parallel edges
+    between the same supervertex pairs.  A non-minimal parallel edge can
+    never be EITHER endpoint component's candidate (the kept pair-minimum
+    has a smaller rank and the same endpoints), so covering them is
+    invisible to the hooking decisions — rounds, waves and the committed
+    edge set stay bit-identical — but it lets the edge bucket collapse
+    toward the O(V'^2) pair bound.  Scatter-min over a dense pair table of
+    static size ``sz_e``; the cond predicate guarantees every live pair
+    key ``u * V' + v`` fits the table (and int32) — no-op until V'^2 fits.
+
+    Shared by the contract-Borůvka epoch tail (``contract_epoch_host``)
+    and the spmm engine's epoch tail (``core/spmm_mst.py``).
+    """
+    sz_e = cov.shape[0]
+
+    def dedup(c):
+        u = jnp.minimum(nsrc, ndst)
+        v = jnp.maximum(nsrc, ndst)
+        key = jnp.where(c, sz_e, u * n_new + v)  # dead lanes -> dropped
+        live_rank = jnp.where(c, INT_SENTINEL, rank)
+        best = jnp.full((sz_e,), INT_SENTINEL, jnp.int32).at[key].min(
+            live_rank, mode="drop")
+        keep = ~c & (rank == best.at[key].get(mode="fill",
+                                              fill_value=INT_SENTINEL))
+        return ~keep
+
+    return jax.lax.cond(
+        n_new.astype(jnp.float32) ** 2 <= jnp.float32(sz_e),
+        dedup, lambda c: c, cov)
+
+
 @functools.partial(
     jax.jit, static_argnames=("variant", "max_lock_waves", "compaction",
                               "use_kernel"))
@@ -628,33 +663,7 @@ def contract_epoch_host(parent, covered, committed, mst_mask, num_rounds,
     cov = st.covered | (cu == cv)  # post-hook coverage refresh
     nsrc = new_id[cu]
     ndst = new_id[cv]
-
-    def dedup_pairs(c):
-        # Multi-edge dedup — the other half of true graph contraction, and
-        # the measured fix for the dense-class regression: after a few
-        # rounds V' is tiny while tens of thousands of live edges remain,
-        # nearly all parallel edges between the same supervertex pairs.  A
-        # non-minimal parallel edge can never be EITHER endpoint
-        # component's candidate (the kept pair-minimum has a smaller rank
-        # and the same endpoints), so covering them is invisible to the
-        # hooking decisions — rounds, waves and the committed edge set stay
-        # bit-identical — but it lets the edge bucket collapse toward the
-        # O(V'^2) pair bound.  Scatter-min over a dense pair table of
-        # static size ``sz_e``; the cond predicate below guarantees every
-        # live pair key ``u * V' + v`` fits the table (and int32).
-        u = jnp.minimum(nsrc, ndst)
-        v = jnp.maximum(nsrc, ndst)
-        key = jnp.where(c, sz_e, u * n_new + v)  # dead lanes -> dropped
-        live_rank = jnp.where(c, INT_SENTINEL, rank)
-        best = jnp.full((sz_e,), INT_SENTINEL, jnp.int32).at[key].min(
-            live_rank, mode="drop")
-        keep = ~c & (rank == best.at[key].get(mode="fill",
-                                              fill_value=INT_SENTINEL))
-        return ~keep
-
-    cov = jax.lax.cond(
-        n_new.astype(jnp.float32) ** 2 <= jnp.float32(sz_e),
-        dedup_pairs, lambda c: c, cov)
+    cov = dedup_parallel_edges(cov, nsrc, ndst, rank, n_new)
     if use_kernel:
         from repro.kernels.compact_edges.ops import compact_edges
         perm, live = compact_edges(cov)
@@ -665,18 +674,51 @@ def contract_epoch_host(parent, covered, committed, mst_mask, num_rounds,
             new_id[st.parent[root_map]], n_new)
 
 
+def respread_ranks(lane_rank, order):
+    """Renumber surviving edge ranks to a dense ``[0, live)`` prefix at an
+    epoch boundary (the ROADMAP PR-7 follow-up).
+
+    ``lane_rank``: (E',) packed live lanes' ranks in the PREVIOUS epoch's
+    rank space, INT_SENTINEL on pad lanes.  ``order``: that space's decode
+    table (``order[r]`` = original edge id holding rank r).  Returns
+    ``(new_rank, new_order)``: the j-th smallest surviving rank becomes j,
+    and ``new_order`` — now only E' entries — decodes the new space
+    straight to original edge ids.
+
+    The renumbering is monotone (stable argsort of unique ranks), so every
+    rank comparison the hooking machinery makes is unchanged —
+    bit-identical rounds/waves/mask, the same argument as the contraction
+    relabel itself.  What it buys: ranks stay dense in the CURRENT edge
+    bucket, so the multi-edge dedup's pair table and every decode gather
+    shrink with the epoch instead of staying O(E_full) — without it,
+    repeated contractions keep global ranks and the first dedup's
+    surviving ranks are spread across the full original range.
+    """
+    e = lane_rank.shape[0]
+    sidx = jnp.argsort(lane_rank, stable=True).astype(jnp.int32)
+    new_rank = jnp.zeros((e,), jnp.int32).at[sidx].set(
+        jnp.arange(e, dtype=jnp.int32))
+    new_rank = jnp.where(lane_rank == INT_SENTINEL, INT_SENTINEL, new_rank)
+    # Pad slots (lane_rank == sentinel) gather out of bounds -> fill 0;
+    # they are never decoded (a candidate's rank is always < live).
+    new_order = order.at[lane_rank[sidx]].get(mode="fill", fill_value=0)
+    return new_rank, new_order
+
+
 @functools.partial(jax.jit, static_argnames=("new_e", "new_v", "e_full"))
-def contract_slice_host(nsrc, ndst, rank, perm, live, *, new_e: int,
+def contract_slice_host(nsrc, ndst, rank, order, perm, live, *, new_e: int,
                         new_v: int, e_full: int):
     """Materialize the next epoch's bucket-sized buffers from
     :func:`contract_epoch_host`'s full-prefix outputs: gather the live
-    lanes (``perm`` packs them first; the host chose ``new_e`` >= live) and
-    reset the vertex-side state — identity parent, sentinel commit slots —
-    at the contracted size."""
+    lanes (``perm`` packs them first; the host chose ``new_e`` >= live),
+    re-spread the surviving ranks to a dense prefix (with the matching
+    shrunken decode table), and reset the vertex-side state — identity
+    parent, sentinel commit slots — at the contracted size."""
     prefix = perm[:new_e]
     pad = jnp.arange(new_e, dtype=jnp.int32) >= live
-    return (nsrc[prefix], ndst[prefix],
-            jnp.where(pad, INT_SENTINEL, rank[prefix]),
+    lane_rank = jnp.where(pad, INT_SENTINEL, rank[prefix])
+    new_rank, new_order = respread_ranks(lane_rank, order)
+    return (nsrc[prefix], ndst[prefix], new_rank, new_order,
             jnp.arange(new_v, dtype=jnp.int32),       # parent: identity
             pad,                                      # covered
             jnp.full((new_v,), e_full, jnp.int32))    # CAS commit slots
@@ -937,22 +979,22 @@ def hook_lock_waves(parent, mst_mask, has, cand_edge, end_u, end_v,
 # One Borůvka round (replicated-topology layout).
 # ---------------------------------------------------------------------------
 
-def boruvka_round(state: BoruvkaState, scan_src, scan_dst, scan_rank,
-                  full_src, full_dst, order, root_map=None, *, variant: str,
-                  track_covered: bool, num_nodes: int,
-                  max_lock_waves: int = 16) -> BoruvkaState:
-    """One round: min-edge search over scan lanes, hooking, compression.
+def hook_commit_round(state: BoruvkaState, best, order, full_src, full_dst,
+                      root_map=None, *, variant: str,
+                      max_lock_waves: int = 16) -> BoruvkaState:
+    """The back half of one Borůvka round, shared by every candidate-search
+    layout: decode the per-component candidate ranks (``best``), hook
+    (cas/lock), commit, and advance the round/wave/done accounting.
 
-    ``root_map`` (contract-Borůvka only) translates original-id endpoints
-    decoded from the replicated topology into the contracted vertex space;
-    the scan lanes themselves are already contracted-id.
+    ``best`` is the (V,) per-component minimum outgoing edge rank
+    (INT_SENTINEL = no candidate) — however it was computed: the edge-list
+    engines' ``candidate_min_edges`` scan, or the spmm engine's row-blocked
+    semiring reduction (``core/spmm_mst.py``).  Identical ``best`` in =>
+    bit-identical hooking decisions out, which is exactly the conformance
+    contract across engines.  ``state.covered`` passes through untouched:
+    coverage is the candidate-search half's bookkeeping (the spmm engine
+    keeps none).
     """
-    cu_e = state.parent[scan_src]
-    cv_e = state.parent[scan_dst]
-    self_edge = cu_e == cv_e
-    new_covered = state.covered | self_edge  # "graph_edge[E].covered = 1"
-    key = jnp.where(new_covered, INT_SENTINEL, scan_rank)
-    best = candidate_min_edges(key, cu_e, cv_e, num_nodes)
     has, cand_edge, end_u, end_v, other, iota = resolve_candidates(
         best, order, full_src, full_dst, state.parent, root_map)
     committed = state.committed
@@ -973,13 +1015,35 @@ def boruvka_round(state: BoruvkaState, scan_src, scan_dst, scan_rank,
             max_waves=max_lock_waves)
     else:
         raise ValueError(f"unknown variant {variant!r}")
-    covered = new_covered if track_covered else state.covered
     # Done when no component saw an outgoing edge (forest complete).
     done = ~jnp.any(has)
-    return BoruvkaState(new_parent, mst_mask, covered,
+    return BoruvkaState(new_parent, mst_mask, state.covered,
                         state.num_rounds + jnp.where(done, 0, 1),
                         state.num_waves + jnp.where(done, 0, waves), done,
                         committed)
+
+
+def boruvka_round(state: BoruvkaState, scan_src, scan_dst, scan_rank,
+                  full_src, full_dst, order, root_map=None, *, variant: str,
+                  track_covered: bool, num_nodes: int,
+                  max_lock_waves: int = 16) -> BoruvkaState:
+    """One round: min-edge search over scan lanes, hooking, compression.
+
+    ``root_map`` (contract-Borůvka only) translates original-id endpoints
+    decoded from the replicated topology into the contracted vertex space;
+    the scan lanes themselves are already contracted-id.
+    """
+    cu_e = state.parent[scan_src]
+    cv_e = state.parent[scan_dst]
+    self_edge = cu_e == cv_e
+    new_covered = state.covered | self_edge  # "graph_edge[E].covered = 1"
+    key = jnp.where(new_covered, INT_SENTINEL, scan_rank)
+    best = candidate_min_edges(key, cu_e, cv_e, num_nodes)
+    out = hook_commit_round(state, best, order, full_src, full_dst,
+                            root_map, variant=variant,
+                            max_lock_waves=max_lock_waves)
+    return out._replace(
+        covered=new_covered if track_covered else state.covered)
 
 
 def boruvka_epoch(state: BoruvkaState, frontier: Frontier,

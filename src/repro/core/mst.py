@@ -172,6 +172,11 @@ def _contracted_host_loop(graph: Graph, rank, order, *, variant: str,
     cas = variant == "cas"
 
     src, dst, rk = graph.src, graph.dst, rank
+    # The decode table shrinks with the edge bucket: every epoch boundary
+    # re-spreads the surviving ranks to a dense prefix (engine.
+    # respread_ranks), so `order_tbl` stays exactly bucket-sized and the
+    # dedup pair table keeps dense rank keys across repeated contractions.
+    order_tbl = order
     parent = jnp.arange(num_nodes, dtype=jnp.int32)
     covered = jnp.zeros((e_full,), bool)
     committed = (jnp.full((num_nodes,), e_full, jnp.int32) if cas else None)
@@ -192,7 +197,7 @@ def _contracted_host_loop(graph: Graph, rank, order, *, variant: str,
             (done, num_rounds, num_waves, mst_mask, nsrc, ndst, perm,
              live, root_map, num_active) = contract_epoch_host(
                 parent, covered, committed, mst_mask, num_rounds, num_waves,
-                src, dst, rk, graph.src, graph.dst, order, root_map,
+                src, dst, rk, graph.src, graph.dst, order_tbl, root_map,
                 num_active, variant=variant, max_lock_waves=max_lock_waves,
                 compaction=compaction, use_kernel=compaction_kernel)
         if bool(done):
@@ -203,9 +208,9 @@ def _contracted_host_loop(graph: Graph, rank, order, *, variant: str,
         n_active = int(num_active)
         new_e = _bucket_cover(e_sizes, int(live))
         new_v = _bucket_cover(v_sizes, n_active)
-        src, dst, rk, parent, covered, slots = contract_slice_host(
-            nsrc, ndst, rk, perm, live, new_e=new_e, new_v=new_v,
-            e_full=e_full)
+        src, dst, rk, order_tbl, parent, covered, slots = \
+            contract_slice_host(nsrc, ndst, rk, order_tbl, perm, live,
+                                new_e=new_e, new_v=new_v, e_full=e_full)
         committed = slots if cas else None
 
     total = jnp.sum(jnp.where(mst_mask, graph.weight, 0.0))

@@ -96,6 +96,16 @@ def _solve_distributed(graph: Graph, *, variant: str = "cas", mesh=None,
                            compaction=compaction)
 
 
+def _solve_spmm(graph: Graph, *, variant: str = "cas", mesh=None,
+                compaction: int = 0,
+                compaction_kernel: bool = False,
+                contraction: bool = False) -> MSTResult:
+    from repro.core.spmm_mst import spmm_msf
+
+    return spmm_msf(graph, variant=variant, compaction=compaction,
+                    contraction=contraction)
+
+
 def _solve_sharded(graph: Graph, *, variant: str = "cas", mesh=None,
                    compaction: int = 0,
                    compaction_kernel: bool = False,
@@ -159,6 +169,10 @@ ENGINES = {
         EngineSpec("sharded", _solve_sharded, True,
                    "shard-local topology + owner-decode collective",
                    honors_compaction=True),
+        EngineSpec("spmm", _solve_spmm, False,
+                   "semiring SpMV candidate search over device ELL "
+                   "adjacency (GraphBLAS-style, DESIGN.md §2d)",
+                   honors_compaction=True, supports_contraction=True),
     )
 }
 

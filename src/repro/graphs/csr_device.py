@@ -1,0 +1,167 @@
+"""Device-side sparse adjacency for the spmm engine: ELL + overflow (HYB).
+
+``graphs/csr.py`` is the host-side CSR (numpy, data-pipeline random
+access); this module is its DEVICE counterpart, shaped for the spmm MSF
+engine's per-round semiring reduction (DESIGN.md §2d).  Plain CSR's
+variable-length row segments are hostile to XLA's static shapes, so the
+row structure is stored HYB-style:
+
+  * ``ell_col``/``ell_key`` — a dense ``(V, D)`` block holding each
+    vertex's first D incident slots (D = pow2 of ~2x the mean symmetrized
+    degree).  A per-round reduction over this block is a fixed-shape
+    row-blocked min — one ``(V, D)`` gather/filter/min instead of an
+    (E,)-wide scatter — which is the engine's entire win;
+  * ``ovf_row``/``ovf_col``/``ovf_key`` — a COO tail for the slots of
+    rows longer than D (degree skew: star graphs, hubs), reduced with a
+    V-sized segment_min.  The tail is pow2-padded so refreshed layouts
+    reuse jit specializations.
+
+Empty/padding slots aim at the sentinel row ``V`` with INT_SENTINEL keys
+— the same convention as ``kernels/gnn_spmm``.
+
+Both builders are *eager* jnp (no jit): the build runs once per solve /
+contraction epoch, its output shapes depend on a live-slot count, and
+inside the engine's host epoch loop the host is reading scalars anyway.
+Arrays never leave the device; only the overflow count does.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import INT_SENTINEL
+
+
+class EllGraph(NamedTuple):
+    """ELL block + COO overflow tail; all arrays device-resident int32.
+
+    Every undirected edge (u, v, key) contributes two directed slots —
+    one owned by row u, one by row v — so a per-row reduction sees the
+    full incident edge set of each vertex (the same symmetrization as
+    ``graphs/csr.py``).
+    """
+
+    ell_col: jnp.ndarray  # (V, D) neighbor ids; V for empty slots
+    ell_key: jnp.ndarray  # (V, D) slot keys; INT_SENTINEL for empty
+    ovf_row: jnp.ndarray  # (O,) owning vertex; V for pad
+    ovf_col: jnp.ndarray  # (O,) neighbor id; V for pad
+    ovf_key: jnp.ndarray  # (O,) slot key; INT_SENTINEL for pad
+
+    @property
+    def num_rows(self) -> int:
+        return self.ell_col.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.ell_col.shape[1]
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def ell_width(num_slots: int, num_rows: int) -> int:
+    """ELL block width for ``num_slots`` directed slots over ``num_rows``
+    rows: pow2 cover of 2x the mean degree, floor 4.
+
+    2x mean absorbs mild skew into the dense block (measured on the paper
+    graphs: D = 2*mean leaves < 0.1% of slots in the overflow tail); the
+    heavy tail of genuinely skewed rows (stars, hubs) belongs in overflow,
+    where it costs O(O), not O(V * max_degree).
+    """
+    mean = num_slots / max(num_rows, 1)
+    return _pow2(max(4, int(np.ceil(2 * mean))))
+
+
+def ell_from_edges(src, dst, key, num_rows: int,
+                   width: Optional[int] = None) -> EllGraph:
+    """Build/refresh the device layout from an edge-lane spine.
+
+    ``src``/``dst``/``key``: (E,) int32 device arrays; lanes with
+    ``key == INT_SENTINEL`` are dead padding (the engine's packed spine
+    carries them) and produce no slots.  Eager jnp: one stable argsort
+    over the 2E directed slots groups them by owning row, positions
+    within a row come from the CSR row pointer (searchsorted), and slots
+    past ``width`` spill to the overflow tail.  One host sync (the
+    overflow count) sizes the pow2 tail.
+    """
+    src = jnp.asarray(src, jnp.int32)
+    dst = jnp.asarray(dst, jnp.int32)
+    key = jnp.asarray(key, jnp.int32)
+    e = src.shape[0]
+    dead = key == INT_SENTINEL
+    s = jnp.concatenate([jnp.where(dead, num_rows, src),
+                         jnp.where(dead, num_rows, dst)])
+    c = jnp.concatenate([dst, src])
+    k = jnp.concatenate([key, key])
+    p = jnp.argsort(s, stable=True).astype(jnp.int32)
+    s2, c2, k2 = s[p], c[p], k[p]
+    # CSR row pointer over the sorted slots; rp[num_rows] = live slots.
+    rp = jnp.searchsorted(s2, jnp.arange(num_rows + 1, dtype=jnp.int32)
+                          ).astype(jnp.int32)
+    n_live = int(rp[num_rows])
+    if width is None:
+        width = ell_width(n_live, num_rows)
+    pos = jnp.arange(2 * e, dtype=jnp.int32) - rp[s2]
+    live = s2 < num_rows
+    in_ell = live & (pos < width)
+    tgt = jnp.where(in_ell, s2 * width + pos, num_rows * width)  # OOB: drop
+    ell_col = jnp.full((num_rows * width,), num_rows, jnp.int32).at[tgt].set(
+        c2, mode="drop").reshape(num_rows, width)
+    ell_key = jnp.full((num_rows * width,), INT_SENTINEL, jnp.int32).at[
+        tgt].set(k2, mode="drop").reshape(num_rows, width)
+    ovf = live & (pos >= width)
+    n_ovf = int(jnp.sum(ovf))
+    o = _pow2(n_ovf) if n_ovf else 0
+    idx = jnp.nonzero(ovf, size=o, fill_value=2 * e)[0]
+    return EllGraph(
+        ell_col=ell_col, ell_key=ell_key,
+        ovf_row=s2.at[idx].get(mode="fill", fill_value=num_rows),
+        ovf_col=c2.at[idx].get(mode="fill", fill_value=num_rows),
+        ovf_key=k2.at[idx].get(mode="fill", fill_value=INT_SENTINEL))
+
+
+def ell_from_edges_host(src, dst, key, num_rows: int,
+                        width: Optional[int] = None) -> EllGraph:
+    """Numpy fast path for the INITIAL build (same layout, bit-identical
+    to :func:`ell_from_edges`): the full-size argsort is the dominant
+    cost and numpy's stable sort beats the XLA CPU one severalfold — the
+    same trade as ``rank_edges_host``.  Refreshes inside the epoch loop
+    use the device builder (the spine is already device-resident)."""
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    key = np.asarray(key, np.int32)
+    dead = key == INT_SENTINEL
+    s = np.concatenate([np.where(dead, num_rows, src),
+                        np.where(dead, num_rows, dst)])
+    c = np.concatenate([dst, src])
+    k = np.concatenate([key, key])
+    p = np.argsort(s, kind="stable")
+    s2, c2, k2 = s[p], c[p], k[p]
+    counts = np.bincount(s2, minlength=num_rows + 1)[:num_rows]
+    rp = np.zeros(num_rows + 1, np.int64)
+    np.cumsum(counts, out=rp[1:])
+    n_live = int(rp[num_rows])
+    if width is None:
+        width = ell_width(n_live, num_rows)
+    pos = np.arange(s2.shape[0]) - rp[np.minimum(s2, num_rows)]
+    live = s2 < num_rows
+    in_ell = live & (pos < width)
+    ell_col = np.full((num_rows, width), num_rows, np.int32)
+    ell_key = np.full((num_rows, width), INT_SENTINEL, np.int32)
+    ell_col[s2[in_ell], pos[in_ell]] = c2[in_ell]
+    ell_key[s2[in_ell], pos[in_ell]] = k2[in_ell]
+    ovf = live & (pos >= width)
+    n_ovf = int(ovf.sum())
+    o = _pow2(n_ovf) if n_ovf else 0
+    ovf_row = np.full((o,), num_rows, np.int32)
+    ovf_col = np.full((o,), num_rows, np.int32)
+    ovf_key = np.full((o,), INT_SENTINEL, np.int32)
+    ovf_row[:n_ovf] = s2[ovf]
+    ovf_col[:n_ovf] = c2[ovf]
+    ovf_key[:n_ovf] = k2[ovf]
+    return EllGraph(jnp.asarray(ell_col), jnp.asarray(ell_key),
+                    jnp.asarray(ovf_row), jnp.asarray(ovf_col),
+                    jnp.asarray(ovf_key))

@@ -1,0 +1,18 @@
+"""Helpers shared by the kernel wrappers.
+
+Every public kernel entry takes ``interpret: bool | None = None`` and
+resolves it here: on a TPU backend the kernel is compiled for real;
+everywhere else (CPU test containers) it runs in interpreter mode.  An
+explicit bool always wins — tests pin ``interpret=True`` to exercise the
+interpreter on any backend, TPU benchmarks pin ``False`` to fail loudly
+if the backend is not what they think it is.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -1,4 +1,18 @@
-"""Public wrapper for the fused gather-scale-segment-sum kernel."""
+"""Public wrappers for the semiring edge-slot SpMV kernels.
+
+Two entry points, one padding/blocking contract:
+
+  * ``gather_segment_sum``  — the (+, *) GNN message-passing semiring;
+  * ``gather_segment_min``  — the (min, cut-filter) Borůvka candidate
+    semiring over packed (weight, edge_id) ranks (DESIGN.md §2d).
+
+Padding aims every index lane at the *sentinel row* ``num_nodes`` (the
+kernels accumulate into a V+1-row buffer whose last row is sliced off
+here), so a padding slot can never alias a real vertex under ANY
+semiring — relying on ``w == 0`` to no-op is a sum-only accident that
+min-reduce would absorb into a wrong answer.  ``interpret`` defaults to
+backend auto-detection (compiled on TPU, interpreter elsewhere).
+"""
 from __future__ import annotations
 
 import functools
@@ -6,19 +20,66 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.gnn_spmm.kernel import gather_segment_sum_pallas
+from repro.core.types import INT_SENTINEL
+from repro.kernels.common import resolve_interpret
+from repro.kernels.gnn_spmm.kernel import (gather_segment_min_pallas,
+                                           gather_segment_sum_pallas)
+
+
+def _edge_block(block_edges: int, e: int) -> int:
+    # Never exceed the unpadded slot count: the old `max(256, e)` clamp
+    # silently blew a tiny graph up to a 256-lane block of pure padding.
+    return max(1, min(block_edges, e))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("num_nodes", "block_edges", "interpret"))
 def gather_segment_sum(src, dst, w, feat, *, num_nodes: int,
-                       block_edges: int = 2048, interpret: bool = True):
+                       block_edges: int = 2048,
+                       interpret: bool | None = None):
+    """src/dst (E,) int32, w (E,) float, feat (V, d) -> (V, d) scatter-sum."""
     e = src.shape[0]
-    block = min(block_edges, max(256, e))
+    block = _edge_block(block_edges, e)
     pad = (-e) % block
     if pad:
-        src = jnp.concatenate([src, jnp.zeros((pad,), src.dtype)])
-        dst = jnp.concatenate([dst, jnp.zeros((pad,), dst.dtype)])
-        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])  # w=0: no-op
-    return gather_segment_sum_pallas(src, dst, w, feat, num_nodes,
-                                     block_edges=block, interpret=interpret)
+        sent = jnp.full((pad,), num_nodes, src.dtype)
+        src = jnp.concatenate([src, sent])
+        dst = jnp.concatenate([dst, sent])
+        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
+    # Sentinel feat row keeps padded src reads in bounds; the matching
+    # out row absorbs padded dst writes and is sliced off.
+    feat = jnp.concatenate([feat, jnp.zeros((1, feat.shape[1]), feat.dtype)])
+    out = gather_segment_sum_pallas(src, dst, w, feat, num_nodes,
+                                    block_edges=block,
+                                    interpret=resolve_interpret(interpret))
+    return out[:num_nodes]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_nodes", "block_edges", "interpret"))
+def gather_segment_min(row, col, key, label, *, num_nodes: int,
+                       block_edges: int = 4096,
+                       interpret: bool | None = None):
+    """row/col/key (E,) int32 slots, label (V,) int32 -> (V,) int32.
+
+    Per-component minimum cut-edge key: slots whose endpoints share a
+    label are filtered (semiring zero); survivors scatter-min into
+    ``label[row]``'s accumulator.  This is one Borůvka candidate
+    selection over a CSR/ELL slot stream.
+    """
+    e = row.shape[0]
+    block = _edge_block(block_edges, e)
+    pad = (-e) % block
+    if pad:
+        sent = jnp.full((pad,), num_nodes, row.dtype)
+        row = jnp.concatenate([row, sent])
+        col = jnp.concatenate([col, sent])
+        key = jnp.concatenate([key, jnp.full((pad,), INT_SENTINEL,
+                                             key.dtype)])
+    # Self-labeled sentinel vertex: padded slots fail the cut filter and
+    # land on the sentinel accumulator row, which is sliced off.
+    label = jnp.concatenate([label, jnp.asarray([num_nodes], label.dtype)])
+    out = gather_segment_min_pallas(row, col, key, label, num_nodes,
+                                    block_edges=block,
+                                    interpret=resolve_interpret(interpret))
+    return out[:num_nodes]

@@ -1,10 +1,30 @@
-"""Pure-jnp oracle: take + segment_sum (materializes the message tensor)."""
+"""Pure-jnp oracles for both semirings of the edge-slot SpMV.
+
+The sum reference materializes the (E, d) message tensor (the kernel's
+entire win is not doing that); the min reference is the engine-shaped
+formulation — one segment_min over filtered slot keys — which is also
+exactly what ``core/spmm_mst.py`` computes over its ELL rows.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.types import INT_SENTINEL
+
 
 def gather_segment_sum_ref(src, dst, w, feat, num_nodes: int):
     msg = feat[src] * w[:, None]
     return jax.ops.segment_sum(msg, dst, num_segments=num_nodes)
+
+
+def gather_segment_min_ref(row, col, key, label, num_nodes: int):
+    """(E,) slots -> (V,) per-component min cut-edge key.
+
+    ``label`` is (V,) (no sentinel row — the oracle indexes in range);
+    ``out[c] = min{ key[i] : label[row[i]] == c != label[col[i]] }``.
+    """
+    lr = label[row]
+    lc = label[col]
+    k = jnp.where(lr != lc, key, INT_SENTINEL)
+    return jax.ops.segment_min(k, lr, num_segments=num_nodes)

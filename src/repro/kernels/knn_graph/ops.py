@@ -11,13 +11,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import resolve_interpret as _resolve_interpret
 from repro.kernels.knn_graph.kernel import knn_graph_pallas
-
-
-def _resolve_interpret(interpret) -> bool:
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return bool(interpret)
 
 
 @functools.partial(jax.jit,

@@ -10,13 +10,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import resolve_interpret as _resolve_interpret
 from repro.kernels.relabel_vertices.kernel import relabel_vertices_pallas
-
-
-def _resolve_interpret(interpret) -> bool:
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return bool(interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_vertices", "interpret"))

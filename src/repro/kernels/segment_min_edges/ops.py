@@ -12,14 +12,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import INT_SENTINEL
+from repro.kernels.common import resolve_interpret as _resolve_interpret
 from repro.kernels.segment_min_edges.kernel import (
     batched_segment_min_edges_pallas, segment_min_edges_pallas)
-
-
-def _resolve_interpret(interpret) -> bool:
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return bool(interpret)
 
 
 @functools.partial(jax.jit,

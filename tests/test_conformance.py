@@ -26,7 +26,7 @@ from repro.core.types import Graph
 from repro.graphs.generator import generate_graph
 
 ENGINE_NAMES = ("single", "unopt-seq", "opt-seq", "batched", "distributed",
-                "sharded")
+                "sharded", "spmm")
 VARIANTS = ("cas", "lock")
 
 
@@ -122,7 +122,9 @@ def test_conformance_matrix(engine, variant, family, mesh):
 # Engines with an in-engine frontier-compaction path (the sequential
 # baselines either never compact or always do, by definition — and the
 # validated SolveOptions *rejects* a cadence there, see tests/test_api.py).
-COMPACTION_ENGINES = ("single", "batched", "distributed", "sharded")
+# For spmm the cadence drives ELL layout rebuilds instead of scan packs;
+# either way it must be invisible in the results.
+COMPACTION_ENGINES = ("single", "batched", "distributed", "sharded", "spmm")
 
 
 @pytest.mark.parametrize("family", sorted(FAMILIES))
@@ -162,7 +164,7 @@ CONTRACTION_ENGINES = tuple(n for n in ENGINE_NAMES
 
 
 def test_contraction_engines_expected():
-    assert CONTRACTION_ENGINES == ("single", "batched")
+    assert CONTRACTION_ENGINES == ("single", "batched", "spmm")
 
 
 @pytest.mark.parametrize("family", sorted(FAMILIES))

@@ -1,0 +1,142 @@
+"""Deterministic coverage for the host-side CSR substrate
+(``graphs/csr.py``) and its device counterpart (``graphs/csr_device.py``,
+the spmm engine's ELL + overflow layout).
+
+The hypothesis round-trip property lives in ``tests/test_properties.py``
+(the suite's single hypothesis import point).
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.types import INT_SENTINEL
+from repro.graphs.csr import CSR, degree_histogram, edges_to_csr
+from repro.graphs.csr_device import (EllGraph, ell_from_edges,
+                                     ell_from_edges_host, ell_width)
+from repro.graphs.generator import generate_graph
+
+
+def _random_edges(n, e, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    return src, dst
+
+
+# ---------------------------------------------------------------------------
+# graphs/csr.py — host CSR.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,e,seed", [(16, 40, 0), (64, 200, 1), (7, 3, 2)])
+def test_csr_degree_sum_invariant(n, e, seed):
+    """Symmetrized CSR: every undirected edge contributes exactly two
+    directed slots, so degrees sum to 2E and the row pointer is a
+    monotone cover of the slot array."""
+    src, dst = _random_edges(n, e, seed)
+    csr = edges_to_csr(src, dst, n)
+    assert csr.num_nodes == n
+    assert csr.degrees().sum() == 2 * e
+    assert csr.col_idx.shape == csr.edge_id.shape == (2 * e,)
+    assert (np.diff(csr.row_ptr) >= 0).all()
+    assert csr.row_ptr[0] == 0 and csr.row_ptr[-1] == 2 * e
+
+
+def test_csr_roundtrip_via_edge_id():
+    """Each directed slot's (owner row, col, edge_id) reproduces the
+    original undirected edge: slot edge e appears once as (src[e], dst[e])
+    and once as (dst[e], src[e])."""
+    src, dst = _random_edges(32, 120, 3)
+    csr = edges_to_csr(src, dst, 32)
+    owner = np.repeat(np.arange(csr.num_nodes), csr.degrees())
+    got = {}
+    for r, c, e in zip(owner, csr.col_idx, csr.edge_id):
+        got.setdefault(int(e), []).append((int(r), int(c)))
+    for e in range(src.shape[0]):
+        u, v = int(src[e]), int(dst[e])
+        assert sorted(got[e]) == sorted([(u, v), (v, u)])
+
+
+def test_csr_symmetrize_false_is_out_edges_only():
+    src = np.array([0, 0, 2, 3], np.int32)
+    dst = np.array([1, 2, 3, 0], np.int32)
+    csr = edges_to_csr(src, dst, 4, symmetrize=False)
+    assert csr.degrees().tolist() == [2, 0, 1, 1]
+    assert csr.col_idx.tolist() == [1, 2, 3, 0]
+    assert csr.edge_id.tolist() == [0, 1, 2, 3]
+    # Stable sort on src: slots of one row keep edge order.
+    assert csr.degrees().sum() == src.shape[0]
+
+
+def test_degree_histogram_covers_all_vertices():
+    src, dst = _random_edges(50, 150, 4)
+    csr = edges_to_csr(src, dst, 50)
+    counts, edges = degree_histogram(csr, bins=8)
+    assert counts.sum() == 50
+    assert edges.shape == (9,)
+
+
+# ---------------------------------------------------------------------------
+# graphs/csr_device.py — ELL + overflow device layout.
+# ---------------------------------------------------------------------------
+
+def test_ell_width_floor_and_pow2():
+    assert ell_width(0, 10) == 4
+    assert ell_width(10, 10) == 4      # 2x mean = 2 -> floor 4
+    assert ell_width(60, 10) == 16     # 2x mean = 12 -> pow2 16
+    assert ell_width(600_000, 100_000) == 16
+
+
+@pytest.mark.parametrize("n,e,seed", [(16, 40, 0), (100, 450, 5)])
+def test_ell_host_and_device_builders_identical(n, e, seed):
+    src, dst = _random_edges(n, e, seed)
+    key = np.random.default_rng(seed + 1).permutation(e).astype(np.int32)
+    a = ell_from_edges_host(src, dst, key, n)
+    b = ell_from_edges(jnp.asarray(src), jnp.asarray(dst),
+                       jnp.asarray(key), n)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_ell_layout_covers_every_slot_once():
+    """Every live undirected edge contributes exactly two directed slots
+    across ELL block + overflow; dead lanes (sentinel keys) contribute
+    none; empty slots aim at the sentinel row with sentinel keys."""
+    n, e = 24, 80
+    src, dst = _random_edges(n, e, 7)
+    key = np.arange(e, dtype=np.int32)
+    key[::5] = INT_SENTINEL  # dead lanes
+    ell = ell_from_edges_host(src, dst, key, n, width=4)  # force overflow
+    slots = {}
+    ec = np.asarray(ell.ell_col)
+    ek = np.asarray(ell.ell_key)
+    for r in range(n):
+        for j in range(4):
+            if ek[r, j] != INT_SENTINEL:
+                slots.setdefault(int(ek[r, j]), []).append((r, int(ec[r, j])))
+            else:
+                assert ec[r, j] == n  # empty -> sentinel row
+    for r, c, k in zip(np.asarray(ell.ovf_row), np.asarray(ell.ovf_col),
+                       np.asarray(ell.ovf_key)):
+        if k != INT_SENTINEL:
+            slots.setdefault(int(k), []).append((int(r), int(c)))
+        else:
+            assert r == n and c == n  # pad -> sentinel row
+    for i in range(e):
+        if key[i] == INT_SENTINEL:
+            assert i not in slots  # dead lane -> no slots
+        else:
+            u, v = int(src[i]), int(dst[i])
+            assert sorted(slots[i]) == sorted([(u, v), (v, u)])
+
+
+def test_ell_overflow_tail_pow2_padded():
+    # Star graph, width 4: hub row spills most slots to overflow.
+    n = 20
+    src = np.zeros(n - 1, np.int32)
+    dst = np.arange(1, n, dtype=np.int32)
+    key = np.arange(n - 1, dtype=np.int32)
+    ell = ell_from_edges_host(src, dst, key, n, width=4)
+    o = ell.ovf_row.shape[0]
+    assert o and (o & (o - 1)) == 0  # pow2
+    n_real = int((np.asarray(ell.ovf_key) != INT_SENTINEL).sum())
+    assert n_real == (n - 1) - 4  # hub degree minus the ELL block

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.types import INT_SENTINEL
 from repro.kernels.segment_min_edges.ops import (batched_segment_min_edges,
                                                  segment_min_edges,
                                                  sharded_segment_min_edges)
@@ -23,8 +24,10 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.fm_interaction.ops import fm_interaction_kernel
 from repro.kernels.fm_interaction.ref import fm_interaction_ref
-from repro.kernels.gnn_spmm.ops import gather_segment_sum
-from repro.kernels.gnn_spmm.ref import gather_segment_sum_ref
+from repro.kernels.gnn_spmm.ops import (gather_segment_min,
+                                        gather_segment_sum)
+from repro.kernels.gnn_spmm.ref import (gather_segment_min_ref,
+                                        gather_segment_sum_ref)
 from repro.kernels.relabel_vertices.ops import relabel_vertices
 from repro.kernels.relabel_vertices.ref import relabel_vertices_ref
 
@@ -178,6 +181,68 @@ def test_gnn_spmm_sweep(v, e, d, block):
     ref = gather_segment_sum_ref(src, dst, w, feat, v)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
                                atol=1e-4)
+
+
+@pytest.mark.parametrize("v,e,block", [(32, 256, 64), (100, 999, 256),
+                                       (17, 60, 4096), (64, 2048, 512)])
+def test_gnn_spmm_min_semiring_sweep(v, e, block):
+    """The (min, cut-filter) semiring path: kernel == jnp oracle over
+    random slot streams and a random component labeling — including a
+    non-divisible E (sentinel-row padding must be inert under min)."""
+    keys = jax.random.permutation(jax.random.key(v + e), e).astype(jnp.int32)
+    row = jax.random.randint(jax.random.key(1), (e,), 0, v, jnp.int32)
+    col = jax.random.randint(jax.random.key(2), (e,), 0, v, jnp.int32)
+    label = jax.random.randint(jax.random.key(3), (v,), 0, v, jnp.int32)
+    out = gather_segment_min(row, col, keys, label, num_nodes=v,
+                             block_edges=block)
+    ref = gather_segment_min_ref(row, col, keys, label, v)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_gnn_spmm_padding_cannot_alias_real_rows():
+    """The padding contract (sentinel-row dst, not w == 0): even when
+    every real lane carries a NEGATIVE weight and vertex 0's feature is
+    huge, padded lanes must contribute exactly zero to every row.  Under
+    the old zeros-padding this held only because 0 * feat == 0 happened
+    to be the sum identity; the min path has no such accident."""
+    v, e, block = 8, 5, 4  # pad = 3 lanes
+    src = jnp.zeros((e,), jnp.int32)
+    dst = jnp.arange(e, dtype=jnp.int32)
+    w = -jnp.ones((e,))
+    feat = jnp.full((v, 3), 100.0).at[0].set(1e6)
+    out = gather_segment_sum(src, dst, w, feat, num_nodes=v,
+                             block_edges=block)
+    ref = gather_segment_sum_ref(src, dst, w, feat, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+    # Min path: INT_SENTINEL-key padding must not beat any real key, and
+    # rows with no slots must report the sentinel (no candidate).
+    keys = jnp.arange(e, dtype=jnp.int32) + 5
+    label = jnp.arange(v, dtype=jnp.int32)
+    mout = gather_segment_min(src, dst, keys, label, num_nodes=v,
+                              block_edges=block)
+    mref = gather_segment_min_ref(src, dst, keys, label, v)
+    np.testing.assert_array_equal(np.asarray(mout), np.asarray(mref))
+    assert int(mout[v - 1]) == INT_SENTINEL  # slotless row
+
+
+@pytest.mark.parametrize("e", [1, 2, 3, 7])
+def test_gnn_spmm_tiny_edge_counts(e):
+    """Regression for the `min(block_edges, max(256, e))` clamp: a block
+    larger than E made Pallas index maps step past the padded stream on
+    tiny graphs.  The block must shrink to E, not grow past it."""
+    v = 4
+    src = jnp.arange(e, dtype=jnp.int32) % v
+    dst = (jnp.arange(e, dtype=jnp.int32) + 1) % v
+    w = jnp.ones((e,))
+    feat = jnp.eye(v)
+    out = gather_segment_sum(src, dst, w, feat, num_nodes=v)
+    ref = gather_segment_sum_ref(src, dst, w, feat, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+    keys = jnp.arange(e, dtype=jnp.int32)
+    label = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    mout = gather_segment_min(src, dst, keys, label, num_nodes=v)
+    mref = gather_segment_min_ref(src, dst, keys, label, v)
+    np.testing.assert_array_equal(np.asarray(mout), np.asarray(mref))
 
 
 @pytest.mark.parametrize("b,v,e,block", [(1, 17, 96, 32), (3, 64, 512, 128),

@@ -291,3 +291,32 @@ def test_property_cut_k_yields_exactly_k(n, seed, data):
     # Canonical: labels appear in first-occurrence order 0, 1, 2, ...
     first = labels[np.sort(np.unique(labels, return_index=True)[1])]
     np.testing.assert_array_equal(first, np.arange(k))
+
+
+@given(st.integers(2, 32),
+       st.lists(st.integers(0, 2**30), min_size=1, max_size=120),
+       st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_property_csr_roundtrip(n, raw, symmetrize):
+    """edges -> CSR -> edges round-trip, for ANY multigraph (self loops,
+    parallel edges, isolated vertices): each directed slot's (owner, col,
+    edge_id) triple reproduces the original endpoint pair, degrees sum to
+    the exact directed slot count, and the row pointer tiles the slot
+    array."""
+    from repro.graphs.csr import edges_to_csr
+
+    src = np.asarray([r % n for r in raw], np.int32)
+    dst = np.asarray([(r // n) % n for r in raw], np.int32)
+    csr = edges_to_csr(src, dst, n, symmetrize=symmetrize)
+    deg = csr.degrees()
+    assert deg.sum() == (2 if symmetrize else 1) * len(raw)
+    assert csr.row_ptr[0] == 0 and csr.row_ptr[-1] == deg.sum()
+    assert (np.diff(csr.row_ptr) >= 0).all()
+    owner = np.repeat(np.arange(n), deg)
+    got = {}
+    for r, c, e in zip(owner, csr.col_idx, csr.edge_id):
+        got.setdefault(int(e), []).append((int(r), int(c)))
+    for e in range(len(raw)):
+        u, v = int(src[e]), int(dst[e])
+        want = [(u, v), (v, u)] if symmetrize else [(u, v)]
+        assert sorted(got[e]) == sorted(want)
