@@ -12,6 +12,13 @@ through :func:`merge_bench_json`:
     the stored ones, entries only in the file survive.  Replacement —
     not summation — because each writer snapshots its *own process*;
     summing across reruns of the same section would double-count.
+  * the ``_phases`` section maps row name -> ``{phase: wall_us}`` (the
+    solver's rank/pack/solve split, or the service's span-derived
+    queue/solve/scatter split).  ``scripts/check_bench_regression.py``
+    uses it to *attribute* a regressed ``_derived`` ratio to the phase
+    whose share of the total moved most — "spmm_vs_single dropped"
+    becomes "spmm_vs_single dropped and solve's share grew 12pp".
+    Rows may carry the split as an optional 4th tuple element.
 """
 from __future__ import annotations
 
@@ -44,22 +51,31 @@ def merge_metrics_sections(old: Optional[Dict[str, object]],
     return {"metrics": [by_key[k] for k in sorted(by_key)]}
 
 
-def merge_bench_json(rows: Sequence[Tuple[str, float, str]],
+def merge_bench_json(rows: Sequence[Tuple],
                      path: str = JSON_PATH,
                      metrics: Optional[Dict[str, object]] = None
                      ) -> Dict[str, object]:
-    """Fold ``(name, us, derived)`` rows (and optionally an obs snapshot)
-    into ``path``, preserving every key this section does not produce.
-    Returns the written payload."""
+    """Fold ``(name, us, derived[, phases])`` rows (and optionally an obs
+    snapshot) into ``path``, preserving every key this section does not
+    produce.  The optional 4th element is a ``{phase: wall_us}`` dict
+    stored under ``_phases[name]`` (the regression gate's attribution
+    input).  Returns the written payload."""
     payload: Dict[str, object] = {}
     if os.path.exists(path):
         with open(path) as f:
             payload = json.load(f)
     derived: Dict[str, str] = payload.setdefault("_derived", {})
-    for name, us, der in rows:
+    phases: Dict[str, Dict[str, float]] = payload.setdefault("_phases", {})
+    for row in rows:
+        name, us, der = row[0], row[1], row[2]
         payload[name] = round(us, 1)
         if der:
             derived[name] = der
+        if len(row) > 3 and row[3]:
+            phases[name] = {k: round(float(v), 1)
+                            for k, v in dict(row[3]).items()}
+    if not phases:
+        del payload["_phases"]  # don't grow files that never had one
     if metrics is not None:
         payload["_metrics"] = merge_metrics_sections(
             payload.get("_metrics"), metrics)
@@ -69,4 +85,16 @@ def merge_bench_json(rows: Sequence[Tuple[str, float, str]],
     return payload
 
 
-__all__ = ["JSON_PATH", "merge_bench_json", "merge_metrics_sections"]
+def phase_split(trace) -> Dict[str, float]:
+    """The canonical ``_phases`` dict for one :class:`SolveTrace`: every
+    collected host phase (rank/pack, the spmm engine's ell_build) plus
+    the in-dispatch remainder as ``solve``, in wall microseconds
+    (zero-valued phases dropped)."""
+    out = dict(trace.host_phases
+               or {"rank": trace.rank_us, "pack": trace.pack_us})
+    out["solve"] = trace.solve_us
+    return {k: v for k, v in out.items() if v > 0.0}
+
+
+__all__ = ["JSON_PATH", "merge_bench_json", "merge_metrics_sections",
+           "phase_split"]

@@ -14,7 +14,7 @@ from __future__ import annotations
 import argparse
 import sys
 
-from benchmarks.bench_io import JSON_PATH, merge_bench_json
+from benchmarks.bench_io import JSON_PATH, merge_bench_json, phase_split
 
 
 def solver_cache_rows(graph_name: str, repeats: int):
@@ -51,7 +51,8 @@ def solver_cache_rows(graph_name: str, repeats: int):
             f"solver_cache_{engine}_{graph_name}",
             float(np.median(times)) * 1e6,
             f"traces={st.traces};solves={st.solves};"
-            f"warm_hit_rate={st.warm_hit_rate:.3f}"))
+            f"warm_hit_rate={st.warm_hit_rate:.3f}",
+            phase_split(solver.last_trace)))
     return rows
 
 
@@ -116,10 +117,14 @@ def main() -> None:
             fn = lambda: jax.block_until_ready(solver.solve(g))
             us = mst_figures._time(fn, reps=args.repeats)
             r = solver.solve(g)
+            # 4th element: the warm solve's rank/pack/solve wall split,
+            # persisted under _phases for the regression gate's
+            # phase attribution (scripts/check_bench_regression.py).
             rows.append((f"fig23_{gname}_{variant}_{args.engine}_1proc",
                          us,
                          f"rounds={int(r.num_rounds)};"
-                         f"waves={int(r.num_waves)}"))
+                         f"waves={int(r.num_waves)}",
+                         phase_split(solver.last_trace)))
     # Planned-solver plan-cache telemetry: deterministic retrace tripwire.
     # Same graph class in smoke and full runs so the CI regression job
     # always has a committed baseline key to compare.
@@ -166,8 +171,8 @@ def main() -> None:
     rows += roofline_bench.all_rows()
 
     print("name,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+    for row in rows:  # rows are (name, us, derived[, phases])
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")
 
     if args.json:
         from repro import obs

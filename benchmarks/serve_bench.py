@@ -29,7 +29,7 @@ HITS_PER_WAVE = 4  # resubmissions from the cached pool
 MISSES_PER_WAVE = 2
 
 
-def serve_rows() -> List[Tuple[str, float, str]]:
+def serve_rows() -> List[Tuple]:
     from repro.graphs.generator import generate_graph
     from repro.serve.mst_service import MSTService
 
@@ -48,6 +48,12 @@ def serve_rows() -> List[Tuple[str, float, str]]:
         svc.flush()
     svc.stats.registry.reset()
 
+    # Span-derived phase split: every request's span tree carries the
+    # queue_wait/cache_lookup/bucket_assembly/solve/scatter children
+    # (default sampling=1.0); summing child durations by name across the
+    # measured waves gives the service-level _phases row the regression
+    # gate attributes p50/p90/p99 growth to.
+    phases: dict = {}
     for w in range(WAVES):
         for j in range(HITS_PER_WAVE):
             svc.submit(pool[(w * HITS_PER_WAVE + j) % POOL])
@@ -56,7 +62,16 @@ def serve_rows() -> List[Tuple[str, float, str]]:
             # bucket shape -> no compile inside the measured histograms.
             svc.submit(generate_graph(*SHAPES[w % len(SHAPES)],
                                       seed=1000 + w * MISSES_PER_WAVE + j))
-        svc.flush()
+        for resp in svc.flush():
+            if resp.span is None:
+                continue
+            for child in resp.span.children:
+                # Shared spans (cache_lookup, aliased bucket solves) are
+                # one measurement delivered to many requests; summing per
+                # delivery matches the per-request latency percentiles
+                # this split explains.
+                phases[child.name] = (phases.get(child.name, 0.0)
+                                      + child.duration_us)
 
     st = svc.stats
     fl = st.h_flush_latency
@@ -67,7 +82,8 @@ def serve_rows() -> List[Tuple[str, float, str]]:
         fl.p50,
         f"p50_us={fl.p50:.1f};p90_us={fl.p90:.1f};p99_us={fl.p99:.1f};"
         f"hit_rate={st.cache_hit_rate:.3f};"
-        f"batch_p50={st.h_flush_batch.p50:.1f}")]
+        f"batch_p50={st.h_flush_batch.p50:.1f}",
+        phases)]
 
 
 __all__ = ["serve_rows", "SHAPES", "WAVES"]

@@ -26,18 +26,21 @@ SMOKE_CELLS: Sequence[str] = ("Graph10K_6",)
 
 
 def spmm_rows(cells: Sequence[str] = DEFAULT_CELLS, variant: str = "cas",
-              repeats: int = 5) -> List[Tuple[str, float, str]]:
-    """(name, us, derived) rows: paired spmm-vs-single speedups.
+              repeats: int = 5) -> List[Tuple]:
+    """(name, us, derived[, phases]) rows: paired spmm-vs-single speedups.
 
     ``spmm_vs_single`` is the gated headline ratio (bigger is better,
     same-run, runner-portable); the derived column also records the
     layout shape (ELL width, overflow slots) so a width-heuristic change
     that shifts the layout shows up next to the ratio it moved.
     """
+    import time
+
     from repro.core.engine import rank_edges_host
     from repro.core.mst import minimum_spanning_forest
     from repro.core.spmm_mst import spmm_msf
     from repro.graphs.csr_device import ell_from_edges_host
+    from repro.obs import collect_phases
 
     rows = []
     for graph_name in cells:
@@ -54,11 +57,21 @@ def spmm_rows(cells: Sequence[str] = DEFAULT_CELLS, variant: str = "cas",
         base_us, spmm_us, speedup = paired_time(base, spmm, repeats)
         rank, _ = rank_edges_host(g.weight)
         ell = ell_from_edges_host(g.src, g.dst, rank, g.num_nodes)
+        # One extra warm solve under a phase collector: the raw engine has
+        # no SolveTrace, so the _phases split (rank + ell_build host work
+        # vs the in-dispatch remainder) comes straight from the hooks.
+        with collect_phases() as acc:
+            t0 = time.perf_counter()
+            r = spmm()
+            total_us = (time.perf_counter() - t0) * 1e6
+        phases = {k: v * 1e6 for k, v in acc.items()}
+        phases["solve"] = max(0.0, total_us - sum(phases.values()))
         r = spmm_msf(g, variant=variant)
         rows.append((f"spmm_single_{graph_name}_{variant}", base_us, ""))
         rows.append((f"spmm_{graph_name}_{variant}", spmm_us,
                      f"spmm_vs_single={speedup:.3f};"
                      f"rounds={int(r.num_rounds)};"
                      f"ell_width={ell.width};"
-                     f"ovf_slots={ell.ovf_row.shape[0]}"))
+                     f"ovf_slots={ell.ovf_row.shape[0]}",
+                     phases))
     return rows

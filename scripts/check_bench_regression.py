@@ -2,17 +2,33 @@
 
 Usage:
     python scripts/check_bench_regression.py BASELINE.json NEW.json \
-        [--threshold 0.2] [--override 'ROW_REGEX:METRIC=0.4' ...]
+        [--threshold 0.2] [--override 'ROW_REGEX:METRIC=0.4' ...] [--list]
 
 Compares every ``metric=value`` pair inside the ``_derived`` column of the
 two BENCH_mst.json files, restricted to SPEEDUP-style metrics (bigger is
 better; ratios survive the CI runners' absolute-speed differences, raw
-microseconds do not).  Only keys present in BOTH files are compared, so a
-``--smoke`` run checks exactly its subset against the committed full run.
-Exits non-zero when any metric drops more than its tolerance — the global
+microseconds do not) plus the LATENCY percentile summaries (smaller is
+better).  Only keys present in BOTH files are compared, so a ``--smoke``
+run checks exactly its subset against the committed full run.  Exits
+non-zero when any metric moves more than its tolerance — the global
 ``threshold`` (default 20%), unless a ``--override`` pattern matches the
 ``row:metric`` key: small-shape smoke cells are noisier than the rest, and
 per-key overrides keep them honest without loosening every other key.
+Every comparison line names the tolerance it applied *and where it came
+from* (global vs the matching override spec), so a CI log is
+self-explanatory without opening the workflow file.
+
+``--list`` dumps the compared ``row:metric`` pairs (with their resolved
+tolerances) and exits — the way to answer "is this key gated?" without
+running a comparison.
+
+**Phase attribution** (DESIGN.md §4a): when a row regresses and both
+files carry a ``_phases`` entry for it (``{phase: wall_us}``, written by
+``benchmarks/bench_io.merge_bench_json``), the failure output also names
+the phase whose *share of the row's total* moved most — "spmm_vs_single
+dropped 24%" becomes "... phase attribution: 'solve' share grew
++12.3pp (41.0% -> 53.3%)".  Shares, not absolute microseconds, so the
+attribution is runner-portable like the ratios it explains.
 """
 from __future__ import annotations
 
@@ -20,6 +36,7 @@ import argparse
 import json
 import re
 import sys
+from typing import Dict, List, Optional, Tuple
 
 # Metrics where larger is better and the value is hardware-portable: all
 # are SAME-RUN ratios (A/B on one machine).  graphs_per_sec / points_per_sec
@@ -66,29 +83,73 @@ def parse_derived(derived: dict) -> dict:
 
 
 def parse_overrides(specs) -> list:
-    """[(compiled_regex, threshold)] from 'ROW_REGEX:METRIC=VALUE' specs.
+    """[(compiled_regex, threshold, spec_string)] from
+    'ROW_REGEX:METRIC=VALUE' specs.
 
     The regex fullmatches the combined ``row:metric`` key; first matching
-    override wins, otherwise the global threshold applies.
+    override wins, otherwise the global threshold applies.  The original
+    spec string rides along so failure lines can say *which* override
+    set the tolerance.
     """
     out = []
     for spec in specs or ():
         pattern, _, value = spec.rpartition("=")
         if not pattern:
             raise SystemExit(f"bad --override {spec!r}: want REGEX=VALUE")
-        out.append((re.compile(pattern), float(value)))
+        out.append((re.compile(pattern), float(value), spec))
     return out
 
 
-def tolerance_for(key, overrides, default: float) -> float:
+def tolerance_for(key, overrides, default: float) -> Tuple[float, str]:
+    """Resolve (tolerance, provenance) for one ``(row, metric)`` key."""
     name = f"{key[0]}:{key[1]}"
-    for rx, thr in overrides:
+    for rx, thr, spec in overrides:
         if rx.fullmatch(name):
-            return thr
-    return default
+            return thr, f"override {spec!r}"
+    return default, "global"
 
 
-def main() -> int:
+def attribute_phase(row: str, base_phases: Dict[str, Dict[str, float]],
+                    new_phases: Dict[str, Dict[str, float]]
+                    ) -> Optional[str]:
+    """Name the phase of ``row`` whose share of the total moved most.
+
+    Returns a one-line human explanation, or None when either file lacks
+    phase data for the row (older baselines — attribution is additive,
+    never required).  Shares are each phase's fraction of the row's
+    summed phase wall time; the attributed phase maximizes the absolute
+    share delta, signed in the report ("grew" = this phase got
+    relatively more expensive).
+    """
+    b, n = base_phases.get(row), new_phases.get(row)
+    if not b or not n:
+        return None
+    b_tot = sum(v for v in b.values() if v > 0)
+    n_tot = sum(v for v in n.values() if v > 0)
+    if b_tot <= 0 or n_tot <= 0:
+        return None
+    deltas = []
+    for ph in sorted(set(b) | set(n)):
+        b_share = b.get(ph, 0.0) / b_tot
+        n_share = n.get(ph, 0.0) / n_tot
+        deltas.append((abs(n_share - b_share), ph, b_share, n_share))
+    moved, ph, b_share, n_share = max(deltas)
+    if moved == 0.0:
+        return None
+    verb = "grew" if n_share >= b_share else "shrank"
+    return (f"phase attribution: {ph!r} share {verb} "
+            f"{(n_share - b_share) * 100:+.1f}pp "
+            f"({b_share * 100:.1f}% -> {n_share * 100:.1f}%)")
+
+
+def load_bench(path: str) -> Tuple[dict, Dict[str, Dict[str, float]]]:
+    with open(path) as f:
+        payload = json.load(f)
+    return (parse_derived(payload.get("_derived", {})),
+            payload.get("_phases", {}) or {})
+
+
+def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline")
     ap.add_argument("new")
@@ -98,16 +159,30 @@ def main() -> int:
                     metavar="ROW_REGEX:METRIC=VALUE",
                     help="per-key tolerance: regex fullmatched against "
                          "'row:metric'; repeatable, first match wins")
-    args = ap.parse_args()
+    ap.add_argument("--list", action="store_true",
+                    help="dump every compared row:metric pair with its "
+                         "resolved tolerance, then exit 0 (no comparison)")
+    args = ap.parse_args(argv)
     overrides = parse_overrides(args.override)
 
-    with open(args.baseline) as f:
-        base = parse_derived(json.load(f).get("_derived", {}))
-    with open(args.new) as f:
-        new = parse_derived(json.load(f).get("_derived", {}))
+    base, base_phases = load_bench(args.baseline)
+    new, new_phases = load_bench(args.new)
 
     shared = [k for k in sorted(base) if k in new
               and k[1] in SPEEDUP_METRICS + LATENCY_METRICS]
+
+    if args.list:
+        for key in shared:
+            tol, source = tolerance_for(key, overrides, args.threshold)
+            direction = ("smaller-is-better" if key[1] in LATENCY_METRICS
+                         else "bigger-is-better")
+            phased = "yes" if (key[0] in base_phases
+                               and key[0] in new_phases) else "no"
+            print(f"{key[0]}:{key[1]}  tol={tol * 100:.0f}% ({source})  "
+                  f"{direction}  phases={phased}")
+        print(f"\n{len(shared)} compared pair(s)")
+        return 0
+
     if not shared:
         print("check_bench_regression: no shared speedup metrics — "
               "nothing to compare", file=sys.stderr)
@@ -116,7 +191,7 @@ def main() -> int:
     failures = []
     for key in shared:
         b, n = base[key], new[key]
-        tol = tolerance_for(key, overrides, args.threshold)
+        tol, source = tolerance_for(key, overrides, args.threshold)
         if key[1] in LATENCY_METRICS:
             # Smaller is better: regression = fractional GROWTH over the
             # committed percentile.
@@ -125,14 +200,22 @@ def main() -> int:
             drop = (b - n) / b if b > 0 else 0.0
         status = "REGRESSED" if drop > tol else "ok"
         print(f"{key[0]}:{key[1]}  baseline={b:.3f}  new={n:.3f}  "
-              f"drop={drop * 100:+.1f}%  tol={tol * 100:.0f}%  {status}")
+              f"drop={drop * 100:+.1f}%  tol={tol * 100:.0f}% ({source})  "
+              f"{status}")
         if drop > tol:
-            failures.append(key)
+            attribution = attribute_phase(key[0], base_phases, new_phases)
+            if attribution:
+                print(f"    {attribution}")
+            failures.append((key, tol, source, attribution))
 
     if failures:
-        print(f"\n{len(failures)} metric(s) regressed beyond tolerance: "
-              + ", ".join(f"{r}:{m}" for r, m in failures),
+        print(f"\n{len(failures)} metric(s) regressed beyond tolerance:",
               file=sys.stderr)
+        for (row, metric), tol, source, attribution in failures:
+            line = f"  {row}:{metric}  tol={tol * 100:.0f}% ({source})"
+            if attribution:
+                line += f"  [{attribution}]"
+            print(line, file=sys.stderr)
         return 1
     print(f"\nall {len(shared)} shared metrics within tolerance")
     return 0

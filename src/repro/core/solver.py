@@ -38,6 +38,7 @@ from repro.core.registry import ENGINES
 from repro.core.types import Graph, GraphLike, MSTResult, as_request, \
     ensure_sized
 from repro.obs.metrics import MetricsRegistry
+from repro.obs.span import current_span
 from repro.obs.trace import SolveTrace, annotate, collect_phases
 
 
@@ -195,8 +196,9 @@ class MSTSolver:
             result = plan(arg)
             jax.block_until_ready(result)
             total_us = (time.perf_counter() - t0) * 1e6
-        rank_us = phases.get("rank", 0.0) * 1e6
-        pack_us = phases.get("pack", 0.0) * 1e6
+        host_phases = {k: v * 1e6 for k, v in phases.items()}
+        rank_us = host_phases.get("rank", 0.0)
+        pack_us = host_phases.get("pack", 0.0)
         rounds, waves, mst_edges = reader(result)
         trace = SolveTrace(
             engine=self.options.engine, variant=self.options.variant,
@@ -204,11 +206,23 @@ class MSTSolver:
             contraction=self.options.contraction, shape=shape,
             batch_size=batch_size, plan_key=plan_key, plan_hit=plan_hit,
             num_rounds=rounds, num_waves=waves, mst_edges=mst_edges,
-            rank_us=rank_us, pack_us=pack_us,
-            solve_us=max(0.0, total_us - rank_us - pack_us),
+            rank_us=rank_us, pack_us=pack_us, host_phases=host_phases,
+            solve_us=max(0.0, total_us - sum(host_phases.values())),
             total_us=total_us)
         self.traces.append(trace)
         self.last_trace = trace
+        # Request-span bridge (DESIGN.md §4a): when the serving layer has
+        # a span active on this thread, attach the dispatch as a child so
+        # the request's tree carries engine-level detail.  One
+        # thread-local read when inactive.
+        parent = current_span()
+        if parent is not None:
+            parent.child(f"engine:{self.options.engine}", t0 * 1e6,
+                         t0 * 1e6 + total_us,
+                         variant=self.options.variant, plan_hit=plan_hit,
+                         rounds=rounds, waves=waves, batch_size=batch_size,
+                         rank_us=rank_us, pack_us=pack_us,
+                         solve_us=trace.solve_us)
         self._m_solves.inc(batch_size)
         self._m_batches.inc()
         self._m_rounds.inc(rounds)

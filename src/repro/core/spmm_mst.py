@@ -46,7 +46,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.obs.trace import annotate
+from repro.obs.trace import annotate, phase as _obs_phase
 from repro.core.types import Graph, MSTResult, INT_SENTINEL, ensure_sized
 from repro.core.engine import (
     BoruvkaState,
@@ -258,7 +258,7 @@ def _spmm_host_loop(graph: Graph, rank, order, *, variant: str,
 
     src, dst, rk = graph.src, graph.dst, rank
     order_tbl = order
-    with annotate("ell_build"):
+    with annotate("ell_build"), _obs_phase("ell_build"):
         ell = ell_from_edges_host(src, dst, rk, num_nodes)
     parent = jnp.arange(num_nodes, dtype=jnp.int32)
     committed = jnp.full((num_nodes,), e_full, jnp.int32) if cas else None
@@ -297,7 +297,7 @@ def _spmm_host_loop(graph: Graph, rank, order, *, variant: str,
             src, dst, rk, order_tbl = _spmm_slice(
                 nsrc, ndst, rk, order_tbl, perm, live, new_e=new_e)
             rows = num_nodes
-        with annotate("ell_refresh"):
+        with annotate("ell_refresh"), _obs_phase("ell_build"):
             ell = ell_from_edges(src, dst, rk, rows)
 
     if contraction:
@@ -345,7 +345,7 @@ def spmm_msf(graph: Graph, *, num_nodes: Optional[int] = None,
                                max_lock_waves=max_lock_waves,
                                compaction=compaction,
                                contraction=contraction)
-    with annotate("ell_build"):
+    with annotate("ell_build"), _obs_phase("ell_build"):
         ell = ell_from_edges_host(graph.src, graph.dst, rank,
                                   graph.num_nodes)
     return _spmm_msf_jit(graph, ell, order, variant=variant,

@@ -15,12 +15,26 @@ Solvers (``repro.core.MSTSolver``) and services
 :class:`SolveTrace` per engine dispatch; ``benchmarks/run.py --json``
 stores :func:`snapshot` under ``BENCH_mst.json``'s ``_metrics`` key and
 ``scripts/dump_metrics.py`` renders/validates the Prometheus exposition.
+
+The serving/export layer on top (DESIGN.md §4a):
+
+    svc = MSTService(export_port=9464)         # curl :9464/metrics
+    resp = svc.solve(graph)
+    resp.span                                  # request timing tree
+    svc.flight.slowest()                       # postmortem ring
+    obs.chrome_trace_doc(spans=[resp.span])    # Perfetto-loadable JSON
 """
+from repro.obs.chrome_trace import (check_chrome_trace, chrome_trace_doc,
+                                    solve_trace_events, span_tree_events)
+from repro.obs.exporter import MetricsExporter
+from repro.obs.flight import FlightRecorder
 from repro.obs.metrics import (BATCH_BUCKETS, COUNT_BUCKETS, Counter,
                                Gauge, Histogram, LATENCY_BUCKETS_US,
                                MetricsRegistry, all_registries,
                                check_exposition, merge_metric_lists,
                                render_prometheus, snapshot)
+from repro.obs.span import (Span, SpanSampler, current_span, now_us,
+                            span_allocations, use_span)
 from repro.obs.trace import (SolveTrace, annotate, annotations_enabled,
                              collect_phases, enable_annotations, phase)
 
@@ -31,4 +45,9 @@ __all__ = [
     "render_prometheus", "check_exposition",
     "SolveTrace", "phase", "collect_phases", "annotate",
     "enable_annotations", "annotations_enabled",
+    "Span", "SpanSampler", "current_span", "use_span", "now_us",
+    "span_allocations",
+    "FlightRecorder", "MetricsExporter",
+    "span_tree_events", "solve_trace_events", "chrome_trace_doc",
+    "check_chrome_trace",
 ]

@@ -1,0 +1,221 @@
+"""Chrome trace-event export: span trees + SolveTrace round detail.
+
+Renders the obs layer's two timing artifacts as the Trace Event Format
+JSON that ``chrome://tracing`` and Perfetto (https://ui.perfetto.dev)
+load directly:
+
+  * a :class:`~repro.obs.span.Span` tree becomes nested ``"ph": "X"``
+    (complete) events on one track — children sit under their parent on
+    the timeline because their intervals nest;
+  * a :class:`~repro.obs.trace.SolveTrace` becomes its rank/pack/solve
+    phase slices plus, when the per-round detail arrays are present
+    (``MSTSolver.trace_solve``), ``"ph": "C"`` counter series
+    (``live_edges``, ``mst_edges``, ``hook_waves``, ``scan_bucket``)
+    laid out over the solve slice — round timestamps are synthetic
+    (rounds spread evenly over ``solve_us``; the engines don't timestamp
+    individual rounds), which is stated in the counter track's metadata.
+
+Everything takes either live objects or their ``to_dict()`` forms, so
+``scripts/dump_trace.py`` can re-render a flight-recorder dump from a
+file without importing the serving layer.  :func:`check_chrome_trace`
+validates the schema (the CI trace-schema step runs it via
+``dump_trace.py --check``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Union
+
+from repro.obs.span import Span
+
+SpanLike = Union[Span, Dict[str, object]]
+
+# The subset of trace-event phases this exporter emits / the checker
+# accepts: complete slices, counters, and track metadata.
+_KNOWN_PHASES = ("X", "C", "M")
+
+
+def _as_span_dict(span: SpanLike) -> Dict[str, object]:
+    if isinstance(span, Span):
+        return span.to_dict()
+    if not isinstance(span, dict):
+        raise TypeError(f"expected Span or span dict, got {type(span)}")
+    return span
+
+
+def _span_events(d: Dict[str, object], pid: int, tid: int,
+                 t_base_us: float, out: List[Dict[str, object]]) -> None:
+    t0 = float(d["t0_us"]) - t_base_us
+    dur = float(d["duration_us"])
+    args = {str(k): v for k, v in dict(d.get("attrs", {})).items()}
+    out.append({"name": str(d["name"]), "ph": "X", "ts": t0, "dur": dur,
+                "pid": pid, "tid": tid, "cat": "span", "args": args})
+    for c in d.get("children", []):
+        _span_events(c, pid, tid, t_base_us, out)
+
+
+def span_tree_events(span: SpanLike, pid: int = 1, tid: int = 1,
+                     t_base_us: Optional[float] = None
+                     ) -> List[Dict[str, object]]:
+    """Flatten one span tree into complete ("X") events.
+
+    ``t_base_us`` rebases timestamps (default: the root's start, so the
+    track begins at 0 — perf_counter absolutes are meaningless across
+    processes).
+    """
+    d = _as_span_dict(span)
+    base = float(d["t0_us"]) if t_base_us is None else t_base_us
+    out: List[Dict[str, object]] = []
+    _span_events(d, pid, tid, base, out)
+    return out
+
+
+def solve_trace_events(trace, pid: int = 1, tid: int = 1,
+                       t0_us: float = 0.0) -> List[Dict[str, object]]:
+    """Render one SolveTrace (object or ``to_dict()``) as trace events.
+
+    Phase slices are laid out sequentially from ``t0_us`` (rank ->
+    pack -> solve: the host phases do run before/around the blocked
+    dispatch, and the Chrome viewer only needs non-overlapping slices);
+    per-round counter samples spread evenly across the solve slice.
+    """
+    d = (dataclasses.asdict(trace) if dataclasses.is_dataclass(trace)
+         else dict(trace))
+    name = f"{d['engine']}:{d['variant']}"
+    events: List[Dict[str, object]] = [{
+        "name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+        "args": {"name": f"solve {name} shape={tuple(d['shape'])}"}}]
+    t = t0_us
+    for phase in ("rank", "pack", "solve"):
+        dur = float(d.get(f"{phase}_us") or 0.0)
+        if dur <= 0.0:
+            continue
+        events.append({
+            "name": phase, "ph": "X", "ts": t, "dur": dur,
+            "pid": pid, "tid": tid, "cat": "solve_phase",
+            "args": {"engine": d["engine"], "variant": d["variant"],
+                     "plan_hit": bool(d["plan_hit"]),
+                     "rounds": int(d["num_rounds"]),
+                     "waves": int(d["num_waves"])}})
+        if phase == "solve":
+            events.extend(_round_counters(d, pid, tid, t, dur))
+        t += dur
+    return events
+
+
+def _round_counters(d: Dict[str, object], pid: int, tid: int,
+                    t0: float, dur: float) -> List[Dict[str, object]]:
+    series = {"live_edges": d.get("live_per_round"),
+              "mst_edges": d.get("commits_per_round"),
+              "hook_waves": d.get("waves_per_round"),
+              "scan_bucket": d.get("buckets_per_round")}
+    series = {k: v for k, v in series.items() if v}
+    if not series:
+        return []
+    rounds = max(len(v) for v in series.values())
+    step = dur / max(1, rounds)
+    out: List[Dict[str, object]] = []
+    for name, values in series.items():
+        for i, v in enumerate(values):
+            out.append({"name": name, "ph": "C", "ts": t0 + i * step,
+                        "pid": pid, "tid": tid, "cat": "round_detail",
+                        "args": {name: int(v)}})
+    return out
+
+
+def chrome_trace_doc(spans: Sequence[SpanLike] = (),
+                     solve_traces: Sequence = (),
+                     label: str = "repro-mst"
+                     ) -> Dict[str, object]:
+    """Assemble a loadable trace document.
+
+    Each span tree gets its own tid on pid 1 (requests side by side);
+    each SolveTrace gets its own tid on pid 2.  ``otherData`` records
+    the layout conventions for human readers of the raw JSON.
+    """
+    events: List[Dict[str, object]] = []
+    for tid, span in enumerate(spans, start=1):
+        d = _as_span_dict(span)
+        rid = dict(d.get("attrs", {})).get("request_id")
+        track = (f"request {rid}" if rid is not None
+                 else f"request[{tid - 1}]")
+        events.append({"name": "thread_name", "ph": "M", "pid": 1,
+                       "tid": tid, "args": {"name": track}})
+        events.extend(span_tree_events(d, pid=1, tid=tid))
+    for tid, trace in enumerate(solve_traces, start=1):
+        events.extend(solve_trace_events(trace, pid=2, tid=tid))
+    return {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "source": label,
+            "pid1": "request spans (one tid per request)",
+            "pid2": "solve traces (round counters use synthetic "
+                    "timestamps: rounds spread evenly over solve_us)",
+        },
+    }
+
+
+def check_chrome_trace(doc: Dict[str, object]) -> List[str]:
+    """Validate a trace document's schema; returns error strings
+    (empty = valid).
+
+    Checked: top-level shape, per-event required keys per phase type,
+    numeric non-negative ts/dur, and that "X" slices on one track nest
+    or are disjoint (a child escaping its parent breaks the viewer's
+    stacking and indicates a span-construction bug upstream).
+    """
+    errors: List[str] = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["document is not a dict with a 'traceEvents' key"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["'traceEvents' is not a list"]
+    slices: Dict[tuple, List[tuple]] = {}
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"event[{i}]: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in _KNOWN_PHASES:
+            errors.append(f"event[{i}]: unknown phase {ph!r}")
+            continue
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            errors.append(f"event[{i}]: missing/empty name")
+        for key in ("pid", "tid"):
+            if not isinstance(ev.get(key), int):
+                errors.append(f"event[{i}]: missing integer {key!r}")
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            errors.append(f"event[{i}]: bad ts {ts!r}")
+            continue
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errors.append(f"event[{i}]: bad dur {dur!r}")
+                continue
+            slices.setdefault((ev.get("pid"), ev.get("tid")), []).append(
+                (float(ts), float(ts) + float(dur), i))
+        elif ph == "C":
+            if not isinstance(ev.get("args"), dict) or not ev["args"]:
+                errors.append(f"event[{i}]: counter without args")
+    for (pid, tid), ivals in slices.items():
+        # Parents before children at equal start times: sort by
+        # (start asc, end desc) so containment reads as nesting.
+        ivals.sort(key=lambda iv: (iv[0], -iv[1]))
+        stack: List[tuple] = []
+        for t0, t1, i in ivals:
+            while stack and t0 >= stack[-1][1] - 1e-6:
+                stack.pop()
+            if stack and t1 > stack[-1][1] + 1e-6:
+                errors.append(
+                    f"event[{i}]: slice [{t0:.1f}, {t1:.1f}] escapes "
+                    f"enclosing slice on track pid={pid} tid={tid}")
+            stack.append((t0, t1))
+    return errors
+
+
+__all__ = ["span_tree_events", "solve_trace_events", "chrome_trace_doc",
+           "check_chrome_trace"]

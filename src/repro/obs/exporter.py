@@ -1,0 +1,151 @@
+"""Live metrics exporter: a stdlib HTTP thread serving /metrics & health.
+
+Serving-grade observability needs a *pull* surface — a scraper (or a
+human with ``curl``) asking a running service how it is doing, not a
+JSON file written after the fact.  :class:`MetricsExporter` is that
+surface, deliberately stdlib-only (``http.server`` on a daemon thread;
+the container bakes in no Prometheus client and must not need one):
+
+  * ``GET /metrics``  — Prometheus text exposition (format 0.0.4) of a
+    caller-supplied snapshot function (default: the process-wide
+    ``obs.snapshot()`` merge).  Rendered by the existing
+    ``render_prometheus`` — one renderer for files and live scrapes.
+  * ``GET /healthz``  — liveness: 200 as long as the thread serves.
+  * ``GET /readyz``   — readiness: 200 when the caller's ``ready_fn``
+    says so (the service wires "solver plan cache warmed"), else 503.
+    No ``ready_fn`` means always ready.
+  * ``GET /flight``   — JSON dump of the attached
+    :class:`~repro.obs.flight.FlightRecorder` (404 when none).
+
+``port=0`` binds an ephemeral port (tests, parallel CI jobs); the bound
+port is ``exporter.port``.  ``ThreadingHTTPServer`` handles each request
+on its own thread, so a slow scraper cannot wedge health checks.  The
+handler only *reads* (snapshots take the obs locks briefly); nothing an
+HTTP client does can mutate service state.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Callable, Dict, Optional
+
+from repro.obs.flight import FlightRecorder
+from repro.obs.metrics import render_prometheus, snapshot
+
+PROMETHEUS_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+class MetricsExporter:
+    """Background ``/metrics`` + health endpoint server.
+
+    Args:
+      snapshot_fn: returns the metrics JSON document to render (default
+        the process-wide ``obs.snapshot()``; a service passes its own
+        registry's ``to_json`` for instance-exact scrapes).
+      ready_fn: readiness predicate for ``/readyz``; exceptions read as
+        not-ready (a readiness probe must never take the server down).
+      flight: optional FlightRecorder served at ``/flight``.
+      port: TCP port; 0 picks an ephemeral one (see ``.port``).
+      host: bind address; loopback by default — exporting beyond the
+        host is a deployment decision, not a library default.
+    """
+
+    def __init__(self,
+                 snapshot_fn: Optional[Callable[[], Dict[str, object]]]
+                 = None,
+                 ready_fn: Optional[Callable[[], bool]] = None,
+                 flight: Optional[FlightRecorder] = None,
+                 port: int = 0, host: str = "127.0.0.1"):
+        self.snapshot_fn = snapshot_fn if snapshot_fn is not None \
+            else snapshot
+        self.ready_fn = ready_fn
+        self.flight = flight
+        exporter = self
+
+        class Handler(BaseHTTPRequestHandler):
+            # One handler class per exporter instance: the closure is the
+            # only state channel http.server offers without globals.
+
+            def _send(self, code: int, body: bytes,
+                      content_type: str = "text/plain; charset=utf-8"
+                      ) -> None:
+                self.send_response(code)
+                self.send_header("Content-Type", content_type)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def do_GET(self) -> None:  # noqa: N802 (http.server API)
+                path = self.path.split("?", 1)[0]
+                try:
+                    if path == "/metrics":
+                        text = render_prometheus(exporter.snapshot_fn())
+                        self._send(200, text.encode(),
+                                   PROMETHEUS_CONTENT_TYPE)
+                    elif path == "/healthz":
+                        self._send(200, b"ok\n")
+                    elif path == "/readyz":
+                        ready = True
+                        if exporter.ready_fn is not None:
+                            try:
+                                ready = bool(exporter.ready_fn())
+                            except Exception:
+                                ready = False
+                        self._send(200 if ready else 503,
+                                   b"ready\n" if ready else b"not ready\n")
+                    elif path == "/flight":
+                        if exporter.flight is None:
+                            self._send(404, b"no flight recorder\n")
+                        else:
+                            body = json.dumps(
+                                exporter.flight.snapshot()).encode()
+                            self._send(200, body, "application/json")
+                    else:
+                        self._send(404, b"not found\n")
+                except BrokenPipeError:
+                    pass  # scraper went away mid-response
+
+            def log_message(self, fmt: str, *args) -> None:
+                pass  # scrapes every few seconds would spam stderr
+
+        self._server = ThreadingHTTPServer((host, port), Handler)
+        self._server.daemon_threads = True
+        self.host = host
+        self.port = int(self._server.server_address[1])
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def start(self) -> "MetricsExporter":
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._server.serve_forever,
+                name=f"metrics-exporter:{self.port}", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Shut the server down and join the thread (idempotent)."""
+        if self._thread is not None:
+            self._server.shutdown()
+            self._thread.join(timeout=5.0)
+            self._thread = None
+        self._server.server_close()
+
+    def __enter__(self) -> "MetricsExporter":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+__all__ = ["MetricsExporter", "PROMETHEUS_CONTENT_TYPE"]

@@ -1,0 +1,139 @@
+"""Flight recorder: bounded in-memory history of completed request spans.
+
+Postmortem tooling for the serving layer (DESIGN.md §4a): when a request
+was slow five minutes ago, the aggregate histograms say *that* it was
+slow, the flight recorder says *where the time went* — without keeping
+every span tree ever produced.
+
+Two bounded holdings, one lock:
+
+  * ``recent`` — a ring (``deque(maxlen=capacity)``) of the last N
+    completed span trees, newest last.  Constant memory, any request
+    mix.
+  * ``slowest`` — the K slowest requests ever recorded (min-heap on root
+    duration), so a latency spike survives being pushed out of the ring
+    by later traffic.
+
+``slow_threshold_us`` additionally marks trees at-or-over the threshold:
+their count is tracked (``slow_count``) and :meth:`snapshot` reports the
+threshold, which is how a dashboard distinguishes "no slow requests"
+from "recorder off".  Everything is lock-protected — the exporter thread
+snapshots while the serving thread records.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+from collections import deque
+from typing import Dict, List, Optional
+
+from repro.obs.span import Span
+
+
+class FlightRecorder:
+    """Bounded ring + slowest-K retention of completed :class:`Span`
+    trees.
+
+    Args:
+      capacity: ring size for the most recent trees (0 disables the
+        ring; the slowest-K side still records).
+      keep_slowest: how many all-time-slowest trees to retain.
+      slow_threshold_us: requests at/over this root duration count as
+        "slow" in the snapshot; ``None`` disables the classification.
+    """
+
+    def __init__(self, capacity: int = 64, keep_slowest: int = 8,
+                 slow_threshold_us: Optional[float] = None):
+        if capacity < 0 or keep_slowest < 0:
+            raise ValueError("capacity/keep_slowest must be >= 0")
+        self.capacity = int(capacity)
+        self.keep_slowest = int(keep_slowest)
+        self.slow_threshold_us = slow_threshold_us
+        self._ring: "deque[Span]" = deque(maxlen=max(1, self.capacity))
+        # Min-heap of (duration, seq, span): the smallest of the kept
+        # slowest is at the root, so one pushpop per record keeps the K
+        # largest.  ``seq`` breaks duration ties without comparing Spans.
+        self._slow_heap: List[tuple] = []
+        self._seq = itertools.count()
+        self._recorded = 0
+        self._slow_count = 0
+        self._lock = threading.Lock()
+
+    def record(self, span: Span) -> None:
+        """Add one completed span tree (thread-safe)."""
+        dur = span.duration_us
+        with self._lock:
+            self._recorded += 1
+            if (self.slow_threshold_us is not None
+                    and dur >= self.slow_threshold_us):
+                self._slow_count += 1
+            if self.capacity:
+                self._ring.append(span)
+            if self.keep_slowest:
+                entry = (dur, next(self._seq), span)
+                if len(self._slow_heap) < self.keep_slowest:
+                    heapq.heappush(self._slow_heap, entry)
+                elif entry > self._slow_heap[0]:
+                    heapq.heapreplace(self._slow_heap, entry)
+
+    # -- reads ---------------------------------------------------------------
+
+    @property
+    def recorded(self) -> int:
+        with self._lock:
+            return self._recorded
+
+    @property
+    def slow_count(self) -> int:
+        with self._lock:
+            return self._slow_count
+
+    def recent(self) -> List[Span]:
+        """The ring's contents, oldest first (copy)."""
+        with self._lock:
+            return list(self._ring) if self.capacity else []
+
+    def slowest(self) -> List[Span]:
+        """The kept slowest trees, slowest first (copy)."""
+        with self._lock:
+            entries = sorted(self._slow_heap, reverse=True)
+        return [s for _, _, s in entries]
+
+    def snapshot(self) -> Dict[str, object]:
+        """JSON-ready dump: counts + both holdings as span dicts.
+
+        This is what ``/flight`` on the exporter serves and what
+        ``scripts/dump_trace.py`` converts to a Chrome trace.
+        """
+        with self._lock:
+            recent = list(self._ring) if self.capacity else []
+            slow_entries = sorted(self._slow_heap, reverse=True)
+            recorded, slow_count = self._recorded, self._slow_count
+        return {
+            "recorded": recorded,
+            "slow_count": slow_count,
+            "slow_threshold_us": self.slow_threshold_us,
+            "recent": [s.to_dict() for s in recent],
+            "slowest": [s.to_dict() for _, _, s in slow_entries],
+        }
+
+    def clear(self) -> None:
+        with self._lock:
+            self._ring.clear()
+            self._slow_heap.clear()
+            self._recorded = 0
+            self._slow_count = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._ring)
+
+    def __repr__(self) -> str:
+        with self._lock:
+            return (f"FlightRecorder(recent={len(self._ring)}/"
+                    f"{self.capacity}, slowest={len(self._slow_heap)}/"
+                    f"{self.keep_slowest}, recorded={self._recorded})")
+
+
+__all__ = ["FlightRecorder"]

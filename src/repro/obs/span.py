@@ -1,0 +1,192 @@
+"""Request spans: per-request timing trees for the serving layer.
+
+The metrics registry (``obs/metrics.py``) answers "how is the service
+doing in aggregate"; a :class:`Span` tree answers "where did *this*
+request's latency go".  One request's tree looks like::
+
+    mst_request (request_id=42)
+      queue_wait        submit() -> the flush that drained it
+      cache_lookup      LRU probe for the whole flush batch
+      bucket_assembly   pow2 lane packing (miss path only)
+      solve             the shape-bucket dispatch this request rode in
+        engine:batched  MSTSolver._run_plan detail (plan_hit, rounds,
+                        rank/pack/solve split from the SolveTrace)
+      scatter           unpack + response construction
+
+Design constraints (DESIGN.md §4a):
+
+  * **Post-hoc construction.**  ``MSTService.flush`` measures a handful
+    of interval boundaries once and then *builds* span trees for the
+    sampled requests from those shared intervals — it does not enter and
+    exit a context manager per request per phase.  Spans whose interval
+    is shared across a flush batch carry ``shared=True`` in their attrs.
+  * **Sampling gates allocation.**  The decision is made per request at
+    ``submit`` time by a :class:`SpanSampler`; an unsampled request
+    allocates NO span objects anywhere on its path (asserted by the
+    overhead budget test).  Sampling is deterministic (every k-th
+    request), not random — reruns of a frozen request stream produce the
+    same sampled set.
+  * **Intervals nest and never overlap** within one tree, so summing
+    child durations is meaningful and bounded by the root duration
+    (pinned by the acceptance test).
+
+``current_span`` / ``use_span`` are the thread-local bridge that lets
+``MSTSolver._run_plan`` attach its engine-level detail to whatever
+request span is active without any signature plumbing — the same idiom
+as ``obs.trace.collect_phases``.  Timestamps are ``time.perf_counter()``
+microseconds: monotonic and process-local, which is exactly what the
+Chrome trace export (``obs/chrome_trace.py``) wants for ``ts`` fields.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import time
+from typing import Dict, Iterator, List, Optional
+
+# Monotonically increasing count of Span objects ever constructed in
+# this process.  Exists so "sampling=0 allocates no spans" is a directly
+# assertable property (tests snapshot it around an unsampled flush); the
+# cost is one integer increment per *sampled* span.
+_SPAN_ALLOCATIONS = 0
+
+
+def span_allocations() -> int:
+    """Total spans constructed process-wide (test/diagnostic hook)."""
+    return _SPAN_ALLOCATIONS
+
+
+def now_us() -> float:
+    """The span clock: ``time.perf_counter()`` in microseconds."""
+    return time.perf_counter() * 1e6
+
+
+@dataclasses.dataclass
+class Span:
+    """One named interval in a request's timing tree.
+
+    ``t0_us``/``t1_us`` are absolute ``perf_counter`` microseconds
+    (process-local monotonic).  A span under construction may carry
+    ``t1_us=0.0`` until its owner closes it with :meth:`finish`.
+    """
+
+    name: str
+    t0_us: float
+    t1_us: float = 0.0
+    attrs: Dict[str, object] = dataclasses.field(default_factory=dict)
+    children: List["Span"] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        global _SPAN_ALLOCATIONS
+        _SPAN_ALLOCATIONS += 1
+
+    @property
+    def duration_us(self) -> float:
+        return max(0.0, self.t1_us - self.t0_us)
+
+    def finish(self, t1_us: Optional[float] = None) -> "Span":
+        self.t1_us = now_us() if t1_us is None else t1_us
+        return self
+
+    def child(self, name: str, t0_us: float, t1_us: float,
+              **attrs) -> "Span":
+        """Append a closed child interval; returns it."""
+        s = Span(name, t0_us, t1_us, attrs=attrs)
+        self.children.append(s)
+        return s
+
+    def find(self, name: str) -> Optional["Span"]:
+        """First descendant (pre-order) named ``name``; None if absent."""
+        for c in self.children:
+            if c.name == name:
+                return c
+            hit = c.find(name)
+            if hit is not None:
+                return hit
+        return None
+
+    def walk(self) -> Iterator["Span"]:
+        """Pre-order traversal, self included."""
+        yield self
+        for c in self.children:
+            yield from c.walk()
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "name": self.name,
+            "t0_us": self.t0_us,
+            "duration_us": self.duration_us,
+            "attrs": dict(self.attrs),
+            "children": [c.to_dict() for c in self.children],
+        }
+
+    def __repr__(self) -> str:
+        return (f"Span({self.name!r}, {self.duration_us:.0f}us, "
+                f"{len(self.children)} children)")
+
+
+class SpanSampler:
+    """Deterministic request sampler.
+
+    ``rate`` in [0, 1]: 1.0 samples every request, 0.0 none, and a
+    fractional rate samples every ``round(1/rate)``-th request (the first
+    of each stride, so a short demo run still produces a tree).
+    Deterministic on purpose — a frozen benchmark stream samples the same
+    requests on every run, keeping span-derived metrics regression-
+    comparable.  Not thread-safe; the synchronous service owns one.
+    """
+
+    def __init__(self, rate: float = 1.0):
+        rate = float(rate)
+        if not 0.0 <= rate <= 1.0:
+            raise ValueError(f"sampling rate must be in [0, 1], got {rate}")
+        self.rate = rate
+        self._stride = 0 if rate <= 0.0 else max(1, round(1.0 / rate))
+        self._seen = 0
+
+    def sample(self) -> bool:
+        if self._stride == 0:
+            return False
+        if self._stride == 1:
+            return True
+        self._seen += 1
+        return (self._seen - 1) % self._stride == 0
+
+
+# -- thread-local active span -------------------------------------------------
+#
+# The bridge between layers: the service activates a request/bucket span
+# around a solver call; the solver attaches its dispatch detail to
+# whatever span is active.  When nothing is active the probe is one
+# thread-local attribute read (the sampling=0 hot path).
+
+_TLS = threading.local()
+
+
+def _stack() -> List[Span]:
+    s = getattr(_TLS, "spans", None)
+    if s is None:
+        s = _TLS.spans = []
+    return s
+
+
+def current_span() -> Optional[Span]:
+    """The innermost active span on this thread (None when inactive)."""
+    s = getattr(_TLS, "spans", None)
+    return s[-1] if s else None
+
+
+@contextlib.contextmanager
+def use_span(span: Span) -> Iterator[Span]:
+    """Make ``span`` the active span for the duration of the block."""
+    stack = _stack()
+    stack.append(span)
+    try:
+        yield span
+    finally:
+        stack.pop()
+
+
+__all__ = ["Span", "SpanSampler", "current_span", "use_span", "now_us",
+           "span_allocations"]

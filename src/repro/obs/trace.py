@@ -116,6 +116,10 @@ class SolveTrace:
         host edge ranking, pack is lane packing/unpacking (attributed
         evenly across a ``solve_many`` call's buckets), solve is the
         remainder of the blocked dispatch.
+      host_phases: every named host phase the dispatch collected, in
+        microseconds (superset of rank/pack: the spmm engine adds
+        ``ell_build``); ``solve_us`` is total minus their sum.  None on
+        traces emitted before the field existed.
 
     Detail arrays (``None`` unless produced via ``trace_solve``, which
     re-runs the shared instrumented round loop — conformance pins round
@@ -144,6 +148,7 @@ class SolveTrace:
     # Contract-Borůvka on/off; defaulted (and therefore declared after the
     # required fields) so existing positional constructions stay valid.
     contraction: bool = False
+    host_phases: Optional[Dict[str, float]] = None
     live_per_round: Optional[List[int]] = None
     commits_per_round: Optional[List[int]] = None
     waves_per_round: Optional[List[int]] = None

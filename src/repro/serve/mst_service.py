@@ -23,6 +23,7 @@ what later PRs make async / multi-device (DESIGN.md §3).
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import time
 from collections import OrderedDict
@@ -35,13 +36,23 @@ from repro.core import MSTSolver, SolveOptions, make_solver
 from repro.core.solver import legacy_options
 from repro.core.types import Graph, GraphLike, as_request, ensure_sized
 from repro.graphs.batching import pack_graphs, unpack_results
+from repro.obs.exporter import MetricsExporter
+from repro.obs.flight import FlightRecorder
 from repro.obs.metrics import BATCH_BUCKETS, MetricsRegistry
+from repro.obs.span import Span, SpanSampler, now_us, use_span
 from repro.obs.trace import collect_phases
 
 
 @dataclass(frozen=True)
 class MSTResponse:
-    """One solved request, trimmed to the graph's true sizes."""
+    """One solved request, trimmed to the graph's true sizes.
+
+    ``span`` is the request's timing tree (queue-wait / cache-lookup /
+    bucket-assembly / solve / scatter, DESIGN.md §4a) when the request
+    was sampled, else None.  Cache entries store span-less responses;
+    every delivered response gets its own tree (its queue wait differs
+    even when the solve was shared).
+    """
 
     request_id: int
     mst_mask: np.ndarray      # (E,) bool
@@ -50,6 +61,7 @@ class MSTResponse:
     num_components: int
     num_rounds: int
     cached: bool = False
+    span: Optional[Span] = None
 
 
 @dataclass(frozen=True)
@@ -210,13 +222,30 @@ class MSTService:
       max_batch: lane cap per engine call; a bucket with more members
         overflows into multiple solves (bounds padded-batch memory).
       cache_size: LRU capacity in *results*; 0 disables caching.
+      sampling: request-span sampling rate in [0, 1] (DESIGN.md §4a).
+        1.0 (default) attaches a timing tree to every response and feeds
+        the flight recorder; 0.0 turns the span path into a no-op that
+        allocates nothing per request (asserted by the obs overhead
+        budget test).  Fractional rates sample deterministically (every
+        round(1/rate)-th request).
+      slow_us: requests whose end-to-end span is at least this many
+        microseconds count as "slow" in the flight recorder snapshot
+        (None disables the classification).
+      export_port: when not None, start a :class:`MetricsExporter`
+        thread on this port (0 = ephemeral, see ``svc.exporter.port``)
+        serving ``/metrics`` (this service's registry), ``/healthz``,
+        ``/readyz`` (solver plan cache warmed) and ``/flight``.  Stop it
+        with ``svc.close()`` (or use the service as a context manager).
     """
 
     def __init__(self, *, options: Optional[SolveOptions] = None,
                  variant: Optional[str] = None,
                  engine: Optional[str] = None,
                  max_batch: Optional[int] = None, cache_size: int = 256,
-                 compaction: Optional[int] = None):
+                 compaction: Optional[int] = None,
+                 sampling: float = 1.0,
+                 slow_us: Optional[float] = None,
+                 export_port: Optional[int] = None):
         if options is None:
             # Legacy keyword bag: keep its documented leniencies (e.g. a
             # compaction cadence on a sequential baseline stays a no-op,
@@ -251,13 +280,29 @@ class MSTService:
         # several graph solves, so the two working sets shouldn't thrash
         # each other.
         self._cluster_cache: "OrderedDict[str, tuple]" = OrderedDict()
-        # pending: (request_id, key, sized_graph)
-        self._pending: List[Tuple[int, str, Graph]] = []
+        # Request-span plumbing (DESIGN.md §4a): the sampler decides per
+        # request at submit time; the flight recorder keeps the last N
+        # completed trees + the K slowest for postmortems.
+        self.sampler = SpanSampler(sampling)
+        self.flight = FlightRecorder(slow_threshold_us=slow_us)
+        # pending: (request_id, key, sized_graph, submit_us-or-None);
+        # the timestamp doubles as the sampling decision — None means
+        # "unsampled", and the unsampled path allocates no span objects.
+        self._pending: List[Tuple[int, str, Graph, Optional[float]]] = []
         # solved but not yet handed to any caller (a solve()/solve_many()
         # drained the queue for requests submitted earlier); delivered by
         # the next flush(), in submit order.
         self._unclaimed: List[MSTResponse] = []
         self._next_id = 0
+        self.exporter: Optional[MetricsExporter] = None
+        if export_port is not None:
+            self.exporter = MetricsExporter(
+                snapshot_fn=self.stats.registry.to_json,
+                # Ready = the solver has compiled at least one plan; a
+                # scrape-time exception must read as not-ready, which the
+                # exporter handles.
+                ready_fn=lambda: self.solver.stats.traces > 0,
+                flight=self.flight, port=export_port).start()
 
     # -- request side -------------------------------------------------------
 
@@ -268,7 +313,8 @@ class MSTService:
         g = as_request(graph if num_nodes is None else (graph, num_nodes))
         rid = self._next_id
         self._next_id += 1
-        self._pending.append((rid, graph_key(g), g))
+        t_sub = now_us() if self.sampler.sample() else None
+        self._pending.append((rid, graph_key(g), g, t_sub))
         self.stats.c_submitted.inc()
         self.stats.g_queue_depth.set(len(self._pending))
         return rid
@@ -281,16 +327,21 @@ class MSTService:
         """
         unclaimed, self._unclaimed = self._unclaimed, []
         pending, self._pending = self._pending, []
-        self.stats.g_queue_depth.set(0)
         if not pending:
             return unclaimed
         t_flush = time.perf_counter()
+        t_flush_us = t_flush * 1e6
         self.stats.c_flushes.inc()
         self.stats.h_flush_batch.observe(len(pending))
+        # Span scratch for this flush: shared interval boundaries the
+        # sampled requests' trees are built from post-hoc (None when no
+        # request in the batch is sampled — the zero-allocation path).
+        record: Optional[Dict[str, object]] = (
+            {} if any(t is not None for _, _, _, t in pending) else None)
 
         responses: Dict[int, MSTResponse] = {}
-        misses: List[Tuple[int, str, Graph]] = []
-        for rid, key, g in pending:
+        misses: List[Tuple[int, str, Graph, Optional[float]]] = []
+        for rid, key, g, t_sub in pending:
             hit = self._cache_get(self._cache, key)
             if hit is not None:
                 self.stats.c_cache_hits.inc()
@@ -299,18 +350,20 @@ class MSTService:
                                              hit.num_components,
                                              hit.num_rounds, cached=True)
             else:
-                misses.append((rid, key, g))
+                misses.append((rid, key, g, t_sub))
+        if record is not None:
+            record["probe_t1"] = now_us()
 
         if misses:
             # Intra-flush dedup: identical graphs (same content key) share
             # one engine lane; duplicates fan out from the first solve.
-            unique: Dict[str, Tuple[int, str, Graph]] = {}
+            unique: Dict[str, Tuple[int, str, Graph, Optional[float]]] = {}
             for m in misses:
                 unique.setdefault(m[1], m)
             solve_list = list(unique.values())
-            per_request = self._solve_batch(solve_list)
+            per_request = self._solve_batch(solve_list, record)
             by_key: Dict[str, MSTResponse] = {}
-            for (rid, key, _), (mask, parent, tw, nc, nr) in zip(
+            for (rid, key, _, _), (mask, parent, tw, nc, nr) in zip(
                     solve_list, per_request):
                 # Responses are shared via the cache: freeze the arrays so
                 # one caller's mutation can't corrupt later hits.
@@ -319,7 +372,7 @@ class MSTService:
                 resp = MSTResponse(rid, mask, parent, tw, nc, nr)
                 by_key[key] = resp
                 self._cache_put(self._cache, key, resp)
-            for rid, key, _ in misses:
+            for rid, key, _, _ in misses:
                 base = by_key[key]
                 responses[rid] = (base if rid == base.request_id else
                                   MSTResponse(rid, base.mst_mask,
@@ -327,24 +380,79 @@ class MSTService:
                                               base.num_components,
                                               base.num_rounds))
 
+        if record is not None:
+            miss_rids = {rid for rid, _, _, _ in misses}
+            self._attach_spans(pending, responses, miss_rids, record,
+                               t_flush_us)
         self.stats.c_served.inc(len(pending))
         self.stats.g_hit_rate.set(self.stats.cache_hit_rate)
         self.stats.h_flush_latency.observe(
             (time.perf_counter() - t_flush) * 1e6)
-        return unclaimed + [responses[rid] for rid, _, _ in pending]
+        # The depth gauge reflects what is queued *now*: requests that
+        # arrived during the flush (re-entrant cluster solves) stay
+        # visible, and a mid-flush scrape reads the pre-flush depth
+        # instead of a premature zero.
+        self.stats.g_queue_depth.set(len(self._pending))
+        return unclaimed + [responses[rid] for rid, _, _, _ in pending]
 
-    def _solve_batch(self, solve_list):
+    def _attach_spans(self, pending, responses, miss_rids, record,
+                      t_flush_us: float) -> None:
+        """Build span trees for the flush's sampled requests and attach
+        them to the outgoing responses (miss path gets bucket-assembly /
+        solve / scatter children; hits get queue-wait + cache-lookup).
+
+        Shared flush intervals (cache probe, lane packing, the bucket
+        dispatch a request rode in) appear in every rider's tree as the
+        same ``Span`` object, marked ``shared=True`` — per-request
+        duplication would only blur that the time *was* shared.
+        """
+        t_done = now_us()
+        solve_by_key = record.get("solve_by_key", {})
+        for rid, key, _, t_sub in pending:
+            if t_sub is None:
+                continue
+            resp = responses[rid]
+            root = Span("mst_request", t_sub, t_done,
+                        attrs={"request_id": rid, "cached": resp.cached,
+                               "engine": self.engine,
+                               "graph_key": key[:12]})
+            root.child("queue_wait", t_sub, t_flush_us)
+            root.child("cache_lookup", t_flush_us, record["probe_t1"],
+                       shared=True)
+            if rid in miss_rids:
+                pack = record.get("pack")
+                if pack is not None:
+                    root.child("bucket_assembly", pack[0], pack[1],
+                               shared=True)
+                solve = solve_by_key.get(key)
+                if solve is not None:
+                    root.children.append(solve)
+                scatter_t0 = record.get("scatter_t0")
+                if scatter_t0 is not None:
+                    root.child("scatter", scatter_t0, t_done, shared=True)
+            responses[rid] = dataclasses.replace(resp, span=root)
+            self.flight.record(root)
+
+    def _solve_batch(self, solve_list, record=None):
         """Solve deduped cache misses through the planned solver.
 
         Returns per-request ``(mask, parent, tw, nc, nr)`` tuples in
-        ``solve_list`` order (the ``unpack_results`` contract).
+        ``solve_list`` order (the ``unpack_results`` contract).  When
+        ``record`` is a dict (some request in the flush is span-sampled)
+        the shared interval boundaries land in it: ``pack`` (lane
+        packing), ``solve_by_key`` (content key -> the solve span of the
+        bucket that request rode in, with the solver's engine dispatch
+        attached underneath via ``use_span``), ``scatter_t0``.
         """
         if self.solver.spec.supports_batched_lanes:
             # The collector catches the "pack" phases (lane packing +
             # result trimming) running outside the per-bucket dispatches.
             with collect_phases() as phases:
-                buckets = pack_graphs([g for _, _, g in solve_list],
+                t0_us = now_us()
+                buckets = pack_graphs([g for _, _, g, _ in solve_list],
                                       max_batch=self.max_batch)
+                if record is not None:
+                    record["pack"] = (t0_us, now_us())
                 results = []
                 for b in buckets:
                     self.stats.c_buckets.inc()
@@ -354,25 +462,50 @@ class MSTService:
                         + len(b.indices))
                     self.stats.c_engine_solves.inc(len(b.indices))
                     t0 = time.perf_counter()
-                    results.append(self.solver.solve_packed(b))
+                    if record is None:
+                        results.append(self.solver.solve_packed(b))
+                    else:
+                        span = Span("solve", t0 * 1e6,
+                                    attrs={"shape": f"{shape[0]}x{shape[1]}",
+                                           "lanes": len(b.indices),
+                                           "shared": len(b.indices) > 1})
+                        with use_span(span):
+                            results.append(self.solver.solve_packed(b))
+                        span.finish()
+                        by_key = record.setdefault("solve_by_key", {})
+                        for i in b.indices:
+                            by_key[solve_list[i][1]] = span
                     # Per-bucket solve latency: the shape label stays
                     # bounded by the pow2 bucketing.
                     self.stats.registry.histogram(
                         "mstserve_bucket_solve_latency_us",
                         shape=f"{b.padded_edges}x{b.padded_nodes}").observe(
                             (time.perf_counter() - t0) * 1e6)
+                if record is not None:
+                    record["scatter_t0"] = now_us()
                 out = unpack_results(buckets, results)
             if phases.get("pack"):
                 self.stats.h_pack.observe(phases["pack"] * 1e6)
             return out
         # Per-graph registry engines: one plan-cached dispatch per request.
         out = []
-        for _, _, g in solve_list:
+        for _, key, g, _ in solve_list:
             self.stats.c_engine_solves.inc()
-            r = self.solver.solve(g)
+            if record is None:
+                r = self.solver.solve(g)
+            else:
+                span = Span("solve", now_us(),
+                            attrs={"shape": f"{g.num_edges}x{g.num_nodes}",
+                                   "lanes": 1, "shared": False})
+                with use_span(span):
+                    r = self.solver.solve(g)
+                span.finish()
+                record.setdefault("solve_by_key", {})[key] = span
             out.append((np.asarray(r.mst_mask), np.asarray(r.parent),
                         float(r.total_weight), int(r.num_components),
                         int(r.num_rounds)))
+        if record is not None:
+            record["scatter_t0"] = now_us()
         return out
 
     def solve(self, graph: GraphLike,
@@ -474,6 +607,20 @@ class MSTService:
                                        dend.heights, kk, esc, bridges,
                                        cached=cached))
         return out
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self) -> None:
+        """Stop the exporter thread, if one was started (idempotent)."""
+        if self.exporter is not None:
+            self.exporter.stop()
+            self.exporter = None
+
+    def __enter__(self) -> "MSTService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     # -- caches -------------------------------------------------------------
 

@@ -294,3 +294,36 @@ def test_instrumentation_overhead_under_budget():
     _, _, ratio = paired_time(direct, instrumented, repeats=9)
     # ratio = direct/instrumented (median of pairs); 0.95 <=> <5% overhead.
     assert ratio >= 0.95, f"instrumentation overhead too high: {ratio:.3f}"
+
+
+def test_span_recording_overhead_under_budget():
+    """DESIGN.md §4a budget: full request-span recording (sampling=1.0,
+    every flush builds trees and feeds the flight recorder) must cost
+    < 5% wall time vs the span-free path (sampling=0) on the same warm
+    request stream."""
+    from benchmarks.compaction_bench import paired_time
+    from repro.graphs.generator import generate_graph
+    from repro.obs.span import span_allocations
+    from repro.serve.mst_service import MSTService
+
+    # cache_size=0: every flush takes the full miss path (pack + solve +
+    # scatter) — the path that does the most span bookkeeping.
+    off = MSTService(sampling=0.0, cache_size=0)
+    on = MSTService(sampling=1.0, cache_size=0)
+    graphs = [generate_graph(1000, 4, seed=s) for s in range(4)]
+    off.solve_many(graphs)  # warm both bucket plans
+    on.solve_many(graphs)
+
+    def unsampled():
+        off.solve_many(graphs)
+
+    def sampled():
+        on.solve_many(graphs)
+
+    _, _, ratio = paired_time(unsampled, sampled, repeats=9)
+    assert ratio >= 0.95, f"span recording overhead too high: {ratio:.3f}"
+    # And the sampling=0 arm stayed literally allocation-free: the whole
+    # measured run must not have constructed a single Span object.
+    before = span_allocations()
+    off.solve_many(graphs)
+    assert span_allocations() == before

@@ -1,0 +1,464 @@
+"""Serving-grade observability: spans, flight recorder, exporter, Chrome
+trace export, and the phase-attributed regression gate (DESIGN.md §4a).
+
+The span integration tests pin the acceptance contract: a sampled
+request's tree carries queue_wait / solve / scatter children whose
+durations sum to no more than the measured end-to-end latency (intervals
+nest, they don't overlap), the unsampled path allocates no span objects
+at all, and the queue-depth gauge stays readable mid-flush (a scrape
+during a solve must see the pre-flush depth, not a premature zero).
+"""
+import importlib.util
+import json
+import os
+import sys
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.graphs.generator import generate_graph
+from repro.obs import (FlightRecorder, MetricsExporter, Span, SpanSampler,
+                       check_chrome_trace, check_exposition,
+                       chrome_trace_doc, current_span, span_allocations,
+                       span_tree_events, use_span)
+from repro.serve.mst_service import MSTService
+
+
+def _load_checker():
+    path = os.path.join(os.path.dirname(__file__), "..", "scripts",
+                        "check_bench_regression.py")
+    spec = importlib.util.spec_from_file_location("check_bench_regression",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ---------------------------------------------------------------------------
+# Span / SpanSampler primitives
+# ---------------------------------------------------------------------------
+
+def test_span_tree_construction_and_traversal():
+    root = Span("req", 100.0, 500.0, attrs={"request_id": 7})
+    root.child("queue_wait", 100.0, 200.0)
+    solve = root.child("solve", 200.0, 400.0, shape="64x48")
+    solve.child("engine:batched", 210.0, 390.0)
+    assert root.duration_us == 400.0
+    assert root.find("engine:batched").duration_us == 180.0
+    assert root.find("nope") is None
+    assert [s.name for s in root.walk()] == [
+        "req", "queue_wait", "solve", "engine:batched"]
+    d = root.to_dict()
+    assert d["attrs"]["request_id"] == 7
+    assert d["children"][1]["children"][0]["name"] == "engine:batched"
+    json.dumps(d)  # must be JSON-ready (the /flight + dump path)
+
+
+def test_span_finish_and_open_interval():
+    s = Span("open", 50.0)
+    assert s.duration_us == 0.0  # open span never reports negative
+    s.finish(80.0)
+    assert s.duration_us == 30.0
+
+
+def test_sampler_rates_and_determinism():
+    with pytest.raises(ValueError):
+        SpanSampler(1.5)
+    with pytest.raises(ValueError):
+        SpanSampler(-0.1)
+    always, never = SpanSampler(1.0), SpanSampler(0.0)
+    assert [always.sample() for _ in range(4)] == [True] * 4
+    assert [never.sample() for _ in range(4)] == [False] * 4
+    # Fractional: every round(1/rate)-th request, first of each stride —
+    # and the same set on a rerun (deterministic, not random).
+    quarter, rerun = SpanSampler(0.25), SpanSampler(0.25)
+    picks = [quarter.sample() for _ in range(8)]
+    assert picks == [True, False, False, False, True, False, False, False]
+    assert picks == [rerun.sample() for _ in range(8)]
+
+
+def test_current_span_stack():
+    assert current_span() is None
+    a, b = Span("a", 0.0, 1.0), Span("b", 0.0, 1.0)
+    with use_span(a):
+        assert current_span() is a
+        with use_span(b):
+            assert current_span() is b
+        assert current_span() is a
+    assert current_span() is None
+
+
+# ---------------------------------------------------------------------------
+# FlightRecorder
+# ---------------------------------------------------------------------------
+
+def _tree(dur, rid=0):
+    return Span("mst_request", 0.0, dur, attrs={"request_id": rid})
+
+
+def test_flight_ring_evicts_but_slowest_survive():
+    fr = FlightRecorder(capacity=3, keep_slowest=2)
+    spike = _tree(9000.0, rid=99)
+    fr.record(spike)
+    for i in range(5):
+        fr.record(_tree(100.0 + i, rid=i))
+    # The spike was pushed out of the ring by later traffic...
+    assert spike not in fr.recent()
+    assert len(fr.recent()) == 3
+    # ...but survives in the slowest-K holding, slowest first.
+    slowest = fr.slowest()
+    assert slowest[0] is spike
+    assert [s.duration_us for s in slowest] == sorted(
+        (s.duration_us for s in slowest), reverse=True)
+    assert fr.recorded == 6
+
+
+def test_flight_slow_threshold_and_snapshot():
+    fr = FlightRecorder(capacity=4, keep_slowest=2, slow_threshold_us=500.0)
+    fr.record(_tree(100.0))
+    fr.record(_tree(500.0))  # at-threshold counts
+    fr.record(_tree(800.0))
+    snap = fr.snapshot()
+    assert snap["recorded"] == 3 and snap["slow_count"] == 2
+    assert snap["slow_threshold_us"] == 500.0
+    assert len(snap["recent"]) == 3 and len(snap["slowest"]) == 2
+    json.dumps(snap)  # /flight contract
+    fr.clear()
+    assert fr.recorded == 0 and len(fr) == 0 and fr.slowest() == []
+
+
+def test_flight_zero_capacity_keeps_slowest_only():
+    fr = FlightRecorder(capacity=0, keep_slowest=1)
+    fr.record(_tree(100.0))
+    fr.record(_tree(900.0))
+    assert fr.recent() == []
+    assert [s.duration_us for s in fr.slowest()] == [900.0]
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace export
+# ---------------------------------------------------------------------------
+
+def test_span_tree_events_rebase_and_nesting():
+    root = Span("req", 1_000_000.0, 1_000_400.0)
+    root.child("queue_wait", 1_000_000.0, 1_000_100.0)
+    root.child("solve", 1_000_100.0, 1_000_300.0)
+    events = span_tree_events(root, pid=1, tid=1)
+    # Rebased to the root's start: the track begins at ts=0.
+    assert events[0]["ts"] == 0.0 and events[0]["dur"] == 400.0
+    assert {e["name"] for e in events} == {"req", "queue_wait", "solve"}
+    doc = chrome_trace_doc([root])
+    assert check_chrome_trace(doc) == []
+
+
+def test_check_chrome_trace_catches_problems():
+    assert check_chrome_trace({"nope": 1}) != []
+    bad_phase = {"traceEvents": [
+        {"name": "x", "ph": "B", "pid": 1, "tid": 1, "ts": 0}]}
+    assert any("phase" in e for e in check_chrome_trace(bad_phase))
+    # A slice escaping its enclosing slice breaks viewer stacking.
+    escape = {"traceEvents": [
+        {"name": "parent", "ph": "X", "pid": 1, "tid": 1,
+         "ts": 0.0, "dur": 100.0},
+        {"name": "child", "ph": "X", "pid": 1, "tid": 1,
+         "ts": 50.0, "dur": 100.0}]}
+    assert any("escapes" in e for e in check_chrome_trace(escape))
+    empty_counter = {"traceEvents": [
+        {"name": "c", "ph": "C", "pid": 1, "tid": 1, "ts": 0.0,
+         "args": {}}]}
+    assert any("counter" in e for e in check_chrome_trace(empty_counter))
+
+
+def test_solve_trace_round_counters_render():
+    from repro.core import SolveOptions, make_solver
+    from repro.obs import solve_trace_events
+
+    solver = make_solver(SolveOptions(engine="single"))
+    _, trace = solver.trace_solve(generate_graph(120, 3, seed=0))
+    events = solve_trace_events(trace, pid=2, tid=1)
+    counters = [e for e in events if e["ph"] == "C"]
+    assert {e["name"] for e in counters} >= {"live_edges", "mst_edges"}
+    assert len([e for e in counters if e["name"] == "live_edges"]) \
+        == trace.num_rounds
+    doc = chrome_trace_doc([], [trace])
+    assert check_chrome_trace(doc) == []
+    # Accepts to_dict() form too (re-rendering a /flight dump from file).
+    assert check_chrome_trace(chrome_trace_doc([], [trace.to_dict()])) == []
+
+
+# ---------------------------------------------------------------------------
+# MetricsExporter
+# ---------------------------------------------------------------------------
+
+def _get(url):
+    try:
+        with urllib.request.urlopen(url, timeout=5) as r:
+            return r.status, r.read().decode(), r.headers.get("Content-Type")
+    except urllib.error.HTTPError as e:
+        return e.code, e.read().decode(), e.headers.get("Content-Type")
+
+
+def test_exporter_endpoints_end_to_end():
+    from repro.obs.metrics import MetricsRegistry
+
+    reg = MetricsRegistry("t")
+    reg.counter("t_scrapes_total").inc(3)
+    ready = {"ok": False}
+    fr = FlightRecorder()
+    fr.record(_tree(123.0))
+    with MetricsExporter(snapshot_fn=reg.to_json,
+                         ready_fn=lambda: ready["ok"], flight=fr,
+                         port=0) as ex:
+        assert ex.running and ex.port != 0
+        code, body, ctype = _get(f"{ex.url}/metrics")
+        assert code == 200 and "version=0.0.4" in ctype
+        assert check_exposition(body, required=("t_scrapes_total",)) == []
+        assert _get(f"{ex.url}/healthz")[0] == 200
+        assert _get(f"{ex.url}/readyz")[0] == 503  # not warmed yet
+        ready["ok"] = True
+        assert _get(f"{ex.url}/readyz")[0] == 200
+        code, body, ctype = _get(f"{ex.url}/flight")
+        assert code == 200 and ctype == "application/json"
+        assert json.loads(body)["recorded"] == 1
+        assert _get(f"{ex.url}/nope")[0] == 404
+    assert not ex.running
+    ex.stop()  # idempotent
+
+
+def test_exporter_ready_fn_exception_reads_not_ready():
+    def boom():
+        raise RuntimeError("scrape-time failure")
+
+    with MetricsExporter(ready_fn=boom, port=0) as ex:
+        assert _get(f"{ex.url}/readyz")[0] == 503
+        assert _get(f"{ex.url}/healthz")[0] == 200  # still alive
+
+
+def test_exporter_without_flight_recorder_404s():
+    with MetricsExporter(port=0) as ex:
+        assert _get(f"{ex.url}/flight")[0] == 404
+
+
+# ---------------------------------------------------------------------------
+# Service integration: span trees on live responses
+# ---------------------------------------------------------------------------
+
+def test_response_span_tree_sums_within_e2e():
+    """Acceptance: queue-wait + solve + scatter durations sum to no more
+    than the request's measured end-to-end latency."""
+    svc = MSTService()
+    g_hit = generate_graph(60, 3, seed=0)
+    svc.solve(g_hit)  # populate cache + warm the bucket plan
+    svc.submit(g_hit)
+    svc.submit(generate_graph(60, 3, seed=1))
+    responses = {r.request_id: r for r in svc.flush()}
+    assert all(r.span is not None for r in responses.values())
+
+    miss = next(r for r in responses.values()
+                if not r.cached and r.span.attrs.get("cached") is False)
+    root = miss.span
+    assert root.name == "mst_request"
+    assert root.attrs["request_id"] == miss.request_id
+    parts = [root.find(n) for n in ("queue_wait", "solve", "scatter")]
+    assert all(p is not None for p in parts)
+    assert sum(p.duration_us for p in parts) <= root.duration_us
+    # Every child interval nests inside the root.
+    for child in root.children:
+        assert child.t0_us >= root.t0_us - 1e-6
+        assert child.t1_us <= root.t1_us + 1e-6
+    # The solver attached its engine dispatch under the solve span.
+    engine = root.find(f"engine:{svc.engine}")
+    assert engine is not None
+    assert engine.attrs["plan_hit"] is True  # warmed above
+    assert engine.attrs["rounds"] >= 1
+
+    hit = next(r for r in responses.values() if r.cached)
+    assert hit.span.find("queue_wait") is not None
+    assert hit.span.find("cache_lookup") is not None
+    assert hit.span.find("solve") is None  # hits never solved
+
+
+def test_duplicate_requests_share_one_solve_span():
+    svc = MSTService()
+    g = generate_graph(60, 3, seed=5)
+    svc.submit(g)
+    svc.submit(g)  # same content key: one engine lane, fanned out
+    r1, r2 = svc.flush()
+    assert r1.span.find("solve") is r2.span.find("solve")  # aliased
+    assert r1.span is not r2.span  # but the trees are per-request
+
+
+def test_flight_recorder_fed_by_service():
+    svc = MSTService(slow_us=0.0)  # everything classifies as slow
+    svc.solve_many([generate_graph(60, 3, seed=i) for i in range(3)])
+    assert svc.flight.recorded == 3
+    assert svc.flight.slow_count == 3
+    assert all(s.name == "mst_request" for s in svc.flight.recent())
+
+
+def test_sampling_zero_allocates_no_spans():
+    """The unsampled path must not construct a single Span object."""
+    svc = MSTService(sampling=0.0)
+    svc.solve(generate_graph(60, 3, seed=0))  # warm outside the window
+    before = span_allocations()
+    svc.submit(generate_graph(60, 3, seed=1))
+    svc.submit(generate_graph(60, 3, seed=2))
+    responses = svc.flush()
+    assert span_allocations() == before
+    assert all(r.span is None for r in responses)
+    assert svc.flight.recorded == 0
+
+
+def test_fractional_sampling_is_deterministic_per_request():
+    svc = MSTService(sampling=0.5)
+    for i in range(4):
+        svc.submit(generate_graph(60, 3, seed=10 + i))
+    spans = [r.span for r in svc.flush()]
+    assert [s is not None for s in spans] == [True, False, True, False]
+
+
+def test_service_export_port_serves_metrics_and_readyz():
+    with MSTService(export_port=0) as svc:
+        url = svc.exporter.url
+        assert _get(f"{url}/readyz")[0] == 503  # no plan traced yet
+        svc.solve(generate_graph(60, 3, seed=0))
+        assert _get(f"{url}/readyz")[0] == 200
+        code, body, _ = _get(f"{url}/metrics")
+        assert code == 200
+        assert check_exposition(body,
+                                required=("mstserve_requests_total",
+                                          "mst_solves_total")) == []
+        assert json.loads(_get(f"{url}/flight")[1])["recorded"] == 1
+    assert svc.exporter is None  # close() detached it
+    svc.close()  # idempotent
+
+
+def test_mid_flush_queue_depth_stays_visible():
+    """S1 regression: the depth gauge read mid-flush (e.g. by an exporter
+    scrape during a solve) must show the pre-flush depth, not a zero
+    written before the work happened."""
+    svc = MSTService()
+    svc.solve(generate_graph(60, 3, seed=0))  # warm the bucket plan
+    seen = []
+    inner = svc.solver.solve_packed
+
+    def probed(batch):
+        seen.append(svc.stats.g_queue_depth.value)
+        return inner(batch)
+
+    svc.solver.solve_packed = probed
+    svc.submit(generate_graph(60, 3, seed=1))
+    svc.submit(generate_graph(60, 3, seed=2))
+    svc.flush()
+    assert seen and all(v == 2 for v in seen)
+    assert svc.stats.g_queue_depth.value == 0  # drained after the flush
+
+
+# ---------------------------------------------------------------------------
+# check_bench_regression: direction, provenance, --list, attribution
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def checker():
+    return _load_checker()
+
+
+def _bench(tmp_path, name, derived, phases=None):
+    payload = {"_derived": derived}
+    if phases:
+        payload["_phases"] = phases
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def test_latency_metrics_fail_on_increase_pass_on_decrease(
+        checker, tmp_path, capsys):
+    base = _bench(tmp_path, "b.json",
+                  {"serve_smoke_flush": "p50_us=1000.0;hit_rate=0.667"})
+    worse = _bench(tmp_path, "worse.json",
+                   {"serve_smoke_flush": "p50_us=1500.0;hit_rate=0.667"})
+    better = _bench(tmp_path, "better.json",
+                    {"serve_smoke_flush": "p50_us=200.0;hit_rate=0.667"})
+    # Smaller-is-better: a 50% increase must fail the 20% default...
+    assert checker.main([base, worse]) == 1
+    # ...and a large decrease is an improvement, never a failure.
+    capsys.readouterr()
+    assert checker.main([base, better]) == 0
+
+
+def test_speedup_direction_unchanged(checker, tmp_path):
+    base = _bench(tmp_path, "b.json", {"row": "speedup_vs_off=2.0"})
+    drop = _bench(tmp_path, "d.json", {"row": "speedup_vs_off=1.0"})
+    gain = _bench(tmp_path, "g.json", {"row": "speedup_vs_off=4.0"})
+    assert checker.main([base, drop]) == 1
+    assert checker.main([base, gain]) == 0
+
+
+def test_failure_lines_name_the_applied_tolerance(checker, tmp_path,
+                                                  capsys):
+    base = _bench(tmp_path, "b.json", {"a": "p50_us=100.0",
+                                       "z": "speedup_vs_off=2.0"})
+    new = _bench(tmp_path, "n.json", {"a": "p50_us=1000.0",
+                                      "z": "speedup_vs_off=0.5"})
+    rc = checker.main([base, new, "--override", "a:p50_us=5.0"])
+    out = capsys.readouterr()
+    assert rc == 1
+    # a:p50_us grew 9x > 5x override -> failure names the override spec;
+    # z regressed under the global threshold -> failure says "global".
+    assert "override 'a:p50_us=5.0'" in out.err
+    assert "z:speedup_vs_off  tol=20% (global)" in out.err
+    assert "tol=500%" in out.out
+
+
+def test_list_mode_dumps_gated_pairs(checker, tmp_path, capsys):
+    base = _bench(tmp_path, "b.json",
+                  {"a": "p50_us=100.0", "z": "speedup_vs_off=2.0"},
+                  phases={"z": {"rank": 1.0, "solve": 3.0}})
+    new = _bench(tmp_path, "n.json",
+                 {"a": "p50_us=9999.0", "z": "speedup_vs_off=0.1"},
+                 phases={"z": {"rank": 1.0, "solve": 9.0}})
+    # --list never compares: wildly regressed values still exit 0.
+    assert checker.main([base, new, "--list",
+                         "--override", "a:p50_us=5.0"]) == 0
+    out = capsys.readouterr().out
+    assert "a:p50_us  tol=500% (override 'a:p50_us=5.0')  " \
+           "smaller-is-better  phases=no" in out
+    assert "z:speedup_vs_off  tol=20% (global)  bigger-is-better  " \
+           "phases=yes" in out
+
+
+def test_phase_attribution_names_the_moved_phase(checker, tmp_path,
+                                                 capsys):
+    """Acceptance: a synthetic baseline with an inflated solve phase must
+    make the failure output name 'solve'."""
+    base = _bench(tmp_path, "b.json",
+                  {"spmm_G": "spmm_vs_single=2.0"},
+                  phases={"spmm_G": {"rank": 3600.0, "ell_build": 9500.0,
+                                     "solve": 7000.0}})
+    new = _bench(tmp_path, "n.json",
+                 {"spmm_G": "spmm_vs_single=1.0"},
+                 phases={"spmm_G": {"rank": 3600.0, "ell_build": 9500.0,
+                                    "solve": 40000.0}})
+    assert checker.main([base, new]) == 1
+    out = capsys.readouterr()
+    assert "phase attribution: 'solve' share grew" in out.out
+    assert "'solve'" in out.err  # failure summary carries it too
+
+
+def test_attribution_absent_without_phase_data(checker, tmp_path, capsys):
+    base = _bench(tmp_path, "b.json", {"row": "speedup_vs_off=2.0"})
+    new = _bench(tmp_path, "n.json", {"row": "speedup_vs_off=1.0"})
+    assert checker.main([base, new]) == 1
+    assert "phase attribution" not in capsys.readouterr().out
+
+
+def test_attribute_phase_share_math(checker):
+    base = {"row": {"rank": 25.0, "solve": 75.0}}
+    new = {"row": {"rank": 25.0, "solve": 225.0}}
+    msg = checker.attribute_phase("row", base, new)
+    # solve: 75% -> 90% (+15pp), rank shrank correspondingly.
+    assert "'solve' share grew +15.0pp" in msg
+    assert "(75.0% -> 90.0%)" in msg
+    assert checker.attribute_phase("other", base, new) is None
