@@ -1,0 +1,79 @@
+"""dynamic-MSF section: incremental single-edge updates vs the full
+re-solve they replace (DESIGN.md §5a).
+
+The headline, ``update_vs_resolve``, is a same-run paired ratio
+(``compaction_bench.paired_time``, adjacent pairs, median of per-pair
+ratios): one arm forces the epoch backstop — a full engine solve of the
+current graph through the planned solver, warm plan cache, pow2-padded
+so no retrace — and the other applies ONE edge update (alternating
+insert / delete of a probe edge, so the graph returns to its start state
+every two calls and both arms keep timing the same structure).  Both
+arms are end-to-end: the update arm includes the O(E) canonical-mirror
+memcpy and the mask refresh, exactly what :meth:`MSTService.update`
+pays.
+
+``updates_per_sec`` is absolute throughput for the EXPERIMENTS.md table
+(not runner-portable — CI gates it only through a generous override,
+like the latency percentiles).
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Sequence, Tuple
+
+from benchmarks.compaction_bench import _resolve, paired_time
+
+DEFAULT_CELLS: Sequence[str] = ("Graph10K_6", "Graph100K_3", "Graph100K_6")
+# Subset of the default set so the CI regression job always has a
+# committed baseline key to compare.
+SMOKE_CELLS: Sequence[str] = ("Graph10K_6",)
+
+
+def dynamic_rows(cells: Sequence[str] = DEFAULT_CELLS,
+                 repeats: int = 5) -> List[Tuple]:
+    """(name, us, derived[, phases]) rows: update-vs-resolve ratios.
+
+    The probe edge is (0, 1) at a weight below the graph's minimum, so
+    the insert always swaps into the tree (worst-case update: path find
+    + cut + attach + mirror insert) and the delete always reconnects —
+    neither arm ever degenerates into a no-op cycle check.
+    """
+    import numpy as np
+
+    from repro.dynamic import DynamicMSF
+    from repro.obs import collect_phases
+
+    rows = []
+    for graph_name in cells:
+        g = _resolve(graph_name)
+        dyn = DynamicMSF(g)
+        w_probe = float(np.float32(float(np.min(np.asarray(g.weight))) / 2))
+        state = {"present": False}
+
+        def update():
+            if state["present"]:
+                dyn.apply(deletions=[(0, 1, w_probe)])
+            else:
+                dyn.apply(insertions=[(0, 1, w_probe)])
+            state["present"] = not state["present"]
+
+        def resolve():
+            dyn.resolve()
+
+        resolve_us, update_us, ratio = paired_time(resolve, update, repeats)
+        # One extra update under a phase collector: the per-op wall split
+        # (tree surgery vs the canonical-mirror memcpy) straight from the
+        # dynamic layer's hooks.
+        with collect_phases() as acc:
+            t0 = time.perf_counter()
+            update()
+            total_us = (time.perf_counter() - t0) * 1e6
+        phases = {k: v * 1e6 for k, v in acc.items()}
+        phases["tree_surgery"] = max(0.0, total_us - sum(phases.values()))
+        rows.append((f"dynamic_resolve_{graph_name}", resolve_us, ""))
+        rows.append((f"dynamic_update_{graph_name}", update_us,
+                     f"update_vs_resolve={ratio:.3f};"
+                     f"updates_per_sec={1e6 / update_us:.1f};"
+                     f"edges={dyn.num_edges}",
+                     phases))
+    return rows

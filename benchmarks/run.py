@@ -142,6 +142,13 @@ def main() -> None:
         cells=(spmm_bench.SMOKE_CELLS if args.smoke
                else spmm_bench.DEFAULT_CELLS),
         repeats=max(args.repeats, 5))
+    # Dynamic-MSF layer: one-edge incremental update vs the full re-solve
+    # it replaces (paired ratios) — the update path's gated headline.
+    from benchmarks import dynamic_bench
+    rows += dynamic_bench.dynamic_rows(
+        cells=(dynamic_bench.SMOKE_CELLS if args.smoke
+               else dynamic_bench.DEFAULT_CELLS),
+        repeats=max(args.repeats, 5))
     # Batched multi-graph engine: serving throughput at batch {1, 8, 64},
     # plus end-to-end solve_many rows (pack + solve + unpack) that see the
     # host-side lane packing costs the engine-only rows cannot.

@@ -57,7 +57,16 @@ SPEEDUP_METRICS = ("speedup_vs_off", "speedup_vs_unopt", "speedup_vs_opt",
                    # batched-engine scale-up ratio (b=64 gps / b=8 gps):
                    # same-run, so runner speed cancels; gates the
                    # throughput-must-not-fall-with-lanes property.
-                   "b64_vs_b8")
+                   "b64_vs_b8",
+                   # dynamic layer: one-edge update vs the full re-solve
+                   # it replaces, same run (benchmarks/dynamic_bench) —
+                   # the incremental path's acceptance ratio.
+                   "update_vs_resolve",
+                   # absolute update throughput: NOT runner-portable, so
+                   # ci.yml pairs it with a generous --override (like the
+                   # latency percentiles) — the gate is for an O(E)->O(E^2)
+                   # mirror regression, not machine noise.
+                   "updates_per_sec")
 
 # Metrics where SMALLER is better: histogram percentile summaries from the
 # obs layer (serve_bench's flush-latency p50/p90/p99).  Absolute

@@ -41,6 +41,11 @@ REQUIRED_METRICS = (
     "mstserve_flush_batch_size",
     "mstserve_queue_depth",
     "mstserve_cache_hits_total",
+    # dynamic layer (benchmarks/dynamic_bench runs in smoke too): update
+    # ops and the epoch-backstop resolves must keep recording.
+    "dynamic_inserts_total",
+    "dynamic_deletes_total",
+    "dynamic_resolves_total",
 )
 
 

@@ -27,6 +27,8 @@ from typing import NamedTuple
 
 import numpy as np
 
+from repro.core.union_find import HostUnionFind
+
 
 class Dendrogram(NamedTuple):
     """Single-linkage merge tree over ``num_points`` leaves.
@@ -60,27 +62,6 @@ class Dendrogram(NamedTuple):
         return self.num_points - self.num_merges
 
 
-class _UnionFind:
-    """Path-halving union-find over point ids, tracking cluster ids."""
-
-    def __init__(self, n: int):
-        self.parent = np.arange(n, dtype=np.int64)
-
-    def find(self, x: int) -> int:
-        p = self.parent
-        while p[x] != x:
-            p[x] = p[p[x]]
-            x = p[x]
-        return int(x)
-
-    def union(self, a: int, b: int) -> bool:
-        ra, rb = self.find(a), self.find(b)
-        if ra == rb:
-            return False
-        self.parent[rb] = ra
-        return True
-
-
 def single_linkage(src, dst, weight, num_points: int) -> Dendrogram:
     """Build the dendrogram from an edge list (the solved EMST).
 
@@ -94,7 +75,7 @@ def single_linkage(src, dst, weight, num_points: int) -> Dendrogram:
     weight = np.asarray(weight, np.float32)
     order = np.lexsort((dst, src, weight))
 
-    uf = _UnionFind(num_points)
+    uf = HostUnionFind(num_points)
     # cluster id currently carried by each root point (scipy convention).
     cluster_of = np.arange(num_points, dtype=np.int64)
     size_of = np.ones(num_points, np.int64)
@@ -139,7 +120,7 @@ def canonical_labels(roots) -> np.ndarray:
 
 
 def _replay_labels(dend: Dendrogram, num_merges: int) -> np.ndarray:
-    uf = _UnionFind(dend.num_points)
+    uf = HostUnionFind(dend.num_points)
     for t in range(num_merges):
         uf.union(int(dend.edge_src[t]), int(dend.edge_dst[t]))
     roots = np.fromiter((uf.find(i) for i in range(dend.num_points)),

@@ -24,7 +24,8 @@ from repro.core.mst import (
     mst_optimized,
     mst_unoptimized,
 )
-from repro.core.union_find import pointer_jump, count_components
+from repro.core.union_find import (HostUnionFind, pointer_jump,
+                                   count_components)
 from repro.core.registry import ENGINES, EngineSpec, validate_engine
 from repro.core.options import MESH_AUTO, SolveOptions
 from repro.core.solver import (MSTSolver, SolverStats, default_solver,
@@ -60,4 +61,5 @@ __all__ = [
     "rank_edges",
     "pointer_jump",
     "count_components",
+    "HostUnionFind",
 ]

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.union_find import HostUnionFind
+
 
 def kruskal_numpy(src, dst, weight, num_nodes):
     """Returns (mst_mask, total_weight, num_components)."""
@@ -15,31 +17,13 @@ def kruskal_numpy(src, dst, weight, num_nodes):
     dst = np.asarray(dst)
     weight = np.asarray(weight)
     order = np.argsort(weight, kind="stable")
-    parent = np.arange(num_nodes)
-    rank = np.zeros(num_nodes, np.int32)
-
-    def find(x):
-        root = x
-        while parent[root] != root:
-            root = parent[root]
-        while parent[x] != root:  # path compression
-            parent[x], x = root, parent[x]
-        return root
+    uf = HostUnionFind(num_nodes)
 
     mask = np.zeros(src.shape[0], bool)
-    n_comp = num_nodes
     for e in order:
-        a, b = find(src[e]), find(dst[e])
-        if a == b:
-            continue
-        if rank[a] < rank[b]:
-            a, b = b, a
-        parent[b] = a
-        if rank[a] == rank[b]:
-            rank[a] += 1
-        mask[e] = True
-        n_comp -= 1
-        if n_comp == 1:
-            break
+        if uf.union(int(src[e]), int(dst[e])):
+            mask[e] = True
+            if uf.components == 1:
+                break
     total = float(weight[mask].sum())
-    return mask, total, n_comp
+    return mask, total, uf.components

@@ -70,6 +70,7 @@ from repro.core.engine import (
 from repro.core.mst import _bucket_cover
 from repro.graphs.csr_device import EllGraph, ell_from_edges, \
     ell_from_edges_host
+from repro.kernels.gnn_spmm.ops import gather_segment_min
 
 
 def spmm_candidates(ell: EllGraph, parent) -> jnp.ndarray:
@@ -103,9 +104,52 @@ def spmm_candidates(ell: EllGraph, parent) -> jnp.ndarray:
     return best
 
 
-@functools.partial(jax.jit, static_argnames=("variant", "max_lock_waves"))
+def spmm_candidates_kernel(ell: EllGraph, parent) -> jnp.ndarray:
+    """``spmm_candidates`` through the Pallas ``gather_segment_min``
+    kernel — the TPU path of the same (min, cut-filter) semiring.
+
+    The ELL block plus overflow tail flatten to one slot stream
+    (row, col, key); the kernel's cut filter and scatter-min see exactly
+    the per-component key multisets the jnp path reduces:
+
+      * empty ELL slots carry ``col == V`` and a SENT key — the V+1-row
+        label append inside ``gather_segment_min`` keeps the gather in
+        bounds, and SENT never wins a min (the jnp path's fill-gather
+        reaches the same inertness via ``fill_value=v``);
+      * overflow pad slots are (V, V, SENT): self-labeled at the
+        sentinel row, so the cut filter drops them (jnp: clip + self-pair
+        filter).
+
+    Identical contribution multisets + min associativity = bit-identical
+    ``best`` vectors, which the kernel-path conformance cell pins.
+    """
+    v = ell.num_rows
+    d = ell.ell_col.shape[1]
+    row = jnp.broadcast_to(
+        jnp.arange(v, dtype=jnp.int32)[:, None], (v, d)).reshape(-1)
+    col = ell.ell_col.reshape(-1)
+    key = ell.ell_key.reshape(-1)
+    if ell.ovf_row.shape[0]:
+        row = jnp.concatenate([row, ell.ovf_row])
+        col = jnp.concatenate([col, ell.ovf_col])
+        key = jnp.concatenate([key, ell.ovf_key])
+    # Slots are component-labeled through ``parent`` itself, so the
+    # kernel's out[label] accumulator IS the per-component best vector.
+    return gather_segment_min(row, col, key, parent, num_nodes=v)
+
+
+def _resolve_kernel(kernel: Optional[bool]) -> bool:
+    """Backend gate: the Pallas path is the default on TPU only (on CPU
+    the kernel runs in interpret mode — correct, pinned by conformance,
+    but far slower than the jnp reduction)."""
+    return jax.default_backend() == "tpu" if kernel is None else \
+        bool(kernel)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("variant", "max_lock_waves", "kernel"))
 def _spmm_msf_jit(graph: Graph, ell: EllGraph, order, *, variant: str,
-                  max_lock_waves: int) -> MSTResult:
+                  max_lock_waves: int, kernel: bool = False) -> MSTResult:
     """compaction=0 driver: one jitted while_loop over a static layout.
 
     The covered bit is the edge-list engines' scan bookkeeping; the
@@ -118,8 +162,10 @@ def _spmm_msf_jit(graph: Graph, ell: EllGraph, order, *, variant: str,
     def cond(s):
         return ~s.done
 
+    select = spmm_candidates_kernel if kernel else spmm_candidates
+
     def body(s):
-        best = spmm_candidates(ell, s.parent)
+        best = select(ell, s.parent)
         return hook_commit_round(s, best, order, graph.src, graph.dst,
                                  variant=variant,
                                  max_lock_waves=max_lock_waves)
@@ -130,11 +176,12 @@ def _spmm_msf_jit(graph: Graph, ell: EllGraph, order, *, variant: str,
 
 @functools.partial(
     jax.jit, static_argnames=("variant", "max_lock_waves", "compaction",
-                              "contraction"))
+                              "contraction", "kernel"))
 def _spmm_epoch(parent, committed, mst_mask, num_rounds, num_waves,
                 ell: EllGraph, esrc, edst, ekey, order_tbl, full_src,
                 full_dst, root_map, num_active, *, variant: str,
-                max_lock_waves: int, compaction: int, contraction: bool):
+                max_lock_waves: int, compaction: int, contraction: bool,
+                kernel: bool = False):
     """One spmm epoch at fixed layout shapes (host epoch loop body).
 
     Rounds reduce over the CURRENT ELL layout until the forest completes
@@ -173,9 +220,11 @@ def _spmm_epoch(parent, committed, mst_mask, num_rounds, num_waves,
         cadence = (st.num_rounds % compaction) == 0
         return ~st.done & ~(cadence & shrink & (in_epoch > 0))
 
+    select = spmm_candidates_kernel if kernel else spmm_candidates
+
     def body(c):
         st, live_e, live_v, in_epoch = c
-        best = spmm_candidates(ell, st.parent)
+        best = select(ell, st.parent)
         st = hook_commit_round(st, best, order_tbl, full_src, full_dst,
                                rmap, variant=variant,
                                max_lock_waves=max_lock_waves)
@@ -241,7 +290,7 @@ def _spmm_slice(nsrc, ndst, rank, order, perm, live, *, new_e: int):
 
 def _spmm_host_loop(graph: Graph, rank, order, *, variant: str,
                     max_lock_waves: int, compaction: int,
-                    contraction: bool) -> MSTResult:
+                    contraction: bool, kernel: bool = False) -> MSTResult:
     """Host epoch loop: rebuild the ELL layout between epochs.
 
     The spmm analogue of ``mst._contracted_host_loop``: buffer shapes ARE
@@ -278,7 +327,7 @@ def _spmm_host_loop(graph: Graph, rank, order, *, variant: str,
                 src, dst, rk, order_tbl, graph.src, graph.dst, root_map,
                 num_active, variant=variant,
                 max_lock_waves=max_lock_waves, compaction=compaction,
-                contraction=contraction)
+                contraction=contraction, kernel=kernel)
         if bool(done):
             break
         epochs += 1
@@ -318,7 +367,8 @@ def _spmm_host_loop(graph: Graph, rank, order, *, variant: str,
 
 def spmm_msf(graph: Graph, *, num_nodes: Optional[int] = None,
              variant: str = "cas", max_lock_waves: int = 16,
-             compaction: int = 0, contraction: bool = False) -> MSTResult:
+             compaction: int = 0, contraction: bool = False,
+             kernel: Optional[bool] = None) -> MSTResult:
     """Borůvka MSF via per-round semiring SpMV candidate selection.
 
     Args:
@@ -333,20 +383,28 @@ def spmm_msf(graph: Graph, *, num_nodes: Optional[int] = None,
       contraction: additionally relabel supervertices at epoch boundaries
         so the ELL ROW count — the per-round cost — shrinks too.
         Requires ``compaction > 0``.
+      kernel: route candidate selection through the Pallas
+        ``gather_segment_min`` kernel instead of the jnp reduction.
+        None (default) is the backend gate: kernel on TPU, jnp
+        elsewhere.  True forces the kernel (interpret mode off-TPU —
+        the conformance cell's path); both paths are bit-identical.
     """
     graph = ensure_sized(graph, num_nodes)
     validate_variant(variant)
     if contraction and not compaction:
         raise ValueError("contraction requires compaction > 0 "
                          "(layout rebuilds happen at epoch boundaries)")
+    use_kernel = _resolve_kernel(kernel)
     rank, order = rank_edges_host(graph.weight)
     if compaction:
         return _spmm_host_loop(graph, rank, order, variant=variant,
                                max_lock_waves=max_lock_waves,
                                compaction=compaction,
-                               contraction=contraction)
+                               contraction=contraction,
+                               kernel=use_kernel)
     with annotate("ell_build"), _obs_phase("ell_build"):
         ell = ell_from_edges_host(graph.src, graph.dst, rank,
                                   graph.num_nodes)
     return _spmm_msf_jit(graph, ell, order, variant=variant,
-                         max_lock_waves=max_lock_waves)
+                         max_lock_waves=max_lock_waves,
+                         kernel=use_kernel)

@@ -1,15 +1,73 @@
-"""Vectorized union-find primitives ("find" / "components[]" of the paper).
+"""Union-find primitives ("find" / "components[]" of the paper).
 
-The paper's ``find(components[], v)`` walks parent pointers to a root.  On
-TPU the natural equivalent is *pointer jumping* (Shiloach-Vishkin shortcut):
-``parent <- parent[parent]`` until fixpoint, which fully path-compresses every
-vertex in O(log depth) vector steps.  After each Borůvka round we compress to
-depth 1, so the per-round ``find`` is a single gather.
+Two flavours live here:
+
+* Device-side pointer jumping (Shiloach-Vishkin shortcut): ``parent <-
+  parent[parent]`` until fixpoint fully path-compresses every vertex in
+  O(log depth) vector steps.  After each Borůvka round we compress to
+  depth 1, so the per-round ``find`` is a single gather.
+
+* ``HostUnionFind``: the scalar numpy structure every host-side replay
+  path shares — the Kruskal oracle (``core/oracle.py``), single-linkage
+  dendrogram replay (``cluster/linkage.py``) and the dynamic-MSF layer
+  (``dynamic/``).  Path halving + union by size, amortized near-O(1).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+class HostUnionFind:
+    """Scalar union-find over vertex ids (host path).
+
+    Path-halving ``find`` plus union-by-size keeps trees logarithmic, so
+    per-op cost is inverse-Ackermann amortized.  ``components`` tracks the
+    live component count so callers don't re-derive it.
+    """
+
+    __slots__ = ("parent", "size", "components")
+
+    def __init__(self, n: int):
+        self.parent = np.arange(n, dtype=np.int64)
+        self.size = np.ones(n, dtype=np.int64)
+        self.components = n
+
+    def find(self, x: int) -> int:
+        p = self.parent
+        while p[x] != x:
+            p[x] = p[p[x]]  # path halving
+            x = p[x]
+        return int(x)
+
+    def union(self, a: int, b: int) -> bool:
+        """Merge the components of ``a`` and ``b``; False if already one."""
+        ra, rb = self.find(a), self.find(b)
+        if ra == rb:
+            return False
+        if self.size[ra] < self.size[rb]:
+            ra, rb = rb, ra
+        self.parent[rb] = ra
+        self.size[ra] += self.size[rb]
+        self.components -= 1
+        return True
+
+    def connected(self, a: int, b: int) -> bool:
+        return self.find(a) == self.find(b)
+
+    def size_of(self, x: int) -> int:
+        """Size of ``x``'s component."""
+        return int(self.size[self.find(x)])
+
+    def roots(self) -> np.ndarray:
+        """(V,) fully-compressed root array (vectorized pointer jumping)."""
+        p = self.parent.copy()
+        while True:
+            pp = p[p]
+            if np.array_equal(pp, p):
+                return p
+            p = pp
 
 
 def pointer_jump(parent: jnp.ndarray) -> jnp.ndarray:

@@ -1,0 +1,34 @@
+"""Dynamic-MSF layer: a live minimum spanning forest under streaming
+edge updates (DESIGN.md §5a).
+
+The static engines re-solve from scratch; this package maintains the
+solved forest *incrementally*:
+
+* **insertions** via the cycle rule — add the edge, find the maximum
+  edge on the tree path between its endpoints under the ``(w, u, v)``
+  total order, swap if the new edge wins;
+* **deletions** via reconnection — drop the tree edge, one
+  nearest-cross-component bridge step over the affected cut (the
+  ``cluster/emst.py`` bridge idiom, scoped to the smaller side);
+* an **epoch-based full re-solve backstop** routed through the planned
+  :class:`~repro.core.solver.MSTSolver` (plan-cached, so repeated
+  backstop solves at a stable pow2 edge bucket don't retrace).
+
+Because the maintained order is the exact ``(weight, edge_id)`` rank the
+engines and the Kruskal oracle share (canonical ``u < v`` endpoints
+sorted by ``(w, u, v)``), the maintained forest is *bit-identical* to a
+fresh solve after every operation — which is what
+``tests/test_dynamic.py`` pins.
+
+    from repro.dynamic import DynamicMSF
+
+    dyn = DynamicMSF(graph)
+    delta = dyn.apply(insertions=[(u, v, w)], deletions=[(a, b, w2)])
+    delta.added, delta.removed      # tree-edge churn as (w, u, v) keys
+"""
+from repro.dynamic.delta import MSTDelta
+from repro.dynamic.forest import DynamicForest, EdgeKey, edge_key
+from repro.dynamic.msf import DynamicMSF
+
+__all__ = ["DynamicForest", "DynamicMSF", "MSTDelta", "EdgeKey",
+           "edge_key"]

@@ -1,0 +1,61 @@
+"""Delta wire format for dynamic-MSF updates (DESIGN.md §5a).
+
+An update's observable effect on the served forest is the pair of
+tree-edge sets it added and removed — everything else (the surviving
+forest) the consumer already holds.  Keys are canonical ``(w, u, v)``
+triples (``u <= v``, float32 weight), reported in ``(w, u, v)`` order so
+deltas compare exactly across runs.
+
+JSON shape (``to_json``)::
+
+    {"version": 3, "num_components": 1, "total_weight": 41.25,
+     "resolved": false,
+     "added":   [[u, v, w], ...],   # sorted by (w, u, v)
+     "removed": [[u, v, w], ...]}
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+from repro.dynamic.forest import EdgeKey
+
+
+@dataclass(frozen=True)
+class MSTDelta:
+    """Net tree-edge churn of one ``apply``/``update`` call.
+
+    Attributes:
+      added/removed: net tree-edge keys, (w, u, v)-sorted.  An edge that
+        entered and left the tree within one batch cancels out.
+      version: forest version after the update (monotonic per graph).
+      num_components: component count after the update.
+      total_weight: forest weight after the update (float32 accumulation
+        over the canonical edge order, like the oracle).
+      resolved: True when the epoch backstop ran a full re-solve inside
+        this update.
+    """
+
+    added: Tuple[EdgeKey, ...]
+    removed: Tuple[EdgeKey, ...]
+    version: int
+    num_components: int
+    total_weight: float
+    resolved: bool = False
+
+    @property
+    def churn(self) -> int:
+        return len(self.added) + len(self.removed)
+
+    def to_json(self) -> dict:
+        return {
+            "version": self.version,
+            "num_components": self.num_components,
+            "total_weight": self.total_weight,
+            "resolved": self.resolved,
+            "added": [[u, v, w] for (w, u, v) in self.added],
+            "removed": [[u, v, w] for (w, u, v) in self.removed],
+        }
+
+
+__all__ = ["MSTDelta"]

@@ -1,0 +1,297 @@
+"""Rooted-forest structure for dynamic MSF maintenance (DESIGN.md §5a).
+
+The forest is the *certificate* side of the dynamic layer: a rooted
+spanning forest of the current graph, minimum under the strict
+``(w, u, v)`` total order (canonical ``u <= v`` endpoints).  Strictness
+is what makes the MSF unique — duplicate weights are disambiguated by
+endpoints, exactly like the engines' (weight, edge_id) rank over the
+canonically sorted edge list — so the cycle and cut rules below maintain
+*the* minimum forest, not *a* minimum forest.
+
+Representation (all host-side, scalar — update paths are inherently
+sequential, like the linkage replay):
+
+* ``_inc[v]``: every edge instance incident to ``v`` as a
+  key -> multiplicity dict (parallel duplicates share a key).
+* ``_tnbr[v]``: tree adjacency, neighbor -> key (a tree has at most one
+  edge per vertex pair).
+* ``_parent/_pedge/_depth``: the rooting.  Depths within one component
+  differ from true root distance by a uniform offset only (cuts offset
+  the detached subtree; every attach re-roots its side with fresh
+  depths), so the two-pointer LCA climb in ``_path_max`` stays correct.
+* ``uf``: :class:`~repro.core.union_find.HostUnionFind` for O(α)
+  connectivity queries on the insert path.
+
+Costs: insert is O(path) via the LCA climb plus O(moved subtree) on a
+swap; delete is O(min-side · avg-degree) — the bidirectional
+interleaved walk enumerates the *smaller* half of the cut before the
+bridge scan, the same trick EMST escalation uses to bound bridge work.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.union_find import HostUnionFind
+from repro.obs import phase as _obs_phase
+
+# Canonical edge identity: (weight, min endpoint, max endpoint), with the
+# weight squeezed through float32 so keys compare exactly like the
+# float32 device arrays they mirror.
+EdgeKey = Tuple[float, int, int]
+
+
+def edge_key(u: int, v: int, w: float) -> EdgeKey:
+    """Canonical ``(w, u, v)`` key with ``u <= v`` and float32 weight."""
+    u, v = int(u), int(v)
+    if u > v:
+        u, v = v, u
+    return (float(np.float32(w)), u, v)
+
+
+class DynamicForest:
+    """Minimum spanning forest under single-edge inserts and deletes.
+
+    Both mutators return ``(added, removed)`` lists of tree-edge keys
+    (each of length 0 or 1) so callers can stream deltas without
+    snapshotting the tree set.
+    """
+
+    def __init__(self, num_nodes: int):
+        n = int(num_nodes)
+        if n <= 0:
+            raise ValueError(f"num_nodes must be positive, got {n}")
+        self.num_nodes = n
+        self._inc: List[Dict[EdgeKey, int]] = [dict() for _ in range(n)]
+        self._tnbr: List[Dict[int, EdgeKey]] = [dict() for _ in range(n)]
+        self._parent: List[int] = list(range(n))
+        self._pedge: List[Optional[EdgeKey]] = [None] * n
+        self._depth: List[int] = [0] * n
+        self.uf = HostUnionFind(n)
+        self.num_components = n
+        self.num_edges = 0  # edge instances, counting multiplicity
+        self.tree: Set[EdgeKey] = set()
+
+    # -- construction ---------------------------------------------------
+
+    @classmethod
+    def from_solved(cls, num_nodes: int, src, dst, weight,
+                    mask) -> "DynamicForest":
+        """Build from an edge list plus a solved MSF mask (bulk path)."""
+        f = cls(num_nodes)
+        src = np.asarray(src)
+        dst = np.asarray(dst)
+        weight = np.asarray(weight, np.float32)
+        mask = np.asarray(mask, bool)
+        for i in range(src.shape[0]):
+            key = edge_key(int(src[i]), int(dst[i]), float(weight[i]))
+            f._add_instance(key)
+            if mask[i]:
+                _, u, v = key
+                f._tnbr[u][v] = key
+                f._tnbr[v][u] = key
+                f.tree.add(key)
+                f.uf.union(u, v)
+                f.num_components -= 1
+        # Root every component with exact depths (iterative DFS).
+        visited = [False] * num_nodes
+        for r in range(num_nodes):
+            if visited[r]:
+                continue
+            visited[r] = True
+            stack = [r]
+            while stack:
+                x = stack.pop()
+                for nb, k in f._tnbr[x].items():
+                    if not visited[nb]:
+                        visited[nb] = True
+                        f._parent[nb] = x
+                        f._pedge[nb] = k
+                        f._depth[nb] = f._depth[x] + 1
+                        stack.append(nb)
+        return f
+
+    # -- queries --------------------------------------------------------
+
+    def multiplicity(self, key: EdgeKey) -> int:
+        return self._inc[key[1]].get(key, 0)
+
+    def connected(self, u: int, v: int) -> bool:
+        return self.uf.connected(u, v)
+
+    def _check(self, u: int, v: int) -> None:
+        n = self.num_nodes
+        if not (0 <= u < n and 0 <= v < n):
+            raise ValueError(f"endpoint out of range: ({u}, {v}), V={n}")
+
+    # -- mutators -------------------------------------------------------
+
+    def insert_edge(self, u: int, v: int, w: float):
+        """Cycle rule: returns ``(added, removed)`` tree-edge key lists."""
+        self._check(int(u), int(v))
+        key = edge_key(u, v, w)
+        _, u, v = key
+        self._add_instance(key)
+        if u == v:
+            return [], []  # self-loops never enter any spanning forest
+        if self.uf.find(u) != self.uf.find(v):
+            # New bridge between components: re-root the smaller side.
+            a, b = (v, u) if self.uf.size_of(u) < self.uf.size_of(v) \
+                else (u, v)
+            self._attach(a, b, key)
+            self.uf.union(u, v)
+            self.num_components -= 1
+            return [key], []
+        with _obs_phase("path_find"):
+            mx = self._path_max(u, v)
+        if key < mx:
+            c, _ = self._cut(mx)
+            # The cut edge lies on the u-v tree path, so exactly one
+            # endpoint landed in the detached subtree (rooted at c).
+            x = u if self._root_of(u) == c else v
+            y = v if x == u else u
+            self._attach(y, x, key)
+            return [key], [mx]
+        return [], []
+
+    def delete_edge(self, u: int, v: int, w: float):
+        """Cut rule + bridge reconnection; raises KeyError if absent."""
+        self._check(int(u), int(v))
+        key = edge_key(u, v, w)
+        _, u, v = key
+        if not self._remove_instance(key):
+            raise KeyError(f"no such edge: {key}")
+        if u == v or key not in self.tree:
+            return [], []
+        if self.multiplicity(key) > 0:
+            return [], []  # an identical parallel copy keeps the tree
+        c, p = self._cut(key)
+        with _obs_phase("reconnect"):
+            side = self._smaller_side(c, p)
+            comp_root = self.uf.find(c)  # pre-split root spans both halves
+            best = None
+            for x in side:
+                for k in self._inc[x]:
+                    ka, kb = k[1], k[2]
+                    other = kb if ka == x else ka
+                    if other in side or self.uf.find(other) != comp_root:
+                        continue
+                    if best is None or k < best:
+                        best = k
+        if best is not None:
+            ba, bb = best[1], best[2]
+            x, y = (ba, bb) if ba in side else (bb, ba)
+            self._attach(y, x, best)
+            return [best], [key]
+        # No bridge: the component genuinely split.
+        self.num_components += 1
+        self._rebuild_uf()
+        return [], [key]
+
+    # -- internals ------------------------------------------------------
+
+    def _add_instance(self, key: EdgeKey) -> None:
+        _, u, v = key
+        self._inc[u][key] = self._inc[u].get(key, 0) + 1
+        if v != u:
+            self._inc[v][key] = self._inc[v].get(key, 0) + 1
+        self.num_edges += 1
+
+    def _remove_instance(self, key: EdgeKey) -> bool:
+        _, u, v = key
+        m = self._inc[u].get(key, 0)
+        if m == 0:
+            return False
+        if m == 1:
+            del self._inc[u][key]
+            if v != u:
+                del self._inc[v][key]
+        else:
+            self._inc[u][key] = m - 1
+            if v != u:
+                self._inc[v][key] = m - 1
+        self.num_edges -= 1
+        return True
+
+    def _root_of(self, x: int) -> int:
+        par = self._parent
+        while par[x] != x:
+            x = par[x]
+        return x
+
+    def _path_max(self, u: int, v: int) -> EdgeKey:
+        """Maximum-key edge on the tree path u..v (two-pointer climb)."""
+        par, ped, dep = self._parent, self._pedge, self._depth
+        a, b = u, v
+        mx: Optional[EdgeKey] = None
+        while a != b:
+            if dep[a] >= dep[b]:
+                e = ped[a]
+                if mx is None or e > mx:  # type: ignore[operator]
+                    mx = e
+                a = par[a]
+            else:
+                e = ped[b]
+                if mx is None or e > mx:  # type: ignore[operator]
+                    mx = e
+                b = par[b]
+        assert mx is not None
+        return mx
+
+    def _cut(self, key: EdgeKey) -> Tuple[int, int]:
+        """Remove tree edge ``key``; returns (detached child, parent)."""
+        _, x, y = key
+        c, p = (x, y) if self._pedge[x] == key else (y, x)
+        del self._tnbr[x][y]
+        del self._tnbr[y][x]
+        self.tree.discard(key)
+        self._parent[c] = c
+        self._pedge[c] = None
+        return c, p
+
+    def _attach(self, a: int, b: int, key: EdgeKey) -> None:
+        """Re-root ``b``'s tree at ``b`` and hang it under ``a``."""
+        par, ped, dep, tn = self._parent, self._pedge, self._depth, \
+            self._tnbr
+        par[b] = a
+        ped[b] = key
+        dep[b] = dep[a] + 1
+        # key is not in tn yet, so the DFS cannot cross into a's side.
+        stack = [b]
+        while stack:
+            x = stack.pop()
+            px = par[x]
+            for nb, k in tn[x].items():
+                if nb != px:
+                    par[nb] = x
+                    ped[nb] = k
+                    dep[nb] = dep[x] + 1
+                    stack.append(nb)
+        tn[a][b] = key
+        tn[b][a] = key
+        self.tree.add(key)
+
+    def _smaller_side(self, c: int, p: int) -> Set[int]:
+        """Vertices of whichever cut side exhausts first (interleaved)."""
+        tn = self._tnbr
+        seen: Tuple[Set[int], Set[int]] = ({c}, {p})
+        stacks: Tuple[List[int], List[int]] = ([c], [p])
+        while True:
+            for i in (0, 1):
+                if not stacks[i]:
+                    return seen[i]
+                x = stacks[i].pop()
+                for nb in tn[x]:
+                    if nb not in seen[i]:
+                        seen[i].add(nb)
+                        stacks[i].append(nb)
+
+    def _rebuild_uf(self) -> None:
+        uf = HostUnionFind(self.num_nodes)
+        for k in self.tree:
+            uf.union(k[1], k[2])
+        self.uf = uf
+
+
+__all__ = ["DynamicForest", "EdgeKey", "edge_key"]

@@ -1,0 +1,310 @@
+"""DynamicMSF: the forest plus the canonical edge-list mirror
+(DESIGN.md §5a).
+
+:class:`~repro.dynamic.forest.DynamicForest` owns the combinatorics;
+this class keeps the *array* view in lockstep: the canonical edge list
+(``u <= v`` endpoints, ``(w, u, v)``-lexsorted, duplicates kept) and the
+aligned MSF mask.  On that ordering the engines' (weight, edge_id) rank
+*is* the ``(w, u, v)`` total order, so ``mask`` is bit-identical to what
+any engine — or the Kruskal oracle — returns for the current graph.
+That's the contract the serving layer hashes and caches against.
+
+Maintenance cost per op is O(E) numpy memcpy (``np.insert``/``delete``
+into the sorted arrays) plus O(log E + ties) to locate the slot —
+microseconds at 100K vertices, versus a full re-solve's milliseconds.
+
+Epoch backstop: after ``resolve_every`` ops the graph is re-solved
+through the planned :class:`~repro.core.solver.MSTSolver`.  The edge
+count is padded to the next pow2 with +inf self-loops (rank-inert: a
+self-loop never hooks, +inf sorts last) so repeated backstop solves hit
+the same plan-cache bucket instead of retracing per edge-count.  A
+mismatch between the fresh mask and the maintained forest increments
+``dynamic_resolve_mismatches_total`` and rebuilds the forest from the
+fresh solve — trust the engines, count the bug.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.options import SolveOptions
+from repro.core.solver import MSTSolver, make_solver
+from repro.core.types import Graph, GraphLike, as_request
+from repro.dynamic.delta import MSTDelta
+from repro.dynamic.forest import DynamicForest, EdgeKey, edge_key
+from repro.obs import phase as _obs_phase
+from repro.obs.metrics import MetricsRegistry
+
+_REGISTRY = MetricsRegistry("dynamic")
+_M_INSERTS = _REGISTRY.counter("dynamic_inserts_total")
+_M_DELETES = _REGISTRY.counter("dynamic_deletes_total")
+_M_SWAPS = _REGISTRY.counter("dynamic_tree_swaps_total")
+_M_SPLITS = _REGISTRY.counter("dynamic_component_splits_total")
+_M_RESOLVES = _REGISTRY.counter("dynamic_resolves_total")
+_M_MISMATCH = _REGISTRY.counter("dynamic_resolve_mismatches_total")
+
+Triple = Tuple[int, int, float]
+
+
+def _pow2_at_least(e: int) -> int:
+    return 1 if e <= 1 else 1 << (e - 1).bit_length()
+
+
+class DynamicMSF:
+    """A live MSF over a mutable edge multiset.
+
+    Args:
+      graph: initial sized graph (or ``(Graph, num_nodes)`` pair).
+      options/solver: the backstop solver; defaults to the single
+        engine.  Pass a shared service solver to share plan caches.
+      resolve_every: op-count epoch threshold for the full re-solve
+        backstop; 0 (default) disables it.
+    """
+
+    def __init__(self, graph: GraphLike, *,
+                 options: Optional[SolveOptions] = None,
+                 solver: Optional[MSTSolver] = None,
+                 resolve_every: int = 0):
+        g = as_request(graph)
+        self.num_nodes = g.num_nodes
+        src = np.asarray(g.src, np.int64)
+        dst = np.asarray(g.dst, np.int64)
+        wgt = np.asarray(g.weight, np.float32)
+        lo = np.minimum(src, dst).astype(np.int32)
+        hi = np.maximum(src, dst).astype(np.int32)
+        with _obs_phase("canonicalize"):
+            order = np.lexsort((hi, lo, wgt))
+        self._su = lo[order]
+        self._sv = hi[order]
+        self._sw = wgt[order]
+        self._solver = solver if solver is not None else make_solver(
+            options if options is not None else SolveOptions())
+        self.resolve_every = int(resolve_every)
+        self._ops_since_resolve = 0
+        self.num_resolves = 0
+        self.num_mismatches = 0
+        self.last_num_rounds = 0  # Borůvka rounds of the latest solve
+        self.version = 0
+        mask = self._fresh_mask()
+        self._smask = mask
+        self.forest = DynamicForest.from_solved(
+            self.num_nodes, self._su, self._sv, self._sw, mask)
+
+    # -- views ----------------------------------------------------------
+
+    @property
+    def num_edges(self) -> int:
+        return int(self._su.shape[0])
+
+    @property
+    def num_components(self) -> int:
+        return self.forest.num_components
+
+    @property
+    def mask(self) -> np.ndarray:
+        """(E,) bool MSF mask over the canonical edge order (copy)."""
+        return self._smask.copy()
+
+    @property
+    def total_weight(self) -> float:
+        return float(self._sw[self._smask].sum())
+
+    def graph(self) -> Graph:
+        """The current canonical graph as a sized (numpy-backed) Graph.
+
+        Edge order is the ``(w, u, v)`` lexsort — the order ``mask``
+        aligns to and the serving layer hashes.
+        """
+        return Graph(self._su, self._sv, self._sw,
+                     num_nodes=self.num_nodes)
+
+    def tree_edges(self) -> Set[EdgeKey]:
+        return set(self.forest.tree)
+
+    # -- updates --------------------------------------------------------
+
+    def apply(self, insertions: Sequence[Triple] = (),
+              deletions: Sequence[Triple] = ()) -> MSTDelta:
+        """Apply a batch (insertions first, then deletions, in order).
+
+        Returns the *net* delta: tree edges that entered and left within
+        the same batch cancel.  Raises KeyError for a deletion of an
+        edge not currently present (the batch up to that point is
+        applied).
+        """
+        insertions = list(insertions)
+        deletions = list(deletions)
+        added: Set[EdgeKey] = set()
+        removed: Set[EdgeKey] = set()
+        resolved = False
+        for (u, v, w) in insertions:
+            key = edge_key(u, v, w)
+            a, r = self.forest.insert_edge(u, v, w)
+            with _obs_phase("canonicalize"):
+                self._insert_sorted(key)
+                self._refresh_flags((key, *a, *r))
+            self._merge(added, removed, a, r)
+            _M_INSERTS.inc()
+            if r:
+                _M_SWAPS.inc(len(r))
+        for (u, v, w) in deletions:
+            key = edge_key(u, v, w)
+            a, r = self.forest.delete_edge(u, v, w)
+            with _obs_phase("canonicalize"):
+                self._delete_sorted(key)
+                self._refresh_flags((key, *a, *r))
+            self._merge(added, removed, a, r)
+            _M_DELETES.inc()
+            if r and not a:
+                _M_SPLITS.inc()
+        self._ops_since_resolve += len(insertions) + len(deletions)
+        if self.resolve_every and \
+                self._ops_since_resolve >= self.resolve_every:
+            before = self.tree_edges()
+            self._full_resolve()
+            resolved = True
+            after = self.forest.tree
+            self._merge(added, removed, after - before, before - after)
+        self.version += 1
+        return MSTDelta(added=tuple(sorted(added)),
+                        removed=tuple(sorted(removed)),
+                        version=self.version,
+                        num_components=self.num_components,
+                        total_weight=self.total_weight,
+                        resolved=resolved)
+
+    def resolve(self) -> MSTDelta:
+        """Force the epoch backstop now (returns any correction delta)."""
+        before = self.tree_edges()
+        self._full_resolve()
+        after = self.forest.tree
+        added: Set[EdgeKey] = set()
+        removed: Set[EdgeKey] = set()
+        self._merge(added, removed, after - before, before - after)
+        self.version += 1
+        return MSTDelta(added=tuple(sorted(added)),
+                        removed=tuple(sorted(removed)),
+                        version=self.version,
+                        num_components=self.num_components,
+                        total_weight=self.total_weight,
+                        resolved=True)
+
+    # -- backstop -------------------------------------------------------
+
+    def _device_graph(self) -> Tuple[Graph, int]:
+        """Canonical graph padded to a pow2 edge bucket (plan reuse).
+
+        Padding is (0, 0, +inf) self-loops: never a candidate for any
+        engine (same component), ranked last (+inf), so the solved mask
+        over the real prefix is unchanged.
+        """
+        e = self.num_edges
+        cap = _pow2_at_least(e)
+        pad = cap - e
+        src = np.concatenate([self._su, np.zeros(pad, np.int32)])
+        dst = np.concatenate([self._sv, np.zeros(pad, np.int32)])
+        wgt = np.concatenate([self._sw,
+                              np.full(pad, np.inf, np.float32)])
+        return Graph(src, dst, wgt, num_nodes=self.num_nodes), e
+
+    def _fresh_mask(self) -> np.ndarray:
+        with _obs_phase("resolve"):
+            g, e = self._device_graph()
+            r = self._solver.solve(g)
+            self.last_num_rounds = int(r.num_rounds)
+            return np.asarray(r.mst_mask, bool)[:e].copy()
+
+    def _full_resolve(self) -> None:
+        mask = self._fresh_mask()
+        self.num_resolves += 1
+        self._ops_since_resolve = 0
+        _M_RESOLVES.inc()
+        fresh = self._mask_tree(mask)
+        if fresh != self.forest.tree:
+            self.num_mismatches += 1
+            _M_MISMATCH.inc()
+            self.forest = DynamicForest.from_solved(
+                self.num_nodes, self._su, self._sv, self._sw, mask)
+        self._smask = mask
+
+    def _mask_tree(self, mask: np.ndarray) -> Set[EdgeKey]:
+        idx = np.flatnonzero(mask)
+        return {(float(self._sw[i]), int(self._su[i]), int(self._sv[i]))
+                for i in idx}
+
+    # -- sorted-array mirror --------------------------------------------
+
+    def _tie_range(self, w: float) -> Tuple[int, int]:
+        w32 = np.float32(w)
+        return (int(np.searchsorted(self._sw, w32, side="left")),
+                int(np.searchsorted(self._sw, w32, side="right")))
+
+    def _insert_sorted(self, key: EdgeKey) -> None:
+        w, u, v = key
+        lo, hi = self._tie_range(w)
+        pos = hi
+        for i in range(lo, hi):  # weight ties: ordered by (u, v)
+            if (int(self._su[i]), int(self._sv[i])) >= (u, v):
+                pos = i
+                break
+        self._su = np.insert(self._su, pos, u)
+        self._sv = np.insert(self._sv, pos, v)
+        self._sw = np.insert(self._sw, pos, np.float32(w))
+        self._smask = np.insert(self._smask, pos, False)
+
+    def _locate(self, key: EdgeKey) -> Tuple[int, int]:
+        """Instance range [i0, i1) of ``key`` in the sorted arrays."""
+        w, u, v = key
+        lo, hi = self._tie_range(w)
+        i0 = i1 = -1
+        for i in range(lo, hi):
+            if int(self._su[i]) == u and int(self._sv[i]) == v:
+                if i0 < 0:
+                    i0 = i
+                i1 = i + 1
+            elif i0 >= 0:
+                break
+        if i0 < 0:
+            raise KeyError(f"edge not in canonical arrays: {key}")
+        return i0, i1
+
+    def _delete_sorted(self, key: EdgeKey) -> None:
+        i0, i1 = self._locate(key)
+        self._su = np.delete(self._su, i1 - 1)
+        self._sv = np.delete(self._sv, i1 - 1)
+        self._sw = np.delete(self._sw, i1 - 1)
+        self._smask = np.delete(self._smask, i1 - 1)
+
+    def _refresh_flags(self, keys: Iterable[EdgeKey]) -> None:
+        """Re-derive mask flags for every instance of the given keys.
+
+        Of duplicate instances only the *first* can be in the forest
+        (later identical instances close a cycle under the (weight,
+        edge_id) rank) — matching the oracle's mask bit for bit.
+        """
+        for key in set(keys):
+            if self.forest.multiplicity(key) == 0:
+                continue  # just deleted entirely; no instances remain
+            i0, i1 = self._locate(key)
+            self._smask[i0:i1] = False
+            if key in self.forest.tree:
+                self._smask[i0] = True
+
+    @staticmethod
+    def _merge(added: Set[EdgeKey], removed: Set[EdgeKey],
+               new_added: Iterable[EdgeKey],
+               new_removed: Iterable[EdgeKey]) -> None:
+        for k in new_removed:
+            if k in added:
+                added.discard(k)
+            else:
+                removed.add(k)
+        for k in new_added:
+            if k in removed:
+                removed.discard(k)
+            else:
+                added.add(k)
+
+
+__all__ = ["DynamicMSF"]

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -34,6 +35,8 @@ import numpy as np
 
 from repro.core import MSTSolver, SolveOptions, make_solver
 from repro.core.solver import legacy_options
+from repro.dynamic.delta import MSTDelta
+from repro.dynamic.msf import DynamicMSF
 from repro.core.types import Graph, GraphLike, as_request, ensure_sized
 from repro.graphs.batching import pack_graphs, unpack_results
 from repro.obs.exporter import MetricsExporter
@@ -145,12 +148,24 @@ class ServiceStats:
             "mstserve_cluster_cache_hits_total")
         self.c_cluster_escalations = r.counter(
             "mstserve_cluster_escalations_total")
+        self.c_update_requests = r.counter("mstserve_update_requests_total")
+        self.c_update_inserts = r.counter("mstserve_update_ops_total",
+                                          kind="insert")
+        self.c_update_deletes = r.counter("mstserve_update_ops_total",
+                                          kind="delete")
+        self.c_update_tree_added = r.counter(
+            "mstserve_update_tree_added_total")
+        self.c_update_tree_removed = r.counter(
+            "mstserve_update_tree_removed_total")
+        self.c_update_resolves = r.counter(
+            "mstserve_update_resolves_total")
         self.g_queue_depth = r.gauge("mstserve_queue_depth")
         self.g_hit_rate = r.gauge("mstserve_cache_hit_rate")
         self.h_flush_batch = r.histogram("mstserve_flush_batch_size",
                                          buckets=BATCH_BUCKETS)
         self.h_flush_latency = r.histogram("mstserve_flush_latency_us")
         self.h_pack = r.histogram("mstserve_pack_latency_us")
+        self.h_update_latency = r.histogram("mstserve_update_latency_us")
 
     # -- legacy int views ---------------------------------------------------
 
@@ -186,6 +201,10 @@ class ServiceStats:
     @property
     def cluster_cache_hits(self) -> int:
         return int(self.c_cluster_cache_hits.value)
+
+    @property
+    def updates(self) -> int:
+        return int(self.c_update_requests.value)
 
     @property
     def cluster_escalations(self) -> int:
@@ -275,6 +294,15 @@ class MSTService:
         self.max_batch = options.max_batch  # None = unbounded buckets
         self.cache_size = int(cache_size)
         self._cache: "OrderedDict[str, MSTResponse]" = OrderedDict()
+        # Guards both LRUs *and* the update() put-new/pop-old pair: the
+        # refresh must be atomic so no concurrent solve() ever observes
+        # the cache mid-swap (S3 of DESIGN.md §5a).  RLock because
+        # _cache_put is also called with the lock already held.
+        self._cache_lock = threading.RLock()
+        # Dynamic registrations: graph_id -> {"msf": DynamicMSF,
+        # "key": current content hash of the canonical graph}.
+        self._dynamic: Dict[int, Dict] = {}
+        self._next_graph_id = 0
         # Clustering entries (dendrogram + escalation stats) live in their
         # own LRU of the same capacity: one clustering request can imply
         # several graph solves, so the two working sets shouldn't thrash
@@ -534,6 +562,106 @@ class MSTService:
                 self._unclaimed.append(r)
         return [mine[i] for i in sorted(ids)]
 
+    # -- dynamic graphs (DESIGN.md §5a) -------------------------------------
+
+    def register_dynamic(self, graph: GraphLike, *,
+                         resolve_every: int = 0) -> int:
+        """Register a mutable graph for streaming updates.
+
+        Solves it once (through this service's solver, so plan caches are
+        shared), caches the result under the canonical graph's content
+        hash, and returns a ``graph_id`` for :meth:`update`.  The cached
+        entry is keyed by the *canonical* edge order (``u <= v``,
+        ``(w, u, v)``-lexsorted) — the order ``DynamicMSF`` maintains.
+
+        ``resolve_every`` is the epoch backstop threshold (ops between
+        full re-solves; 0 disables).
+        """
+        dyn = DynamicMSF(as_request(graph), solver=self.solver,
+                         resolve_every=resolve_every)
+        gid = self._next_graph_id
+        self._next_graph_id += 1
+        entry: Dict = {"msf": dyn}
+        self._refresh_dynamic_entry(entry, dyn)
+        self._dynamic[gid] = entry
+        return gid
+
+    def dynamic(self, graph_id: int) -> DynamicMSF:
+        """The live :class:`DynamicMSF` behind a registered graph id
+        (read its ``graph()``/``mask``/``tree_edges()`` views; mutate only
+        through :meth:`update` so the cache stays in lockstep)."""
+        return self._dynamic[graph_id]["msf"]
+
+    def update(self, graph_id: int, insertions: Sequence = (),
+               deletions: Sequence = ()) -> MSTDelta:
+        """Apply edge updates to a registered graph; returns the delta.
+
+        Insertions/deletions are ``(u, v, w)`` triples (insertions
+        applied first, in order).  The maintained forest stays
+        bit-identical to a fresh solve of the mutated graph, and the
+        result cache is *refreshed*, not evicted: the entry moves to the
+        new structure hash atomically under the cache lock, so a
+        concurrent ``solve()`` observes either the old hash -> old MST
+        or the new hash -> new MST, never a mix.  Updates to one
+        ``graph_id`` must be serialized by the caller; updates to
+        different ids and concurrent solves are safe.
+        """
+        entry = self._dynamic[graph_id]
+        dyn: DynamicMSF = entry["msf"]
+        t0 = now_us()
+        sampled = self.sampler.sample()
+        with collect_phases() as acc:
+            delta = dyn.apply(insertions, deletions)
+            t_apply = now_us()
+            self._refresh_dynamic_entry(entry, dyn)
+        t1 = now_us()
+        st = self.stats
+        st.c_update_requests.inc()
+        st.c_update_inserts.inc(len(tuple(insertions)))
+        st.c_update_deletes.inc(len(tuple(deletions)))
+        st.c_update_tree_added.inc(len(delta.added))
+        st.c_update_tree_removed.inc(len(delta.removed))
+        if delta.resolved:
+            st.c_update_resolves.inc()
+        st.h_update_latency.observe(t1 - t0)
+        if sampled:
+            root = Span("mst_update", t0_us=t0, t1_us=t1,
+                        attrs={"graph_id": graph_id,
+                               "version": delta.version,
+                               "churn": delta.churn,
+                               "resolved": delta.resolved})
+            apply_span = root.child("apply", t0, t_apply)
+            for name, secs in acc.items():
+                apply_span.attrs[f"{name}_us"] = secs * 1e6
+            root.child("cache_refresh", t_apply, t1)
+            self.flight.record(root)
+        return delta
+
+    def _refresh_dynamic_entry(self, entry: Dict, dyn: DynamicMSF) -> str:
+        """Cache the dynamic graph's current MST; drop the stale entry.
+
+        Put-new, pop-old AND the entry's key swing happen under one lock
+        hold: a reader holding the lock always finds ``entry["key"]``
+        present in the cache, and never observes the swap mid-flight.
+        """
+        g = dyn.graph()
+        resp = MSTResponse(
+            request_id=-1,  # cache template; delivered copies get ids
+            mst_mask=dyn.mask,
+            parent=dyn.forest.uf.roots().astype(np.int32),
+            total_weight=dyn.total_weight,
+            num_components=dyn.num_components,
+            num_rounds=dyn.last_num_rounds,
+            cached=False)
+        new_key = graph_key(g)
+        with self._cache_lock:
+            old_key = entry.get("key")
+            self._cache_put(self._cache, new_key, resp)
+            if old_key is not None and old_key != new_key:
+                self._cache.pop(old_key, None)
+            entry["key"] = new_key
+        return new_key
+
     # -- clustering ---------------------------------------------------------
 
     def cluster(self, points, *, num_clusters: Optional[int] = None,
@@ -627,18 +755,20 @@ class MSTService:
     def _cache_get(self, cache: OrderedDict, key: str):
         if self.cache_size <= 0:
             return None
-        resp = cache.get(key)
-        if resp is not None:
-            cache.move_to_end(key)  # LRU touch
-        return resp
+        with self._cache_lock:
+            resp = cache.get(key)
+            if resp is not None:
+                cache.move_to_end(key)  # LRU touch
+            return resp
 
     def _cache_put(self, cache: OrderedDict, key: str, resp) -> None:
         if self.cache_size <= 0:
             return
-        cache[key] = resp
-        cache.move_to_end(key)
-        while len(cache) > self.cache_size:
-            cache.popitem(last=False)
+        with self._cache_lock:
+            cache[key] = resp
+            cache.move_to_end(key)
+            while len(cache) > self.cache_size:
+                cache.popitem(last=False)
 
     @property
     def cache_len(self) -> int:

@@ -1,0 +1,325 @@
+"""Dynamic-MSF layer (DESIGN.md §5a): update-stream conformance.
+
+THE invariant: after ANY sequence of edge insertions/deletions the
+maintained forest — tree-edge set, canonical mask, component count —
+bit-matches a fresh Kruskal-oracle solve of the mutated graph under the
+``(w, u, v)`` total order.  Deterministic seeded streams here run it on
+all five conformance graph families after *every* operation; the
+hypothesis variant with generated interleavings lives in
+``tests/test_properties.py``.
+
+Also pinned: the serving integration — ``register_dynamic``/``update``
+refresh the content-hash cache entry atomically (put-new/pop-old under
+one lock hold, raced by concurrent ``solve()`` threads), the delta wire
+format, and the ``update_*`` metrics.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.oracle import kruskal_numpy
+from repro.core.types import Graph
+from repro.dynamic import DynamicForest, DynamicMSF, MSTDelta, edge_key
+from repro.serve.mst_service import MSTService, graph_key
+
+from test_conformance import FAMILIES
+
+
+def assert_matches_fresh_solve(dyn: DynamicMSF):
+    """Exact conformance of the maintained state vs a fresh oracle run."""
+    g = dyn.graph()
+    om, ow, oc = kruskal_numpy(g.src, g.dst, g.weight, dyn.num_nodes)
+    np.testing.assert_array_equal(dyn._smask, om)
+    fresh = {(float(g.weight[i]), int(g.src[i]), int(g.dst[i]))
+             for i in np.flatnonzero(om)}
+    assert fresh == dyn.forest.tree
+    assert oc == dyn.num_components
+    assert np.isclose(dyn.total_weight, ow, rtol=1e-5)
+
+
+def _stream(dyn: DynamicMSF, graph, seed: int, steps: int):
+    """Random interleaved insert/delete stream over the live edge set,
+    oracle-checked after every single operation."""
+    rng = np.random.default_rng(seed)
+    n = dyn.num_nodes
+    live = [(int(u), int(v), float(np.float32(w)))
+            for u, v, w in zip(np.asarray(graph.src),
+                               np.asarray(graph.dst),
+                               np.asarray(graph.weight))]
+    for _ in range(steps):
+        if live and rng.random() < 0.45:
+            u, v, w = live.pop(int(rng.integers(len(live))))
+            dyn.apply(deletions=[(u, v, w)])
+        else:
+            u, v = int(rng.integers(n)), int(rng.integers(n))
+            w = float(np.float32(rng.random()))
+            # Duplicate weights on purpose every few ops: the (w, u, v)
+            # strict order must keep the forest unique through ties.
+            if rng.random() < 0.2:
+                w = float(np.float32(round(w * 4) / 4))
+            live.append((u, v, w))
+            dyn.apply(insertions=[(u, v, w)])
+        assert_matches_fresh_solve(dyn)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+def test_dynamic_stream_conformance(family):
+    """All 5 conformance families under a 60-op random interleaving,
+    fresh-solve-checked per op."""
+    graph = FAMILIES[family]()
+    dyn = DynamicMSF(graph)
+    assert_matches_fresh_solve(dyn)
+    _stream(dyn, graph, seed=hash(family) % (2 ** 16), steps=60)
+
+
+def test_dynamic_batched_apply_net_delta():
+    """One apply() call's delta is the NET tree churn: an edge inserted
+    and deleted in the same batch cancels out of added/removed."""
+    g = FAMILIES["random-sparse"]()
+    dyn = DynamicMSF(g)
+    before = dyn.tree_edges()
+    d = dyn.apply(insertions=[(0, 1, 1e-4)], deletions=[(0, 1, 1e-4)])
+    assert isinstance(d, MSTDelta)
+    assert d.added == () and d.removed == () and d.churn == 0
+    assert dyn.tree_edges() == before
+    assert_matches_fresh_solve(dyn)
+
+
+def test_dynamic_duplicate_weight_swap():
+    """Cycle rule under ties: a new edge with the SAME weight as the path
+    maximum swaps iff it wins on the (w, u, v) endpoint tiebreak —
+    strictly-better only, so equal keys never churn."""
+    # Triangle path 0-1-2 at weight .5 each; candidate edges at .5 too.
+    g = Graph(np.array([0, 1], np.int32), np.array([1, 2], np.int32),
+              np.array([0.5, 0.5], np.float32), num_nodes=3)
+    dyn = DynamicMSF(g)
+    # (0.5, 0, 2) < path max (0.5, 1, 2): swap happens.
+    d = dyn.apply(insertions=[(0, 2, 0.5)])
+    assert d.added == (edge_key(0, 2, 0.5),)
+    assert d.removed == (edge_key(1, 2, 0.5),)
+    assert_matches_fresh_solve(dyn)
+    # Re-insert (1, 2, 0.5): now it LOSES the tiebreak — no churn.
+    d = dyn.apply(insertions=[(1, 2, 0.5)])
+    assert d.churn == 0
+    assert_matches_fresh_solve(dyn)
+    # An identical parallel copy of a tree edge never swaps either.
+    d = dyn.apply(insertions=[(0, 2, 0.5)])
+    assert d.churn == 0
+    assert dyn.forest.multiplicity(edge_key(0, 2, 0.5)) == 2
+    assert_matches_fresh_solve(dyn)
+
+
+def test_dynamic_delete_disconnects_component():
+    """Cut with no reconnecting bridge: the component splits, the delta
+    reports the removed tree edge, and the next bridging insert heals."""
+    # Two chains joined by one bridge edge.
+    g = Graph(np.array([0, 1, 3, 1], np.int32),
+              np.array([1, 2, 4, 3], np.int32),
+              np.array([.1, .2, .3, .9], np.float32), num_nodes=5)
+    dyn = DynamicMSF(g)
+    assert dyn.num_components == 1
+    d = dyn.apply(deletions=[(1, 3, 0.9)])
+    assert d.removed == (edge_key(1, 3, 0.9),) and d.added == ()
+    assert dyn.num_components == 2
+    assert_matches_fresh_solve(dyn)
+    # A delete that has a surviving bridge reconnects instead.
+    d = dyn.apply(insertions=[(2, 3, 0.5), (0, 4, 0.6)])
+    assert dyn.num_components == 1
+    assert_matches_fresh_solve(dyn)
+    d = dyn.apply(deletions=[(2, 3, 0.5)])
+    assert d.removed == (edge_key(2, 3, 0.5),)
+    assert d.added == (edge_key(0, 4, 0.6),)
+    assert dyn.num_components == 1
+    assert_matches_fresh_solve(dyn)
+
+
+def test_dynamic_self_loops_and_parallel_edges():
+    """Self-loops are stored but never enter the forest; parallel
+    duplicates keep the tree valid until the LAST copy is deleted."""
+    g = Graph(np.array([0], np.int32), np.array([1], np.int32),
+              np.array([.25], np.float32), num_nodes=3)
+    dyn = DynamicMSF(g)
+    d = dyn.apply(insertions=[(2, 2, 0.01), (0, 1, 0.25)])
+    assert d.churn == 0 and dyn.num_edges == 3
+    assert_matches_fresh_solve(dyn)
+    # Deleting one of two identical copies keeps the tree edge.
+    d = dyn.apply(deletions=[(0, 1, 0.25)])
+    assert d.churn == 0
+    assert edge_key(0, 1, 0.25) in dyn.forest.tree
+    assert_matches_fresh_solve(dyn)
+    d = dyn.apply(deletions=[(0, 1, 0.25)])
+    assert d.removed == (edge_key(0, 1, 0.25),)
+    assert dyn.num_components == 3
+    assert_matches_fresh_solve(dyn)
+    with pytest.raises(KeyError):
+        dyn.apply(deletions=[(0, 1, 0.25)])
+
+
+def test_dynamic_epoch_backstop_resolves():
+    """resolve_every=k: every k ops the full re-solve runs through the
+    planned solver, confirms the incremental forest (zero mismatches) and
+    marks the delta resolved."""
+    g = FAMILIES["random-sparse"]()
+    dyn = DynamicMSF(g, resolve_every=4)
+    rng = np.random.default_rng(9)
+    resolved_flags = []
+    for _ in range(12):
+        u, v = int(rng.integers(48)), int(rng.integers(48))
+        d = dyn.apply(insertions=[(u, v, float(rng.random()))])
+        resolved_flags.append(d.resolved)
+        assert_matches_fresh_solve(dyn)
+    assert dyn.num_resolves == 3
+    assert dyn.num_mismatches == 0
+    assert resolved_flags == [False, False, False, True] * 3
+    # Plan cache: backstop solves at an unchanged pow2 bucket must not
+    # retrace (the edge count grew 12 -> within one pow2 bucket here, so
+    # at most 2 distinct shapes were compiled).
+    assert dyn._solver.stats.traces <= 2
+
+
+def test_dynamic_forest_rejects_bad_input():
+    f = DynamicForest(4)
+    with pytest.raises(ValueError):
+        f.insert_edge(0, 9, 0.5)
+    with pytest.raises(KeyError):
+        f.delete_edge(0, 1, 0.5)
+    with pytest.raises(ValueError):
+        DynamicForest(0)
+
+
+def test_delta_wire_format():
+    d = MSTDelta(added=(edge_key(0, 2, 0.5),),
+                 removed=(edge_key(1, 2, 0.25),),
+                 version=3, num_components=1, total_weight=4.5,
+                 resolved=True)
+    j = d.to_json()
+    assert j["added"] == [[0, 2, 0.5]]
+    assert j["removed"] == [[1, 2, 0.25]]
+    assert j["version"] == 3 and j["resolved"] is True
+    assert d.churn == 2
+
+
+# -- serving integration ----------------------------------------------------
+
+
+def _service_graph(seed=0, n=40, e=100):
+    rng = np.random.default_rng(seed)
+    return Graph(rng.integers(0, n, e).astype(np.int32),
+                 rng.integers(0, n, e).astype(np.int32),
+                 rng.random(e).astype(np.float32), num_nodes=n)
+
+
+def test_service_register_and_update():
+    g = _service_graph()
+    with MSTService(engine="single") as svc:
+        gid = svc.register_dynamic(g)
+        dyn = svc.dynamic(gid)
+        # Registration pre-populates the cache under the canonical hash.
+        r0 = svc.solve(dyn.graph())
+        assert r0.cached
+        d = svc.update(gid, insertions=[(0, 1, 1e-4)])
+        assert d.version == 1 and d.added
+        # The refreshed entry serves the NEW canonical graph...
+        cg = dyn.graph()
+        om, ow, oc = kruskal_numpy(cg.src, cg.dst, cg.weight, cg.num_nodes)
+        r1 = svc.solve(cg)
+        assert r1.cached
+        np.testing.assert_array_equal(np.asarray(r1.mst_mask), om)
+        assert np.isclose(r1.total_weight, ow, rtol=1e-5)
+        assert int(r1.num_components) == oc
+        # ...and parent labels the same component partition.
+        roots = np.asarray(r1.parent)
+        assert roots[0] == roots[1]
+        assert svc.stats.updates == 1
+
+
+def test_service_update_cache_refresh_is_atomic():
+    """S3 regression: the put-new / pop-old / entry-key swing happens as
+    ONE critical section.  Reader threads repeatedly take the cache lock
+    and assert the locked-state invariant — the dynamic entry's current
+    key is always resolvable in the cache — while the main thread
+    streams updates.  Before the fix (key assigned outside the lock)
+    readers observed a stale key whose entry was already popped."""
+    g = _service_graph(seed=3)
+    with MSTService(engine="single", sampling=0.0) as svc:
+        gid = svc.register_dynamic(g)
+        dyn = svc.dynamic(gid)
+        entry = svc._dynamic[gid]
+        old_key = entry["key"]
+        errors: list = []
+        stop = threading.Event()
+
+        def hammer():
+            while not stop.is_set():
+                with svc._cache_lock:
+                    key = entry["key"]
+                    if svc._cache.get(key) is None:
+                        errors.append("entry key points at no cache row")
+
+        threads = [threading.Thread(target=hammer) for _ in range(4)]
+        for t in threads:
+            t.start()
+        try:
+            for i in range(30):
+                svc.update(gid, insertions=[(0, 1, 1e-6 * (i + 1))])
+        finally:
+            stop.set()
+            for t in threads:
+                t.join()
+        assert not errors
+        # The stale entry is gone, the refreshed one is exact.
+        assert entry["key"] != old_key
+        assert svc._cache_get(svc._cache, old_key) is None
+        resp = svc._cache_get(svc._cache, entry["key"])
+        assert resp is not None
+        cg = dyn.graph()
+        om, ow, oc = kruskal_numpy(cg.src, cg.dst, cg.weight, cg.num_nodes)
+        np.testing.assert_array_equal(np.asarray(resp.mst_mask), om)
+        assert np.isclose(resp.total_weight, ow, rtol=1e-5)
+        assert int(resp.num_components) == oc
+
+
+def test_service_update_metrics_and_spans():
+    g = _service_graph(seed=5)
+    with MSTService(engine="single", sampling=1.0) as svc:
+        gid = svc.register_dynamic(g, resolve_every=2)
+        svc.update(gid, insertions=[(1, 2, 1e-5)])
+        svc.update(gid, insertions=[(2, 3, 2e-5)],
+                   deletions=[(1, 2, 1e-5)])
+        snap = svc.stats.registry.to_json()
+        flat = {m["name"]: m for m in snap["metrics"]} \
+            if isinstance(snap, dict) and "metrics" in snap else None
+        text = str(snap)
+        assert "mstserve_update_requests_total" in text
+        assert "mstserve_update_ops_total" in text
+        assert "mstserve_update_latency_us" in text
+        assert svc.stats.updates == 2
+        # The second update crossed resolve_every=2: backstop ran.
+        assert svc.stats.c_update_resolves.value >= 1
+        # Sampled updates land span trees in the flight recorder.
+        roots = [s.name for s in svc.flight.recent()]
+        assert "mst_update" in roots
+        span = [s for s in svc.flight.recent()
+                if s.name == "mst_update"][-1]
+        assert {c.name for c in span.children} == \
+            {"apply", "cache_refresh"}
+
+
+def test_service_update_unknown_graph_id():
+    with MSTService(engine="single") as svc:
+        with pytest.raises(KeyError):
+            svc.update(99, insertions=[(0, 1, 0.5)])
+
+
+def test_service_dynamic_key_tracks_content():
+    """graph_key(dyn.graph()) always equals the entry's stored key."""
+    g = _service_graph(seed=7)
+    with MSTService(engine="single") as svc:
+        gid = svc.register_dynamic(g)
+        dyn = svc.dynamic(gid)
+        assert svc._dynamic[gid]["key"] == graph_key(dyn.graph())
+        svc.update(gid, insertions=[(3, 4, 0.123)])
+        assert svc._dynamic[gid]["key"] == graph_key(dyn.graph())
+        svc.update(gid, deletions=[(3, 4, 0.123)])
+        assert svc._dynamic[gid]["key"] == graph_key(dyn.graph())

@@ -320,3 +320,45 @@ def test_property_csr_roundtrip(n, raw, symmetrize):
         u, v = int(src[e]), int(dst[e])
         want = [(u, v), (v, u)] if symmetrize else [(u, v)]
         assert sorted(got[e]) == sorted(want)
+
+
+@given(st.integers(4, 24), st.integers(0, 10_000), st.data())
+@settings(max_examples=15, deadline=None)
+def test_property_dynamic_stream_matches_fresh_kruskal(n, seed, data):
+    """THE dynamic-layer invariant (DESIGN.md §5a), for ANY generated
+    interleaving of inserts and deletes — duplicate weights, parallel
+    edges, self loops, disconnections included: after every operation the
+    maintained forest's mask/tree/component-count bit-match a fresh
+    Kruskal solve of the mutated graph under the (w, u, v) order."""
+    from repro.dynamic import DynamicMSF
+
+    rng = np.random.default_rng(seed)
+    e0 = int(rng.integers(0, 3 * n))
+    src = rng.integers(0, n, e0).astype(np.int32)
+    dst = rng.integers(0, n, e0).astype(np.int32)
+    # Quantized weights force heavy ties through the endpoint tiebreak.
+    wgt = (rng.integers(0, 5, e0) / 4.0).astype(np.float32)
+    dyn = DynamicMSF(Graph(src, dst, wgt, num_nodes=n))
+    live = [(int(u), int(v), float(w)) for u, v, w in zip(src, dst, wgt)]
+
+    ops = data.draw(st.lists(
+        st.tuples(st.booleans(), st.integers(0, n - 1),
+                  st.integers(0, n - 1), st.integers(0, 4)),
+        min_size=1, max_size=25))
+    for is_delete, u, v, wq in ops:
+        if is_delete and live:
+            idx = (u * 31 + v * 7 + wq) % len(live)
+            du, dv, dw = live.pop(idx)
+            dyn.apply(deletions=[(du, dv, dw)])
+        else:
+            w = float(np.float32(wq / 4.0))
+            live.append((u, v, w))
+            dyn.apply(insertions=[(u, v, w)])
+        g = dyn.graph()
+        om, ow, oc = kruskal_numpy(g.src, g.dst, g.weight, n)
+        np.testing.assert_array_equal(dyn._smask, om)
+        assert dyn.num_components == oc
+        fresh = {(float(g.weight[i]), int(g.src[i]), int(g.dst[i]))
+                 for i in np.flatnonzero(om)}
+        assert fresh == dyn.forest.tree
+        assert np.isclose(dyn.total_weight, ow, rtol=1e-5)

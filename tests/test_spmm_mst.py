@@ -13,7 +13,8 @@ import pytest
 
 from repro.core.engine import candidate_min_edges, rank_edges_host
 from repro.core.mst import minimum_spanning_forest
-from repro.core.spmm_mst import spmm_candidates, spmm_msf
+from repro.core.spmm_mst import (spmm_candidates, spmm_candidates_kernel,
+                                 spmm_msf)
 from repro.core.types import Graph, INT_SENTINEL
 from repro.graphs.csr_device import ell_from_edges_host
 from repro.graphs.generator import generate_graph
@@ -69,6 +70,39 @@ def test_spmm_candidates_dead_lanes_excluded():
     ref = candidate_min_edges(key, cu, cv, 80)
     np.testing.assert_array_equal(np.asarray(spmm_candidates(ell, parent)),
                                   np.asarray(ref))
+
+
+@pytest.mark.parametrize("n,deg,seed", [(60, 4, 0), (37, 2, 2)])
+@pytest.mark.parametrize("width", [None, 4])
+def test_spmm_kernel_candidates_bit_identical(n, deg, seed, width):
+    """The Pallas ``gather_segment_min`` route (PR 8 follow-up): the
+    flattened ELL+overflow slot stream through the kernel must return
+    the exact jnp-path ``best`` vector — empty-slot sentinels, overflow
+    pads and all.  width=4 forces a populated overflow tail; off-TPU the
+    kernel runs in interpret mode, same arithmetic."""
+    g = generate_graph(n, deg, seed=seed)
+    rank, _ = rank_edges_host(g.weight)
+    ell = ell_from_edges_host(g.src, g.dst, rank, n, width=width)
+    for pseed in range(3):
+        parent = (jnp.arange(n, dtype=jnp.int32) if pseed == 0
+                  else _mid_solve_parent(n, pseed))
+        np.testing.assert_array_equal(
+            np.asarray(spmm_candidates_kernel(ell, parent)),
+            np.asarray(spmm_candidates(ell, parent)))
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_spmm_kernel_full_solve_bit_identical(variant):
+    """End-to-end backend gate check: ``kernel=True`` (interpret mode on
+    CPU) solves bit-identically to the jnp path — mask, rounds, waves —
+    in both the static-layout and epoch-loop drivers."""
+    g = generate_graph(90, 4, seed=7)
+    for kw in (dict(), dict(compaction=2)):
+        ref = spmm_msf(g, variant=variant, kernel=False, **kw)
+        got = spmm_msf(g, variant=variant, kernel=True, **kw)
+        assert (np.asarray(got.mst_mask) == np.asarray(ref.mst_mask)).all()
+        assert int(got.num_rounds) == int(ref.num_rounds)
+        assert int(got.num_waves) == int(ref.num_waves)
 
 
 @pytest.mark.parametrize("variant", VARIANTS)
